@@ -1,0 +1,108 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! * degree policy: arbitrary-integer vs power-of-two (FlexSP) vs static;
+//! * the balance-target outer search vs single-target packing;
+//! * group pooling on vs off (creation-cost accounting).
+
+use dhp::baselines::SchedulePolicy;
+use dhp::cluster::CommKind;
+use dhp::config::presets::by_name;
+use dhp::config::TrainStage;
+use dhp::data::batch::GlobalBatch;
+use dhp::data::datasets::DatasetKind;
+use dhp::experiments::harness::{run_policy, ExpContext, PolicySet};
+use dhp::parallel::{GroupKind, GroupPool};
+use dhp::scheduler::DegreePolicy;
+use dhp::util::bench::BenchReport;
+
+fn main() {
+    let ctx = ExpContext::new(
+        by_name("InternVL3-8B").unwrap(),
+        DatasetKind::OpenVid,
+        32,
+        TrainStage::Full,
+    )
+    .with_gbs(128)
+    .with_steps(1, 3);
+
+    // --- Ablation 1: degree policy.
+    println!("=== ablation: degree policy (OpenVid, 8 replicas, GBS 128) ===");
+    let set = PolicySet::build(&ctx);
+    let dhp = run_policy(&ctx, &set.dhp);
+    let flex = dhp::experiments::harness::flexsp(&ctx);
+    let flex_res = run_policy(&ctx, &flex);
+    let mega = run_policy(&ctx, &set.megatron);
+    println!(
+        "  any-integer {:.3}s | pow2-only {:.3}s | static {:.3}s  \
+         (relaxation gain over pow2: {:.2}%)",
+        dhp.mean_iter_s,
+        flex_res.mean_iter_s,
+        mega.mean_iter_s,
+        (flex_res.mean_iter_s / dhp.mean_iter_s - 1.0) * 100.0
+    );
+
+    // --- Ablation 2: balance-target outer search.
+    println!("=== ablation: outer search over group-count targets ===");
+    let sch = ctx.dhp();
+    let mut sampler = ctx.sampler();
+    let batch = GlobalBatch {
+        step: 0,
+        sequences: sampler.sample_batch(128),
+    };
+    let mbs = ctx.micro_batch_planner().plan(&batch);
+    let sim = ctx.sim();
+    let mut t_full = 0.0;
+    let mut t_single = 0.0;
+    for mb in &mbs {
+        let full = sch.schedule(&mb.sequences);
+        let single = sch.schedule_with_target(&mb.sequences, ctx.replicas());
+        t_full += sim
+            .execute_schedule(&mb.sequences, &full, CommKind::RingCp)
+            .iter()
+            .map(|w| w.makespan_s)
+            .sum::<f64>();
+        t_single += sim
+            .execute_schedule(&mb.sequences, &single, CommKind::RingCp)
+            .iter()
+            .map(|w| w.makespan_s)
+            .sum::<f64>();
+    }
+    println!(
+        "  outer search {:.3}s vs single-target {:.3}s (gain {:.2}%)",
+        t_full,
+        t_single,
+        (t_single / t_full - 1.0) * 100.0
+    );
+
+    // --- Ablation 3: group pool reuse.
+    println!("=== ablation: communication-group pooling ===");
+    let mut pool = GroupPool::new();
+    let mut created_without_pool = 0u64;
+    for mb in &mbs {
+        let s = sch.schedule(&mb.sequences);
+        for plan in &s.waves {
+            let degrees: Vec<usize> = plan.groups.iter().map(|g| g.degree).collect();
+            for ranks in ctx.mesh().allocate(&degrees) {
+                pool.acquire(GroupKind::ContextParallel, ranks);
+                created_without_pool += 1;
+            }
+        }
+    }
+    let stats = pool.stats();
+    println!(
+        "  groups requested {created_without_pool}, unique created {}, \
+         hit-rate {:.1}%, creation time saved {:.1} ms",
+        stats.misses,
+        stats.hit_rate() * 100.0,
+        (created_without_pool - stats.misses) as f64
+            * dhp::parallel::group::GROUP_CREATE_COST_S
+            * 1e3
+    );
+
+    // --- Timings.
+    let mut report = BenchReport::new("ablations");
+    report.bench("policy_set_tuning", 0, 3, || {
+        std::hint::black_box(PolicySet::build(&ctx));
+    });
+    report.finish();
+}

@@ -1,0 +1,19 @@
+//! Bench: regenerate Fig. 1 (dataset duration distributions) and time the
+//! generators.
+
+use dhp::experiments::distributions;
+use dhp::util::bench::BenchReport;
+use dhp::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"))
+        .expect("args");
+    println!("=== fig1: dataset distributions ===");
+    distributions::run(&args).expect("fig1");
+
+    let mut report = BenchReport::new("fig1");
+    report.bench("sample_10k_per_dataset", 1, 5, || {
+        std::hint::black_box(distributions::compute(10_000, 1));
+    });
+    report.finish();
+}

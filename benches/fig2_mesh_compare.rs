@@ -1,0 +1,19 @@
+//! Bench: regenerate Fig. 2 (static vs dynamic mesh) and time one full
+//! schedule+simulate round trip.
+
+use dhp::experiments::mesh_compare;
+use dhp::util::bench::BenchReport;
+use dhp::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"))
+        .expect("args");
+    println!("=== fig2: static vs dynamic mesh ===");
+    mesh_compare::run(&args).expect("fig2");
+
+    let mut report = BenchReport::new("fig2");
+    report.bench("schedule_and_simulate_24seq_32npu", 1, 10, || {
+        std::hint::black_box(mesh_compare::compute(32, 24, 7));
+    });
+    report.finish();
+}

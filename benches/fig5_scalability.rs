@@ -1,0 +1,21 @@
+//! Bench: regenerate Fig. 5 (throughput scaling over 8→64 NPUs) and time
+//! the sweep.
+
+use dhp::experiments::scalability;
+use dhp::util::bench::BenchReport;
+use dhp::util::cli::Args;
+
+fn main() {
+    let mut args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"))
+        .expect("args");
+    args.options.entry("warmup".into()).or_insert("1".into());
+    args.options.entry("measure".into()).or_insert("3".into());
+    println!("=== fig5: scalability ===");
+    scalability::run(&args).expect("fig5");
+
+    let mut report = BenchReport::new("fig5");
+    report.bench("npus_sweep_8_to_64", 0, 3, || {
+        std::hint::black_box(scalability::compute(&[8, 16, 32, 64], 128, 0, 2, 5));
+    });
+    report.finish();
+}

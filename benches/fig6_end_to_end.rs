@@ -1,0 +1,22 @@
+//! Bench: regenerate Fig. 6 (end-to-end iteration times, all 18 configs)
+//! and time one configuration's full protocol.
+
+use dhp::config::TrainStage;
+use dhp::experiments::end_to_end;
+use dhp::util::bench::BenchReport;
+use dhp::util::cli::Args;
+
+fn main() {
+    let mut args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"))
+        .expect("args");
+    args.options.entry("warmup".into()).or_insert("1".into());
+    args.options.entry("measure".into()).or_insert("3".into());
+    println!("=== fig6: end-to-end training ===");
+    end_to_end::run(&args, TrainStage::Full).expect("fig6");
+
+    let mut report = BenchReport::new("fig6");
+    report.bench("one_config_protocol_full", 0, 3, || {
+        std::hint::black_box(end_to_end::compute(TrainStage::Full, 32, 128, 0, 2, 7));
+    });
+    report.finish();
+}

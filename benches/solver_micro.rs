@@ -1,0 +1,56 @@
+//! Micro-benchmarks of the scheduler hot path (the §Perf targets): BFD
+//! packing, 2D-DP allocation, and the full schedule() pipeline at the
+//! paper's scales.
+
+use dhp::config::presets::by_name;
+use dhp::config::TrainStage;
+use dhp::data::datasets::DatasetKind;
+use dhp::experiments::harness::ExpContext;
+use dhp::scheduler::packing;
+use dhp::util::bench::BenchReport;
+
+fn main() {
+    let mut report = BenchReport::new("solver_micro");
+    for (npus, gbs) in [(16usize, 512usize), (32, 512), (64, 512), (64, 128)] {
+        let ctx = ExpContext::new(
+            by_name("InternVL3-8B").unwrap(),
+            DatasetKind::OpenVid,
+            npus,
+            TrainStage::Full,
+        );
+        let mut sampler = ctx.sampler();
+        let seqs = sampler.sample_batch(gbs);
+        let sch = ctx.dhp();
+        let memory = ctx.memory();
+        let n = ctx.replicas();
+
+        report.bench(&format!("pack_gbs{gbs}_n{n}"), 2, 20, || {
+            std::hint::black_box(packing::pack(&seqs, &memory, n));
+        });
+        report.bench(&format!("schedule_gbs{gbs}_npus{npus}"), 2, 10, || {
+            std::hint::black_box(sch.schedule(&seqs));
+        });
+    }
+
+    // Pure DP at K'=64 groups / N=64 ranks (the O(K'N²) core).
+    let ctx = ExpContext::new(
+        by_name("InternVL3-8B").unwrap(),
+        DatasetKind::OpenVid,
+        64,
+        TrainStage::Full,
+    );
+    let mut sampler = ctx.sampler();
+    let seqs = sampler.sample_batch(512);
+    let groups = packing::pack_with_target(&seqs, &ctx.memory(), 16, 64);
+    let wave = packing::waves(groups, 16).into_iter().next().unwrap();
+    let cost = ctx.cost_model();
+    report.bench(&format!("dp_allocate_k{}_n16", wave.len()), 2, 50, || {
+        std::hint::black_box(dhp::scheduler::dp::allocate_degrees(
+            &wave,
+            16,
+            |i, d| cost.t_total(&wave[i].agg, d, 12.5e9),
+            dhp::scheduler::any_degree,
+        ));
+    });
+    report.finish();
+}

@@ -1,0 +1,23 @@
+//! Bench: regenerate Table 1 (compute vs schedule vs solver time over
+//! GBS) and micro-time the solver at each GBS.
+
+use dhp::experiments::overhead;
+use dhp::util::bench::BenchReport;
+use dhp::util::cli::Args;
+
+fn main() {
+    let mut args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"))
+        .expect("args");
+    args.options.entry("warmup".into()).or_insert("1".into());
+    args.options.entry("measure".into()).or_insert("3".into());
+    println!("=== tab1: overhead vs GBS ===");
+    overhead::run_gbs(&args).expect("tab1");
+
+    let mut report = BenchReport::new("tab1");
+    for gbs in [128usize, 256, 512] {
+        report.bench(&format!("protocol_gbs{gbs}_npus64"), 0, 3, || {
+            std::hint::black_box(overhead::compute_row(gbs, 64, 0, 2, 11));
+        });
+    }
+    report.finish();
+}

@@ -1,0 +1,23 @@
+//! Bench: regenerate Table 2 (compute vs schedule vs solver time over NPU
+//! count) and micro-time the protocol at each scale.
+
+use dhp::experiments::overhead;
+use dhp::util::bench::BenchReport;
+use dhp::util::cli::Args;
+
+fn main() {
+    let mut args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"))
+        .expect("args");
+    args.options.entry("warmup".into()).or_insert("1".into());
+    args.options.entry("measure".into()).or_insert("3".into());
+    println!("=== tab2: overhead vs NPU count ===");
+    overhead::run_npus(&args).expect("tab2");
+
+    let mut report = BenchReport::new("tab2");
+    for npus in [16usize, 32, 64] {
+        report.bench(&format!("protocol_npus{npus}_gbs512"), 0, 3, || {
+            std::hint::black_box(overhead::compute_row(512, npus, 0, 2, 13));
+        });
+    }
+    report.finish();
+}

@@ -1,0 +1,38 @@
+//! Bench: regenerate Table 3 (cost-estimator error per model/scale); if
+//! AOT artifacts are present, also fit the cost model from REAL PJRT-CPU
+//! executions of the lowered model and report the fit quality.
+
+use dhp::experiments::estimator;
+use dhp::util::bench::BenchReport;
+use dhp::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"))
+        .expect("args");
+    println!("=== tab3: estimator error ===");
+    estimator::run(&args).expect("tab3");
+
+    // Real-runtime calibration path (DESIGN.md §2): needs `make artifacts`.
+    let artifacts = std::path::Path::new("artifacts");
+    if artifacts.join("manifest.json").exists() {
+        match estimator::fit_from_runtime(artifacts, 3) {
+            Ok((coeffs, fit)) => {
+                println!(
+                    "real-PJRT profiler fit: alpha1={:.3e} alpha2={:.3e} \
+                     beta1={:.3e}  (MAPE {:.2}%, R2 {:.4}, n={})",
+                    coeffs.alpha1, coeffs.alpha2, coeffs.beta1, fit.mape,
+                    fit.r_squared, fit.n
+                );
+            }
+            Err(e) => println!("real-PJRT profiling skipped: {e}"),
+        }
+    } else {
+        println!("artifacts/ missing — run `make artifacts` for the real-PJRT fit");
+    }
+
+    let mut report = BenchReport::new("tab3");
+    report.bench("calibrate_and_evaluate_6_presets", 0, 3, || {
+        std::hint::black_box(estimator::compute(11));
+    });
+    report.finish();
+}

@@ -1,0 +1,26 @@
+//! Bench: regenerate Table 4 (per-micro-batch CP-group case study) and
+//! time a full case computation.
+
+use dhp::data::datasets::DatasetKind;
+use dhp::experiments::case_study;
+use dhp::util::bench::BenchReport;
+use dhp::util::cli::Args;
+
+fn main() {
+    let mut args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"))
+        .expect("args");
+    args.options.entry("gbs".into()).or_insert("128".into());
+    println!("=== tab4: case study ===");
+    case_study::run(&args).expect("tab4");
+
+    let mut report = BenchReport::new("tab4");
+    report.bench("case_openvid_gbs128", 0, 5, || {
+        std::hint::black_box(case_study::compute_case(
+            DatasetKind::OpenVid,
+            32,
+            128,
+            21,
+        ));
+    });
+    report.finish();
+}

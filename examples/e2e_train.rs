@@ -1,0 +1,83 @@
+//! END-TO-END VALIDATION DRIVER (DESIGN.md §5): train the real
+//! ~100M-parameter JAX MLLM through the full three-layer stack —
+//!
+//!   L1 Pallas flash-attention kernel (inside the AOT HLO)
+//!   L2 JAX model, lowered once to HLO text by `make artifacts`
+//!   L3 this Rust coordinator: PJRT execution, Adam, and the DHP
+//!      scheduler planning each batch asynchronously on a simulated
+//!      cluster while the real gradients compute
+//!
+//! ```bash
+//! make artifacts   # once
+//! cargo run --release --example e2e_train -- [--steps 220] [--lr 0.001]
+//! ```
+//!
+//! The loss curve lands in e2e_loss.csv and EXPERIMENTS.md §E2E.
+
+use std::path::PathBuf;
+
+use dhp::train::{run, AdamConfig, TrainerConfig};
+use dhp::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    dhp::util::logger::init();
+    let args = Args::parse(std::env::args().skip(1))?;
+    let cfg = TrainerConfig {
+        artifacts_dir: PathBuf::from(args.str_or("artifacts", "artifacts")),
+        artifact: "e2e_grad.hlo.txt".into(),
+        params_file: "e2e_params.f32".into(),
+        steps: args.usize_or("steps", 220)?,
+        adam: AdamConfig {
+            lr: args.f64_or("lr", 1e-3)? as f32,
+            ..Default::default()
+        },
+        seed: args.u64_or("seed", 0xE2E)?,
+        log_path: Some(PathBuf::from(args.str_or("log", "e2e_loss.csv"))),
+        sim_npus: args.usize_or("sim-npus", 8)?,
+    };
+    let report = run(&cfg)?;
+
+    println!("\n=== end-to-end validation ===");
+    println!(
+        "model: {} parameters, {} steps, {:.1}s wall",
+        report.param_count,
+        report.records.len(),
+        report.total_time_s
+    );
+    println!(
+        "loss: {:.4} -> {:.4} (tail-10 mean {:.4}; random-init baseline ln(8192)={:.3})",
+        report.first_loss(),
+        report.last_loss(),
+        report.tail_mean_loss(10),
+        (8192f32).ln()
+    );
+    let hidden = report
+        .records
+        .iter()
+        .filter(|r| r.schedule_latency_s < r.step_time_s)
+        .count();
+    println!(
+        "DHP scheduling hidden behind compute in {hidden}/{} steps \
+         (mean latency {:.2} ms vs mean step {:.2} s)",
+        report.records.len(),
+        report
+            .records
+            .iter()
+            .map(|r| r.schedule_latency_s)
+            .sum::<f64>()
+            / report.records.len() as f64
+            * 1e3,
+        report
+            .records
+            .iter()
+            .map(|r| r.step_time_s)
+            .sum::<f64>()
+            / report.records.len() as f64,
+    );
+    anyhow::ensure!(
+        report.tail_mean_loss(10) < report.first_loss() - 1.0,
+        "loss did not improve — e2e validation FAILED"
+    );
+    println!("e2e validation PASSED: loss decreased by > 1 nat");
+    Ok(())
+}

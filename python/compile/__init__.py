@@ -1,0 +1,6 @@
+"""Build-time compile package: L2 JAX model + L1 Pallas kernels + AOT export.
+
+Nothing in this package runs on the training request path — `aot.py` lowers
+everything to HLO text once (`make artifacts`) and the Rust coordinator
+executes the artifacts via PJRT.
+"""

@@ -1,0 +1,193 @@
+"""AOT export: lower the L2 model (with L1 Pallas kernels) to HLO text.
+
+HLO *text* — never `lowered.compiler_ir(...).serialize()` — is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids, which the xla_extension 0.5.1 the Rust `xla` crate links against
+rejects (`proto.id() <= INT_MAX`). The text parser reassigns ids, so text
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts produced (under --out-dir, default ../artifacts):
+
+  model.hlo.txt              tiny grad_step       (Rust integration tests)
+  tiny_fwd.hlo.txt           tiny fwd_loss        (Rust integration tests)
+  tiny_params.f32            tiny init flat params (raw little-endian f32)
+  prof_fwd_L{L}.hlo.txt      profile-model fwd_loss at seq buckets
+                             (the Rust Profiler times these to fit Eq. 8/9
+                             coefficients against REAL executions)
+  prof_grad_L{L}.hlo.txt     profile-model grad_step at seq buckets
+  e2e_grad.hlo.txt           ~100M-param grad_step (end-to-end training)
+  e2e_params.f32             ~100M init flat params
+  manifest.json              shapes/sizes/configs for every artifact
+
+Run via `make artifacts` (no-op when inputs are unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# (Lv, Lt) per total-length bucket: vision tokens are 1/4 of the context,
+# mirroring interleaved video-text batches.
+def bucket_shape(L: int) -> tuple[int, int]:
+    Lv = L // 4
+    return Lv, L - Lv
+
+
+PROFILE_BUCKETS = [128, 256, 384, 512, 768]
+E2E_BUCKET = 256
+E2E_BATCH = 2
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fn(fn, *specs) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def specs_for(cfg: M.ModelCfg, P: int, B: int, Lv: int, Lt: int):
+    return (
+        jax.ShapeDtypeStruct((P,), jnp.float32),
+        jax.ShapeDtypeStruct((B, Lv, cfg.patch_dim), jnp.float32),
+        jax.ShapeDtypeStruct((B, Lt), jnp.int32),
+        jax.ShapeDtypeStruct((B, Lt), jnp.int32),
+    )
+
+
+def write(path: str, text: str, manifest: dict, entry: dict):
+    with open(path, "w") as f:
+        f.write(text)
+    entry["bytes"] = len(text)
+    manifest["artifacts"][os.path.basename(path)] = entry
+    print(f"  wrote {path} ({len(text) / 1e6:.2f} MB)")
+
+
+def export_model(
+    name: str,
+    cfg: M.ModelCfg,
+    out_dir: str,
+    manifest: dict,
+    *,
+    B: int,
+    L: int,
+    grad: bool,
+    fwd: bool,
+    params_bin: bool,
+    freeze_vision: bool = False,
+    seed: int = 0,
+):
+    Lv, Lt = bucket_shape(L)
+    flat0, fwd_loss, grad_step = M.make_flat_fns(
+        cfg, jax.random.PRNGKey(seed), freeze_vision=freeze_vision
+    )
+    P = flat0.shape[0]
+    meta = {
+        "config": cfg.to_dict(),
+        "param_count": P,
+        "batch": B,
+        "seq_total": L,
+        "seq_vision": Lv,
+        "seq_text": Lt,
+        "freeze_vision": freeze_vision,
+        "inputs": [
+            {"name": "flat_params", "dtype": "f32", "shape": [P]},
+            {"name": "vis", "dtype": "f32", "shape": [B, Lv, cfg.patch_dim]},
+            {"name": "tok", "dtype": "i32", "shape": [B, Lt]},
+            {"name": "tgt", "dtype": "i32", "shape": [B, Lt]},
+        ],
+    }
+    sp = specs_for(cfg, P, B, Lv, Lt)
+    if grad:
+        write(
+            os.path.join(out_dir, f"{name}.hlo.txt"),
+            lower_fn(grad_step, *sp),
+            manifest,
+            {**meta, "kind": "grad_step", "outputs": ["loss f32[]", f"grads f32[{P}]"]},
+        )
+    if fwd:
+        fname = f"{name}_fwd.hlo.txt" if grad else f"{name}.hlo.txt"
+        write(
+            os.path.join(out_dir, fname),
+            lower_fn(fwd_loss, *sp),
+            manifest,
+            {**meta, "kind": "fwd_loss", "outputs": ["loss f32[]"]},
+        )
+    if params_bin:
+        import numpy as np
+
+        pfile = os.path.join(out_dir, f"{name.split('_')[0]}_params.f32")
+        np.asarray(flat0, dtype="<f4").tofile(pfile)
+        manifest["artifacts"][os.path.basename(pfile)] = {
+            "kind": "params",
+            "param_count": P,
+            "bytes": P * 4,
+        }
+        print(f"  wrote {pfile} ({P * 4 / 1e6:.2f} MB, {P} params)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None, help="single-artifact compat path")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--skip-e2e",
+        action="store_true",
+        help="skip the ~100M e2e artifact (slow to lower)",
+    )
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    if args.out:  # Makefile passes --out artifacts/model.hlo.txt
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: dict = {"artifacts": {}}
+
+    print("[aot] tiny model (tests)")
+    export_model(
+        "model", M.TINY, out_dir, manifest, B=2, L=64, grad=True, fwd=False,
+        params_bin=False,
+    )
+    export_model(
+        "tiny", M.TINY, out_dir, manifest, B=2, L=64, grad=False, fwd=True,
+        params_bin=True,
+    )
+
+    print("[aot] profile model (cost-model calibration)")
+    for L in PROFILE_BUCKETS:
+        export_model(
+            f"prof_fwd_L{L}", M.PROFILE, out_dir, manifest, B=1, L=L,
+            grad=False, fwd=True, params_bin=(L == PROFILE_BUCKETS[0]),
+        )
+        export_model(
+            f"prof_grad_L{L}", M.PROFILE, out_dir, manifest, B=1, L=L,
+            grad=True, fwd=False, params_bin=False,
+        )
+
+    if not args.skip_e2e:
+        print("[aot] e2e ~100M model")
+        export_model(
+            "e2e_grad", M.E2E_100M, out_dir, manifest, B=E2E_BATCH,
+            L=E2E_BUCKET, grad=True, fwd=False, params_bin=True,
+        )
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] manifest: {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

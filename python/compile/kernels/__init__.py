@@ -1,0 +1,72 @@
+"""L1 Pallas kernels for the DHP MLLM stack.
+
+`attention` is the differentiable entry point the L2 model uses: Pallas
+flash-attention forward (interpret=True) with a custom VJP whose backward
+pass is the standard recompute formulation — pallas_call has no generic
+autodiff rule, and the recompute backward keeps the AOT HLO self-contained.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (
+    flash_attention,
+    ring_attention_finalize,
+    ring_attention_step,
+)
+from .ref import attention_ref, chunked_attention_ref, mask_efficiency
+
+NEG_INF = -1e30
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def attention(q, k, v, causal: bool = True):
+    """Differentiable flash attention (Pallas fwd, recompute bwd)."""
+    return flash_attention(q, k, v, causal=causal)
+
+
+def _attention_fwd(q, k, v, causal):
+    out = flash_attention(q, k, v, causal=causal)
+    return out, (q, k, v)
+
+
+def _attention_bwd(causal, res, g):
+    """Standard attention backward via recomputed probabilities.
+
+    O(L^2) memory, which is fine at AOT bucket sizes; on real TPU this
+    would be the blocked flash backward, but numerics are identical.
+    """
+    q, k, v = res
+    L, D = q.shape[-2], q.shape[-1]
+    scale = 1.0 / (D**0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((L, L), dtype=bool))
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    gf = g.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    dv = jnp.einsum("bhqk,bhqd->bhkd", p, gf)
+    dp = jnp.einsum("bhqd,bhkd->bhqk", gf, vf)
+    # softmax backward: dlogits = p * (dp - sum_k p*dp)
+    dlogits = p * (dp - (p * dp).sum(axis=-1, keepdims=True))
+    dq = jnp.einsum("bhqk,bhkd->bhqd", dlogits, k.astype(jnp.float32)) * scale
+    dk = jnp.einsum("bhqk,bhqd->bhkd", dlogits, q.astype(jnp.float32)) * scale
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+attention.defvjp(_attention_fwd, _attention_bwd)
+
+__all__ = [
+    "attention",
+    "flash_attention",
+    "attention_ref",
+    "chunked_attention_ref",
+    "mask_efficiency",
+    "ring_attention_step",
+    "ring_attention_finalize",
+]

@@ -1,0 +1,200 @@
+"""L1 Pallas kernel: blocked flash attention for the DHP MLLM stack.
+
+This is the compute hot-spot of the paper's workload (Eq. 8): softmax
+attention over heterogeneous-length sequences, with either a causal mask
+(language model, eta=0) or a full mask (vision encoder, eta=1).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the CUDA flash-attention
+schedule (threadblock tiles staged through shared memory) is re-expressed as
+a Pallas grid over (batch*heads, q-blocks) with BlockSpecs staging
+q/k/v tiles through VMEM; the two matmuls per kv-step are MXU-shaped
+(block_q x head_dim @ head_dim x block_k, f32 accumulation). The online
+softmax running state (m, l, acc) lives in VMEM scratch for the duration of
+one q-block's kv sweep.
+
+Always invoked with interpret=True in this repo: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers to plain HLO so the
+kernel participates in the same AOT HLO-text artifact the Rust runtime loads.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+# Default tile sizes. 128 is the MXU systolic-array edge; on real TPU these
+# keep both matmuls MXU-shaped and the per-step VMEM footprint
+# ~(2*Bk*D + Bq*D + Bq*Bk)*4B, far under the ~16 MiB VMEM budget for D<=256.
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _attn_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    *,
+    causal: bool,
+    scale: float,
+    block_q: int,
+    block_k: int,
+    seq_len: int,
+):
+    """One (batch*head, q-block) grid step: sweep all kv blocks online.
+
+    Refs are VMEM tiles selected by the BlockSpecs:
+      q_ref: [block_q, D]   (this q tile)
+      k_ref: [L, D]         (full K for this head; sliced per kv step)
+      v_ref: [L, D]
+      o_ref: [block_q, D]
+    """
+    qi = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32) * scale
+
+    m = jnp.full((block_q, 1), NEG_INF, dtype=jnp.float32)
+    l = jnp.zeros((block_q, 1), dtype=jnp.float32)
+    acc = jnp.zeros(q.shape, dtype=jnp.float32)
+
+    num_kv = seq_len // block_k
+    # A python-level loop over kv blocks: unrolls at trace time, which is
+    # what pallas interpret mode wants (grid is the outer loop). On real TPU
+    # the causal path would bound this sweep at the diagonal (the eta=0
+    # half-cost schedule); qi is a traced scalar here, so blocks above the
+    # diagonal are where-masked instead — numerics are identical.
+    for kj in range(num_kv):
+        k_blk = k_ref[pl.dslice(kj * block_k, block_k), :].astype(jnp.float32)
+        v_blk = v_ref[pl.dslice(kj * block_k, block_k), :].astype(jnp.float32)
+        logits = q @ k_blk.T  # [block_q, block_k] — MXU-shaped
+        if causal:
+            q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q)
+            k_pos = kj * block_k + jax.lax.iota(jnp.int32, block_k)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            logits = jnp.where(mask, logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1, keepdims=True))
+        p = jnp.exp(logits - m_new)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(axis=-1, keepdims=True)
+        acc = acc * alpha + p @ v_blk  # second MXU matmul
+        m = m_new
+
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> jax.Array:
+    """Blocked flash attention via Pallas.
+
+    Args:
+      q, k, v: [batch, heads, seq, head_dim]. seq must be a multiple of the
+        block sizes (the L2 model pads sequences to bucket boundaries, which
+        is also what the DHP micro-batch planner produces).
+      causal: LM path if True, vision-encoder full-attention path if False.
+      block_q / block_k: VMEM tile sizes (MXU-aligned by default).
+      interpret: must stay True for CPU PJRT execution (see module docstring).
+
+    Returns:
+      [batch, heads, seq, head_dim] attention output, dtype of q.
+    """
+    B, H, L, D = q.shape
+    # Fit tile sizes to the sequence: the largest divisor of L not
+    # exceeding the requested block (on real TPU the buckets are chosen
+    # 128-aligned so this is the identity; interpret mode tolerates any).
+    def fit(block: int) -> int:
+        block = min(block, L)
+        while L % block:
+            block -= 1
+        return max(block, 1)
+
+    block_q = fit(block_q)
+    block_k = fit(block_k)
+    scale = 1.0 / (D**0.5)
+
+    qf = q.reshape(B * H, L, D)
+    kf = k.reshape(B * H, L, D)
+    vf = v.reshape(B * H, L, D)
+
+    kernel = functools.partial(
+        _attn_kernel,
+        causal=causal,
+        scale=scale,
+        block_q=block_q,
+        block_k=block_k,
+        seq_len=L,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, L // block_q),
+        in_specs=[
+            pl.BlockSpec((None, block_q, D), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, L, D), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, L, D), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, D), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, L, D), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, L, D)
+
+
+def ring_attention_step(
+    q: jax.Array,
+    k_chunk: jax.Array,
+    v_chunk: jax.Array,
+    m: jax.Array,
+    l: jax.Array,
+    acc: jax.Array,
+    *,
+    chunk_start: int,
+    causal: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One ring-CP step: fold a remote KV chunk into the running state.
+
+    This is the per-hop computation each rank of a CP group performs when
+    the ring rotates a KV chunk past it (paper §3.2 / Eq. 10's overlapped
+    term). State layout matches `chunked_attention_ref`:
+      m, l: [B, H, Lq, 1] running max / normalizer (f32)
+      acc:  [B, H, Lq, D] unnormalized output accumulator (f32)
+
+    Returns the updated (m, l, acc).
+    """
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    logits = (
+        jnp.einsum("bhqd,bhkd->bhqk", q, k_chunk).astype(jnp.float32) * scale
+    )
+    if causal:
+        Lq, C = q.shape[-2], k_chunk.shape[-2]
+        q_pos = jnp.arange(Lq)
+        k_pos = chunk_start + jnp.arange(C)
+        mask = q_pos[:, None] >= k_pos[None, :]
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+    m_new = jnp.maximum(m, logits.max(axis=-1, keepdims=True))
+    p = jnp.exp(logits - m_new)
+    alpha = jnp.exp(m - m_new)
+    l_new = l * alpha + p.sum(axis=-1, keepdims=True)
+    acc_new = acc * alpha + jnp.einsum(
+        "bhqk,bhkd->bhqd", p, v_chunk.astype(jnp.float32)
+    )
+    return m_new, l_new, acc_new
+
+
+def ring_attention_finalize(m, l, acc, dtype=jnp.float32):
+    """Normalize the accumulated ring state into the attention output."""
+    del m
+    return (acc / jnp.maximum(l, 1e-30)).astype(dtype)

@@ -1,0 +1,104 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match the corresponding function here to float tolerance (pytest +
+hypothesis sweeps in python/tests/). They are deliberately naive — O(L^2)
+materialized attention — so there is no shared machinery with the kernels.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+) -> jax.Array:
+    """Naive softmax attention.
+
+    Args:
+      q, k, v: [batch, heads, seq, head_dim] arrays.
+      causal: if True apply a lower-triangular mask (LM path, eta=0);
+        if False use a full attention mask (vision-encoder path, eta=1).
+      scale: optional override of the 1/sqrt(d) scaling.
+
+    Returns:
+      [batch, heads, seq, head_dim] attention output.
+    """
+    *_, L, D = q.shape
+    if scale is None:
+        scale = 1.0 / (D**0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((L, L), dtype=bool))
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(v.dtype), v)
+
+
+def chunked_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    num_chunks: int,
+    causal: bool = True,
+) -> jax.Array:
+    """Ring/context-parallel attention reference.
+
+    Computes the same result as `attention_ref` but with the KV sequence
+    split into `num_chunks` contiguous chunks, merged with the online-softmax
+    (m, l, acc) running state — the exact computation a CP group of degree
+    `num_chunks` performs, one chunk per ring step. Proves that arbitrary
+    integer CP degrees (non-power-of-two included) are numerically exact.
+    """
+    B, H, L, D = q.shape
+    assert L % num_chunks == 0, "ref requires equal chunks"
+    C = L // num_chunks
+    scale = 1.0 / (D**0.5)
+
+    m = jnp.full((B, H, L, 1), NEG_INF, dtype=jnp.float32)
+    l = jnp.zeros((B, H, L, 1), dtype=jnp.float32)
+    acc = jnp.zeros((B, H, L, D), dtype=jnp.float32)
+
+    q_pos = jnp.arange(L)
+    for c in range(num_chunks):
+        k_c = k[:, :, c * C : (c + 1) * C]
+        v_c = v[:, :, c * C : (c + 1) * C]
+        logits = jnp.einsum("bhqd,bhkd->bhqk", q, k_c).astype(jnp.float32) * scale
+        if causal:
+            k_pos = jnp.arange(c * C, (c + 1) * C)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            logits = jnp.where(mask[None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1, keepdims=True))
+        # Rows with no visible keys in this chunk keep m at NEG_INF and
+        # contribute zero weight.
+        p = jnp.exp(logits - m_new)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum(
+            "bhqk,bhkd->bhqd", p, v_c.astype(jnp.float32)
+        )
+        m = m_new
+
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.astype(q.dtype)
+
+
+def mask_efficiency(causal: bool) -> float:
+    """The paper's eta_k mask-efficiency factor (Eq. 8).
+
+    Causal attention touches L^2/2 of the score matrix; full attention
+    touches all L^2 entries — i.e. cost proportional to (1 + eta) with
+    eta=0 for causal and eta=1 for full, matching 'full attention ...
+    requires twice the computational effort' (paper §1).
+    """
+    return 1.0 if not causal else 0.0

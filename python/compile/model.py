@@ -1,0 +1,245 @@
+"""L2: the JAX MLLM compute graph (forward / backward), calling L1 kernels.
+
+Model shape follows the paper's abstraction (§3.1): a vision encoder with
+FULL attention (eta=1) -> a connector MLP -> a causal language model (eta=0),
+trained with next-token cross-entropy on the text region.
+
+Parameters are exposed to the Rust coordinator as ONE flat f32 vector
+(jax.flatten_util.ravel_pytree): `grad_step(flat, vis, tok, tgt)` returns
+`(loss, flat_grads)`, so Layer 3 owns the optimizer (Adam in Rust) and the
+PJRT artifact has a fixed, trivially-marshalled signature.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from .kernels import attention
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    """MLLM architecture configuration (cf. paper Table 5, scaled down)."""
+
+    vocab: int = 8192
+    hidden: int = 768  # LM hidden dim
+    layers: int = 12  # LM transformer blocks
+    heads: int = 12
+    vision_hidden: int = 384
+    vision_layers: int = 4
+    vision_heads: int = 6
+    patch_dim: int = 256  # raw patch feature dim fed to the vision encoder
+    mlp_ratio: int = 4
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.heads
+
+    @property
+    def vision_head_dim(self) -> int:
+        return self.vision_hidden // self.vision_heads
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+# ~98M parameters: the end-to-end validation model (EXPERIMENTS.md §E2E).
+E2E_100M = ModelCfg()
+
+# Small config for fast pytest / Rust integration-test artifacts.
+TINY = ModelCfg(
+    vocab=512,
+    hidden=64,
+    layers=2,
+    heads=4,
+    vision_hidden=32,
+    vision_layers=1,
+    vision_heads=2,
+    patch_dim=16,
+)
+
+# Mid-size config used by the Rust Profiler to fit cost-model coefficients.
+PROFILE = ModelCfg(
+    vocab=2048,
+    hidden=256,
+    layers=4,
+    heads=8,
+    vision_hidden=128,
+    vision_layers=2,
+    vision_heads=4,
+    patch_dim=64,
+)
+
+PRESETS = {"tiny": TINY, "profile": PROFILE, "e2e_100m": E2E_100M}
+
+
+def _dense_init(key, shape, scale=None):
+    if scale is None:
+        scale = 1.0 / (shape[0] ** 0.5)
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+def _block_params(key, hidden: int, mlp_ratio: int):
+    k = jax.random.split(key, 6)
+    return {
+        "ln1_g": jnp.ones((hidden,), jnp.float32),
+        "ln1_b": jnp.zeros((hidden,), jnp.float32),
+        "wqkv": _dense_init(k[0], (hidden, 3 * hidden)),
+        "wo": _dense_init(k[1], (hidden, hidden)),
+        "ln2_g": jnp.ones((hidden,), jnp.float32),
+        "ln2_b": jnp.zeros((hidden,), jnp.float32),
+        "w_up": _dense_init(k[2], (hidden, mlp_ratio * hidden)),
+        "w_down": _dense_init(k[3], (mlp_ratio * hidden, hidden)),
+    }
+
+
+def init_params(cfg: ModelCfg, key: jax.Array):
+    """Initialize the full MLLM parameter pytree."""
+    keys = jax.random.split(key, 4 + cfg.vision_layers + cfg.layers)
+    params = {
+        "patch_embed": _dense_init(keys[0], (cfg.patch_dim, cfg.vision_hidden)),
+        "vision_blocks": [
+            _block_params(keys[4 + i], cfg.vision_hidden, cfg.mlp_ratio)
+            for i in range(cfg.vision_layers)
+        ],
+        "vision_ln_g": jnp.ones((cfg.vision_hidden,), jnp.float32),
+        "vision_ln_b": jnp.zeros((cfg.vision_hidden,), jnp.float32),
+        "connector": _dense_init(keys[1], (cfg.vision_hidden, cfg.hidden)),
+        "tok_embed": _dense_init(keys[2], (cfg.vocab, cfg.hidden), scale=0.02),
+        "blocks": [
+            _block_params(keys[4 + cfg.vision_layers + i], cfg.hidden, cfg.mlp_ratio)
+            for i in range(cfg.layers)
+        ],
+        "final_ln_g": jnp.ones((cfg.hidden,), jnp.float32),
+        "final_ln_b": jnp.zeros((cfg.hidden,), jnp.float32),
+    }
+    return params
+
+
+def param_count(cfg: ModelCfg) -> int:
+    params = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    return sum(int(jnp.prod(jnp.asarray(x.shape))) for x in jax.tree.leaves(params))
+
+
+def flatten_params(params):
+    """-> (flat f32 vector, unravel_fn)."""
+    return ravel_pytree(params)
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _sincos_pos(L: int, D: int):
+    """Sinusoidal positions: length-agnostic, no parameters."""
+    pos = jnp.arange(L, dtype=jnp.float32)[:, None]
+    div = jnp.exp(
+        jnp.arange(0, D, 2, dtype=jnp.float32) * (-jnp.log(10000.0) / D)
+    )
+    pe = jnp.zeros((L, D), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+def _transformer_block(p, x, heads: int, causal: bool):
+    """Pre-LN transformer block; attention is the L1 Pallas kernel."""
+    B, L, D = x.shape
+    hd = D // heads
+    h = _layer_norm(x, p["ln1_g"], p["ln1_b"])
+    qkv = h @ p["wqkv"]  # [B, L, 3D]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads_first(t):
+        return t.reshape(B, L, heads, hd).transpose(0, 2, 1, 3)
+
+    o = attention(heads_first(q), heads_first(k), heads_first(v), causal)
+    o = o.transpose(0, 2, 1, 3).reshape(B, L, D)
+    x = x + o @ p["wo"]
+    h = _layer_norm(x, p["ln2_g"], p["ln2_b"])
+    x = x + jax.nn.gelu(h @ p["w_up"]) @ p["w_down"]
+    return x
+
+
+def encode_vision(params, cfg: ModelCfg, vis):
+    """Vision encoder: patch features -> LM-space visual tokens H_v.
+
+    vis: [B, Lv, patch_dim] raw patch features. Full (non-causal)
+    attention, i.e. the paper's eta=1 workload component.
+    """
+    x = vis @ params["patch_embed"]
+    x = x + _sincos_pos(x.shape[1], x.shape[2])[None]
+    for blk in params["vision_blocks"]:
+        x = _transformer_block(blk, x, cfg.vision_heads, causal=False)
+    x = _layer_norm(x, params["vision_ln_g"], params["vision_ln_b"])
+    return x @ params["connector"]  # [B, Lv, hidden]
+
+
+def forward(params, cfg: ModelCfg, vis, tok, *, freeze_vision: bool = False):
+    """Full MLLM forward: H_in = [H_v ; H_q] -> causal LM -> logits.
+
+    Returns logits over the TEXT positions only: [B, Lt, vocab].
+    """
+    hv = encode_vision(params, cfg, vis)
+    if freeze_vision:
+        # Fig. 4's training stage: the vision encoder runs forward but
+        # receives no gradient (its backward cost leaves the workload).
+        hv = jax.lax.stop_gradient(hv)
+    hq = params["tok_embed"][tok]  # [B, Lt, hidden]
+    x = jnp.concatenate([hv, hq], axis=1)
+    x = x + _sincos_pos(x.shape[1], x.shape[2])[None]
+    for blk in params["blocks"]:
+        x = _transformer_block(blk, x, cfg.heads, causal=True)
+    x = _layer_norm(x, params["final_ln_g"], params["final_ln_b"])
+    text_h = x[:, hv.shape[1] :, :]
+    return text_h @ params["tok_embed"].T  # tied softmax head
+
+
+def loss_fn(params, cfg: ModelCfg, vis, tok, tgt, *, freeze_vision=False):
+    """Mean next-token cross-entropy over text positions."""
+    logits = forward(params, cfg, vis, tok, freeze_vision=freeze_vision)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+def make_flat_fns(cfg: ModelCfg, key=None, *, freeze_vision: bool = False):
+    """Build the flat-parameter-vector entry points for AOT export.
+
+    Returns (flat0, fwd_loss, grad_step) where
+      fwd_loss(flat, vis, tok, tgt) -> loss
+      grad_step(flat, vis, tok, tgt) -> (loss, flat_grads)
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    flat0, unravel = flatten_params(params)
+
+    def fwd_loss(flat, vis, tok, tgt):
+        return loss_fn(
+            unravel(flat), cfg, vis, tok, tgt, freeze_vision=freeze_vision
+        )
+
+    def grad_step(flat, vis, tok, tgt):
+        loss, grads = jax.value_and_grad(fwd_loss)(flat, vis, tok, tgt)
+        return loss, grads
+
+    return flat0, fwd_loss, grad_step
+
+
+def example_batch(cfg: ModelCfg, B: int, Lv: int, Lt: int, key=None):
+    """Synthetic example inputs with the artifact signature shapes."""
+    if key is None:
+        key = jax.random.PRNGKey(1)
+    k1, k2, k3 = jax.random.split(key, 3)
+    vis = jax.random.normal(k1, (B, Lv, cfg.patch_dim), jnp.float32)
+    tok = jax.random.randint(k2, (B, Lt), 0, cfg.vocab, jnp.int32)
+    tgt = jax.random.randint(k3, (B, Lt), 0, cfg.vocab, jnp.int32)
+    return vis, tok, tgt

@@ -1,0 +1,141 @@
+"""L1 correctness: Pallas flash-attention kernel vs the pure-jnp oracle.
+
+This is the CORE kernel correctness signal: exact-shape cases, hypothesis
+sweeps over shapes/dtypes, and mask-mode coverage (causal eta=0 vs full
+eta=1).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import flash_attention
+from compile.kernels.ref import attention_ref, mask_efficiency
+
+
+def _rand_qkv(key, B, H, L, D, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return [jax.random.normal(k, (B, H, L, D), dtype) for k in ks]
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("L", [64, 128, 256])
+def test_flash_matches_ref(causal, L):
+    q, k, v = _rand_qkv(jax.random.PRNGKey(L), 2, 3, L, 32)
+    out = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("block", [32, 64, 128])
+def test_block_size_invariance(block):
+    """Output must not depend on the VMEM tile decomposition."""
+    q, k, v = _rand_qkv(jax.random.PRNGKey(7), 1, 2, 256, 16)
+    ref = flash_attention(q, k, v, causal=True, block_q=128, block_k=128)
+    out = flash_attention(q, k, v, causal=True, block_q=block, block_k=block)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_rectangular_blocks():
+    q, k, v = _rand_qkv(jax.random.PRNGKey(9), 1, 1, 128, 32)
+    out = flash_attention(q, k, v, causal=True, block_q=32, block_k=64)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_short_sequence_degrades_blocks():
+    """L smaller than the default 128 tile must still work."""
+    q, k, v = _rand_qkv(jax.random.PRNGKey(3), 1, 2, 32, 16)
+    out = flash_attention(q, k, v, causal=True)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_indivisible_length_fits_blocks():
+    """Requested blocks not dividing L are shrunk to the largest divisor."""
+    q, k, v = _rand_qkv(jax.random.PRNGKey(4), 1, 1, 96, 16)
+    out = flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_causal_first_row_is_v0():
+    """Position 0 attends only to key 0 under the causal mask."""
+    q, k, v = _rand_qkv(jax.random.PRNGKey(5), 1, 1, 64, 8)
+    out = flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(out[0, 0, 0], v[0, 0, 0], atol=1e-5, rtol=1e-5)
+
+
+def test_full_mask_is_permutation_equivariant_in_keys():
+    """With a full mask, permuting (K, V) jointly must not change output."""
+    q, k, v = _rand_qkv(jax.random.PRNGKey(6), 1, 1, 64, 8)
+    perm = jax.random.permutation(jax.random.PRNGKey(0), 64)
+    out1 = flash_attention(q, k, v, causal=False)
+    out2 = flash_attention(q, k[:, :, perm], v[:, :, perm], causal=False)
+    np.testing.assert_allclose(out1, out2, atol=2e-5, rtol=2e-5)
+
+
+def test_uniform_values_passthrough():
+    """If V is constant, attention output equals that constant exactly."""
+    q, k, _ = _rand_qkv(jax.random.PRNGKey(8), 1, 2, 64, 16)
+    v = jnp.full((1, 2, 64, 16), 3.5, jnp.float32)
+    for causal in (True, False):
+        out = flash_attention(q, k, v, causal=causal)
+        np.testing.assert_allclose(out, v, atol=1e-5, rtol=1e-5)
+
+
+def test_scale_extreme_logits_stable():
+    """Online softmax must survive large-magnitude logits (no inf/nan)."""
+    q, k, v = _rand_qkv(jax.random.PRNGKey(10), 1, 1, 64, 16)
+    out = flash_attention(q * 100.0, k * 100.0, v, causal=True)
+    assert bool(jnp.isfinite(out).all())
+    ref = attention_ref(q * 100.0, k * 100.0, v, causal=True)
+    np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-4)
+
+
+def test_mask_efficiency_factor():
+    assert mask_efficiency(causal=True) == 0.0
+    assert mask_efficiency(causal=False) == 1.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    B=st.integers(1, 3),
+    H=st.integers(1, 4),
+    log_l=st.integers(4, 8),  # L in {16..256}
+    log_d=st.integers(3, 6),  # D in {8..64}
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_hypothesis_f32(B, H, log_l, log_d, causal, seed):
+    L, D = 2**log_l, 2**log_d
+    q, k, v = _rand_qkv(jax.random.PRNGKey(seed), B, H, L, D)
+    blk = min(64, L)
+    out = flash_attention(q, k, v, causal=causal, block_q=blk, block_k=blk)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, ref, atol=5e-5, rtol=5e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    log_l=st.integers(5, 7),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_hypothesis_bf16(log_l, causal, seed):
+    """bf16 inputs: accumulate in f32, compare against the f32 oracle
+    with bf16-scale tolerance."""
+    L = 2**log_l
+    q, k, v = _rand_qkv(jax.random.PRNGKey(seed), 1, 2, L, 32, jnp.bfloat16)
+    blk = min(64, L)
+    out = flash_attention(q, k, v, causal=causal, block_q=blk, block_k=blk)
+    ref = attention_ref(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        causal=causal,
+    )
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), ref, atol=3e-2, rtol=3e-2
+    )

@@ -1,0 +1,127 @@
+"""L2 model tests: shapes, loss behaviour, freezing, flat-param round trip."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    cfg = M.TINY
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    vis, tok, tgt = M.example_batch(cfg, 2, 16, 48)
+    return cfg, params, vis, tok, tgt
+
+
+def test_forward_shapes(tiny_setup):
+    cfg, params, vis, tok, tgt = tiny_setup
+    logits = M.forward(params, cfg, vis, tok)
+    assert logits.shape == (2, 48, cfg.vocab)
+
+
+def test_vision_encoder_shapes(tiny_setup):
+    cfg, params, vis, *_ = tiny_setup
+    hv = M.encode_vision(params, cfg, vis)
+    assert hv.shape == (2, 16, cfg.hidden)
+
+
+def test_loss_finite_and_near_uniform_at_init(tiny_setup):
+    cfg, params, vis, tok, tgt = tiny_setup
+    loss = M.loss_fn(params, cfg, vis, tok, tgt)
+    assert bool(jnp.isfinite(loss))
+    # Tied-embedding init is near-uniform: loss ~ log(vocab).
+    assert abs(float(loss) - np.log(cfg.vocab)) < 1.0
+
+
+def test_param_count_tiny_and_e2e():
+    assert M.param_count(M.TINY) < 1_000_000
+    e2e = M.param_count(M.E2E_100M)
+    assert 80_000_000 < e2e < 120_000_000, f"~100M target, got {e2e}"
+
+
+def test_flat_roundtrip(tiny_setup):
+    cfg, params, *_ = tiny_setup
+    flat, unravel = M.flatten_params(params)
+    back = unravel(flat)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_loss_decreases_under_sgd(tiny_setup):
+    cfg, params, vis, tok, tgt = tiny_setup
+    flat0, fwd_loss, grad_step = M.make_flat_fns(cfg)
+    step = jax.jit(grad_step)
+    flat = flat0
+    l0, g = step(flat, vis, tok, tgt)
+    for _ in range(8):
+        loss, g = step(flat, vis, tok, tgt)
+        flat = flat - 0.5 * g
+    l_end, _ = step(flat, vis, tok, tgt)
+    assert float(l_end) < float(l0) - 0.1, (float(l0), float(l_end))
+
+
+def test_freeze_vision_zeroes_vision_grads():
+    cfg = M.TINY
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    flat, unravel = M.flatten_params(params)
+    vis, tok, tgt = M.example_batch(cfg, 1, 16, 48)
+
+    _, _, grad_frozen = M.make_flat_fns(cfg, key, freeze_vision=True)
+    _, grads = jax.jit(grad_frozen)(flat, vis, tok, tgt)
+    gtree = unravel(grads)
+    # All vision-side grads must be exactly zero...
+    for leaf in jax.tree.leaves(
+        {k: gtree[k] for k in ("patch_embed", "vision_blocks", "connector")}
+    ):
+        np.testing.assert_array_equal(leaf, jnp.zeros_like(leaf))
+    # ...while the LM still receives gradient.
+    lm_norm = sum(
+        float(jnp.abs(l).sum()) for l in jax.tree.leaves(gtree["blocks"])
+    )
+    assert lm_norm > 0
+
+
+def test_grad_step_matches_value_and_grad(tiny_setup):
+    cfg, params, vis, tok, tgt = tiny_setup
+    flat0, fwd_loss, grad_step = M.make_flat_fns(cfg)
+    loss1, grads = jax.jit(grad_step)(flat0, vis, tok, tgt)
+    loss2 = jax.jit(fwd_loss)(flat0, vis, tok, tgt)
+    np.testing.assert_allclose(float(loss1), float(loss2), rtol=1e-6)
+    assert grads.shape == flat0.shape
+
+
+def test_different_batch_entries_independent(tiny_setup):
+    """Per-sequence isolation: changing sample 1 must not change sample 0's
+    logits (no cross-batch leakage through attention)."""
+    cfg, params, vis, tok, tgt = tiny_setup
+    logits_a = M.forward(params, cfg, vis, tok)
+    vis2 = vis.at[1].set(vis[1] * 2.0 + 1.0)
+    tok2 = tok.at[1].set((tok[1] + 7) % cfg.vocab)
+    logits_b = M.forward(params, cfg, vis2, tok2)
+    np.testing.assert_allclose(
+        logits_a[0], logits_b[0], atol=1e-5, rtol=1e-5
+    )
+    assert not np.allclose(logits_a[1], logits_b[1], atol=1e-3)
+
+
+def test_causal_lm_future_text_does_not_leak(tiny_setup):
+    """Changing a future text token must not affect earlier text logits."""
+    cfg, params, vis, tok, tgt = tiny_setup
+    logits_a = M.forward(params, cfg, vis, tok)
+    tok2 = tok.at[:, -1].set((tok[:, -1] + 5) % cfg.vocab)
+    logits_b = M.forward(params, cfg, vis, tok2)
+    np.testing.assert_allclose(
+        logits_a[:, :-1], logits_b[:, :-1], atol=1e-5, rtol=1e-5
+    )
+
+
+def test_vision_tokens_visible_to_text(tiny_setup):
+    """Text logits must depend on vision input (the multimodal path)."""
+    cfg, params, vis, tok, tgt = tiny_setup
+    logits_a = M.forward(params, cfg, vis, tok)
+    logits_b = M.forward(params, cfg, vis * 0.0, tok)
+    assert not np.allclose(logits_a, logits_b, atol=1e-3)

@@ -1,0 +1,123 @@
+//! DeepSpeed-Ulysses-style static sequence parallelism: like the static
+//! grid, but the SP degree must also divide the attention-head count
+//! (Ulysses shards heads across ranks, §3.2 / Appendix A.2), and the
+//! communication pattern is all-to-all activation redistribution — not
+//! overlappable with attention compute.
+
+use crate::cluster::CommKind;
+use crate::config::presets::ModelPreset;
+use crate::cost::CostModel;
+use crate::data::sequence::Sequence;
+use crate::scheduler::Schedule;
+
+use super::megatron::MegatronStaticCp;
+use super::SchedulePolicy;
+
+/// Static Ulysses-SP policy (delegates grid construction to the static-CP
+/// machinery; what differs is degree admissibility and the comm pattern).
+#[derive(Debug, Clone)]
+pub struct DeepSpeedUlysses {
+    inner: MegatronStaticCp,
+    pub heads: usize,
+}
+
+impl DeepSpeedUlysses {
+    pub fn new(
+        degree: usize,
+        replicas: usize,
+        preset: &ModelPreset,
+        cost: CostModel,
+        bandwidth: f64,
+    ) -> Self {
+        assert!(
+            preset.heads % degree == 0,
+            "Ulysses degree {degree} must divide heads {}",
+            preset.heads
+        );
+        DeepSpeedUlysses {
+            inner: MegatronStaticCp::new(degree, replicas, cost, bandwidth),
+            heads: preset.heads,
+        }
+    }
+
+    /// Valid Ulysses degrees: powers of two dividing both N and #heads.
+    pub fn degree_candidates(replicas: usize, preset: &ModelPreset) -> Vec<usize> {
+        super::static_degree_candidates(replicas)
+            .into_iter()
+            .filter(|&d| preset.heads % d == 0)
+            .collect()
+    }
+
+    pub fn degree(&self) -> usize {
+        self.inner.degree
+    }
+}
+
+impl SchedulePolicy for DeepSpeedUlysses {
+    fn name(&self) -> &'static str {
+        "DeepSpeed"
+    }
+
+    fn comm_kind(&self) -> CommKind {
+        CommKind::UlyssesA2A
+    }
+
+    fn schedule(&self, seqs: &[Sequence]) -> Schedule {
+        self.inner.schedule(seqs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::by_name;
+    use crate::config::TrainStage;
+    use crate::cost::{CostCoeffs, HardwareSpec, MemoryModel};
+
+    fn cost(name: &str) -> (ModelPreset, CostModel) {
+        let preset = by_name(name).unwrap();
+        let hw = HardwareSpec::default();
+        let cm = CostModel {
+            coeffs: CostCoeffs::analytic(&preset, TrainStage::Full, &hw),
+            memory: MemoryModel {
+                e_bytes: 8192.0 * preset.act_bytes_per_token() + 2e9,
+                m_states: 2e9,
+                m_token: preset.act_bytes_per_token(),
+            },
+        };
+        (preset, cm)
+    }
+
+    #[test]
+    fn head_divisibility_enforced() {
+        // InternVL3-8B has 28 heads: degree 8 does not divide them.
+        let (preset, cm) = cost("InternVL3-8B");
+        let cands = DeepSpeedUlysses::degree_candidates(64, &preset);
+        assert_eq!(cands, vec![1, 2, 4]);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            DeepSpeedUlysses::new(8, 64, &preset, cm, 12.5e9)
+        }));
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn qwen_allows_more_degrees() {
+        let (preset, _) = cost("Qwen3VL-8B"); // 32 heads
+        let cands = DeepSpeedUlysses::degree_candidates(64, &preset);
+        assert_eq!(cands, vec![1, 2, 4, 8, 16, 32]);
+    }
+
+    #[test]
+    fn schedules_validate_and_use_a2a() {
+        let (preset, cm) = cost("Qwen3VL-2B");
+        let policy = DeepSpeedUlysses::new(4, 8, &preset, cm, 12.5e9);
+        assert_eq!(policy.comm_kind(), CommKind::UlyssesA2A);
+        let seqs: Vec<Sequence> =
+            (0..12).map(|i| Sequence::new(i, 400, 400)).collect();
+        let schedule = policy.schedule(&seqs);
+        schedule.validate(&seqs, 8).unwrap();
+        for d in schedule.degree_multiset() {
+            assert_eq!(d, 4);
+        }
+    }
+}

@@ -1,0 +1,259 @@
+//! Megatron-LM-style static context parallelism: a fixed CP degree `d`
+//! partitions the cluster into N/d uniform groups ("static mesh",
+//! paper Fig. 2 / Table 4: "statically partitions parallel groups based on
+//! the longest sequence length"). Sequences are balanced across groups
+//! with LPT (longest-processing-time first) — a *generous* baseline, as
+//! the paper tunes each baseline's hyperparameters — subject to the
+//! per-group memory cap; overflow opens a new wave, since all DP groups
+//! advance in lock-step toward the gradient all-reduce.
+
+use crate::cluster::CommKind;
+use crate::cost::{CostModel, WorkloadAgg};
+use crate::data::sequence::Sequence;
+use crate::scheduler::{Plan, PlannedGroup, Schedule};
+
+use super::SchedulePolicy;
+
+/// Static-CP policy with a fixed degree.
+#[derive(Debug, Clone)]
+pub struct MegatronStaticCp {
+    pub degree: usize,
+    pub replicas: usize,
+    pub cost: CostModel,
+    /// Ring bandwidth the groups will see (for est_time bookkeeping).
+    pub bandwidth: f64,
+}
+
+impl MegatronStaticCp {
+    pub fn new(degree: usize, replicas: usize, cost: CostModel, bandwidth: f64) -> Self {
+        assert!(degree >= 1 && degree <= replicas);
+        assert_eq!(replicas % degree, 0, "static degree must divide N");
+        MegatronStaticCp {
+            degree,
+            replicas,
+            cost,
+            bandwidth,
+        }
+    }
+
+    /// The paper's framing: the static degree is forced by the longest
+    /// sequence in the workload sample ("partitions parallel groups based
+    /// on the longest sequence length") — the smallest valid power of two
+    /// whose memory capacity fits it.
+    pub fn degree_for_longest(
+        seqs: &[Sequence],
+        replicas: usize,
+        cost: &CostModel,
+    ) -> usize {
+        let longest = seqs.iter().map(|s| s.len()).max().unwrap_or(1);
+        let need = cost.memory.min_degree(longest);
+        super::static_degree_candidates(replicas)
+            .into_iter()
+            .find(|&d| d >= need)
+            .unwrap_or(replicas)
+    }
+}
+
+impl SchedulePolicy for MegatronStaticCp {
+    fn name(&self) -> &'static str {
+        "Megatron-LM"
+    }
+
+    fn comm_kind(&self) -> CommKind {
+        CommKind::RingCp
+    }
+
+    fn schedule(&self, seqs: &[Sequence]) -> Schedule {
+        let t0 = std::time::Instant::now();
+        let n_groups = self.replicas / self.degree;
+        let cap_tokens = {
+            // Eq. 3 at the fixed degree.
+            let budget = self.cost.memory.rank_budget() * self.degree as f64;
+            (budget / self.cost.memory.m_token).floor() as u64
+        };
+        // LPT over sequences, descending.
+        let mut order: Vec<usize> = (0..seqs.len()).collect();
+        order.sort_by(|&a, &b| seqs[b].len().cmp(&seqs[a].len()).then(a.cmp(&b)));
+
+        struct Bin {
+            idxs: Vec<usize>,
+            tokens: u64,
+            load: f64,
+        }
+        let mut waves: Vec<Vec<Bin>> = Vec::new();
+        let new_wave = |waves: &mut Vec<Vec<Bin>>| {
+            waves.push(
+                (0..n_groups)
+                    .map(|_| Bin {
+                        idxs: vec![],
+                        tokens: 0,
+                        load: 0.0,
+                    })
+                    .collect(),
+            );
+        };
+        new_wave(&mut waves);
+        for &i in &order {
+            let s = &seqs[i];
+            let l = s.len();
+            let work = (1.0 + s.eta()) * (l as f64) * (l as f64);
+            // Least-loaded bin with room, searching the last wave first.
+            let mut placed = false;
+            let wave = waves.last_mut().unwrap();
+            let mut best: Option<usize> = None;
+            for (bi, b) in wave.iter().enumerate() {
+                if b.tokens + l <= cap_tokens || b.idxs.is_empty() {
+                    match best {
+                        Some(prev) if wave[prev].load <= b.load => {}
+                        _ => best = Some(bi),
+                    }
+                }
+            }
+            if let Some(bi) = best {
+                let b = &mut wave[bi];
+                b.idxs.push(i);
+                b.tokens += l;
+                b.load += work;
+                placed = true;
+            }
+            if !placed {
+                new_wave(&mut waves);
+                let b = &mut waves.last_mut().unwrap()[0];
+                b.idxs.push(i);
+                b.tokens += l;
+                b.load += work;
+            }
+        }
+
+        let mut schedule = Schedule::default();
+        for wave in waves {
+            let mut plan = Plan::default();
+            for b in wave {
+                if b.idxs.is_empty() {
+                    // A static mesh keeps the group allocated even when
+                    // empty — that IS the idle-gap pathology, surfaced by
+                    // keeping the degree reserved with zero work.
+                    plan.groups.push(PlannedGroup {
+                        degree: self.degree,
+                        seq_idxs: vec![],
+                        agg: WorkloadAgg::default(),
+                        est_time_s: 0.0,
+                    });
+                    continue;
+                }
+                let group_seqs: Vec<Sequence> =
+                    b.idxs.iter().map(|&i| seqs[i].clone()).collect();
+                let agg = WorkloadAgg::of(&group_seqs);
+                let est = self.cost.t_total(&agg, self.degree, self.bandwidth);
+                plan.groups.push(PlannedGroup {
+                    degree: self.degree,
+                    seq_idxs: b.idxs,
+                    agg,
+                    est_time_s: est,
+                });
+            }
+            plan.est_makespan_s = plan
+                .groups
+                .iter()
+                .map(|g| g.est_time_s)
+                .fold(0.0f64, f64::max);
+            schedule.est_time_s += plan.est_makespan_s;
+            schedule.waves.push(plan);
+        }
+        schedule.solve_time_s = t0.elapsed().as_secs_f64();
+        schedule
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::by_name;
+    use crate::config::TrainStage;
+    use crate::cost::{CostCoeffs, HardwareSpec, MemoryModel};
+    use crate::data::datasets::{DatasetKind, DatasetSampler};
+
+    fn cost() -> CostModel {
+        let preset = by_name("InternVL3-8B").unwrap();
+        let hw = HardwareSpec::default();
+        CostModel {
+            coeffs: CostCoeffs::analytic(&preset, TrainStage::Full, &hw),
+            memory: MemoryModel {
+                e_bytes: 8192.0 * preset.act_bytes_per_token() + 2e9,
+                m_states: 2e9,
+                m_token: preset.act_bytes_per_token(),
+            },
+        }
+    }
+
+    #[test]
+    fn uniform_degrees_only() {
+        let policy = MegatronStaticCp::new(4, 16, cost(), 12.5e9);
+        let mut sampler = DatasetSampler::new(DatasetKind::Msrvtt, 81);
+        let seqs = sampler.sample_batch(32);
+        let schedule = policy.schedule(&seqs);
+        schedule.validate(&seqs, 16).unwrap();
+        for d in schedule.degree_multiset() {
+            assert_eq!(d, 4);
+        }
+        // Every wave fields exactly N/d groups (the static grid).
+        for p in &schedule.waves {
+            assert_eq!(p.groups.len(), 4);
+        }
+    }
+
+    #[test]
+    fn degree_for_longest_fits_memory() {
+        let c = cost();
+        let mut sampler = DatasetSampler::new(DatasetKind::OpenVid, 83);
+        let seqs = sampler.sample_batch(64);
+        let d = MegatronStaticCp::degree_for_longest(&seqs, 64, &c);
+        assert!(d.is_power_of_two());
+        let longest = seqs.iter().map(|s| s.len()).max().unwrap();
+        assert!(c.memory.fits(longest, d), "longest seq must fit degree {d}");
+    }
+
+    #[test]
+    fn memory_overflow_opens_waves() {
+        let c = cost();
+        // Degree 1 groups hold ~8192 tokens; force multi-wave.
+        let policy = MegatronStaticCp::new(1, 2, c, 12.5e9);
+        let seqs: Vec<Sequence> = (0..6)
+            .map(|i| Sequence::new(i, 3000, 3000)) // 6000 tokens each
+            .collect();
+        let schedule = policy.schedule(&seqs);
+        schedule.validate(&seqs, 2).unwrap();
+        assert!(schedule.waves.len() >= 3, "{}", schedule.waves.len());
+    }
+
+    #[test]
+    fn lpt_balances_loads() {
+        let policy = MegatronStaticCp::new(2, 8, cost(), 12.5e9);
+        let seqs: Vec<Sequence> = vec![
+            Sequence::new(0, 2000, 2000),
+            Sequence::new(1, 1000, 1000),
+            Sequence::new(2, 1000, 1000),
+            Sequence::new(3, 500, 500),
+            Sequence::new(4, 500, 500),
+            Sequence::new(5, 500, 500),
+            Sequence::new(6, 250, 250),
+            Sequence::new(7, 250, 250),
+        ];
+        let schedule = policy.schedule(&seqs);
+        assert_eq!(schedule.waves.len(), 1);
+        let times: Vec<f64> = schedule.waves[0]
+            .groups
+            .iter()
+            .map(|g| g.est_time_s)
+            .collect();
+        let max = times.iter().fold(0.0f64, |a, &b| a.max(b));
+        let min = times.iter().fold(f64::MAX, |a, &b| a.min(b));
+        assert!(max / min.max(1e-9) < 4.0, "LPT imbalance too high: {times:?}");
+    }
+
+    #[test]
+    #[should_panic(expected = "divide")]
+    fn bad_degree_panics() {
+        MegatronStaticCp::new(3, 16, cost(), 12.5e9);
+    }
+}

@@ -1,0 +1,52 @@
+//! Baseline parallelism policies the paper evaluates against (§6.1):
+//! Megatron-LM-style static context parallelism, DeepSpeed-Ulysses-style
+//! static sequence parallelism, and a FlexSP-like dynamic-but-power-of-two
+//! policy (ablating DHP's arbitrary-integer-degree relaxation).
+//!
+//! All policies emit the same [`Schedule`] type, so the cluster simulator
+//! executes them identically — the comparison isolates the *scheduling*
+//! contribution exactly as the paper's evaluation does.
+
+pub mod deepspeed;
+pub mod flexsp;
+pub mod megatron;
+
+use crate::cluster::CommKind;
+use crate::data::sequence::Sequence;
+use crate::scheduler::Schedule;
+
+/// A parallelism scheduling policy: micro-batch sequences → schedule.
+pub trait SchedulePolicy: Send {
+    fn name(&self) -> &'static str;
+    /// Communication pattern the policy's groups use at execution time.
+    fn comm_kind(&self) -> CommKind;
+    fn schedule(&self, seqs: &[Sequence]) -> Schedule;
+}
+
+pub use deepspeed::DeepSpeedUlysses;
+pub use flexsp::FlexSp;
+pub use megatron::MegatronStaticCp;
+
+/// Valid static degrees for a cluster of `replicas` ranks: powers of two
+/// dividing the replica count (what Megatron/DeepSpeed grids allow).
+pub fn static_degree_candidates(replicas: usize) -> Vec<usize> {
+    (0..=usize::BITS)
+        .map(|b| 1usize << b)
+        .take_while(|&d| d <= replicas)
+        .filter(|&d| replicas % d == 0)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn degree_candidates() {
+        assert_eq!(static_degree_candidates(8), vec![1, 2, 4, 8]);
+        assert_eq!(static_degree_candidates(64), vec![1, 2, 4, 8, 16, 32, 64]);
+        assert_eq!(static_degree_candidates(1), vec![1]);
+        // 12 replicas: pow2 divisors only.
+        assert_eq!(static_degree_candidates(12), vec![1, 2, 4]);
+    }
+}

@@ -1,0 +1,15 @@
+//! Simulated NPU cluster — the substrate substituting for the paper's
+//! 8-node Ascend 910B testbed (DESIGN.md §2).
+//!
+//! The simulator executes a [`Schedule`] (from DHP or any baseline) with:
+//! * real rank placement through the [`DeviceMesh`] (intra-node HCCS vs
+//!   inter-node IB bandwidth per group),
+//! * ground-truth per-group times from the first-principles
+//!   [`crate::cost::exact`] model (ring CP) or the Ulysses all-to-all
+//!   model (DeepSpeed baseline),
+//! * per-iteration data-parallel gradient synchronization,
+//! * per-wave makespan/idle accounting (Fig. 2's "idle gaps").
+
+pub mod sim;
+
+pub use sim::{ClusterSim, CommKind, IterationReport, WaveReport};

@@ -1,0 +1,279 @@
+//! Configuration system: model presets (paper Table 5), cluster topology,
+//! training/run options, and a TOML-subset file format.
+
+pub mod parser;
+pub mod presets;
+
+pub use presets::{ModelPreset, PRESETS};
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::datasets::DatasetKind;
+
+/// Cluster hardware description (paper §6.1: 8 nodes × 8 Ascend 910B,
+/// HCCS intra-node, 100 Gbps InfiniBand inter-node).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    pub nodes: usize,
+    pub npus_per_node: usize,
+    /// Per-NPU memory budget in bytes (910B: 64 GB).
+    pub mem_bytes: u64,
+    /// Intra-node link bandwidth, bytes/s (HCCS class).
+    pub intra_bw: f64,
+    /// Inter-node link bandwidth, bytes/s (100 Gbps IB ≈ 12.5 GB/s).
+    pub inter_bw: f64,
+    /// Static tensor-parallel degree (never reconfigured at runtime).
+    pub tp: usize,
+    /// Static pipeline-parallel degree (never reconfigured at runtime).
+    pub pp: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            nodes: 8,
+            npus_per_node: 8,
+            mem_bytes: 64 << 30,
+            intra_bw: 196e9,
+            inter_bw: 12.5e9,
+            tp: 1,
+            pp: 1,
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// Total physical NPUs.
+    pub fn total_npus(&self) -> usize {
+        self.nodes * self.npus_per_node
+    }
+
+    /// N in the paper: complete model replicas (one "rank" = TP×PP NPUs).
+    pub fn replicas(&self) -> usize {
+        self.total_npus() / (self.tp * self.pp)
+    }
+
+    /// Replica ranks per node (a replica never spans nodes for TP).
+    pub fn replicas_per_node(&self) -> usize {
+        self.npus_per_node / (self.tp * self.pp).min(self.npus_per_node)
+    }
+
+    pub fn with_npus(mut self, total: usize) -> Self {
+        assert!(total % self.npus_per_node == 0 || total < self.npus_per_node);
+        if total < self.npus_per_node {
+            self.nodes = 1;
+            self.npus_per_node = total;
+        } else {
+            self.nodes = total / self.npus_per_node;
+        }
+        self
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.nodes == 0 || self.npus_per_node == 0 {
+            bail!("cluster must have at least one NPU");
+        }
+        if self.tp * self.pp == 0 {
+            bail!("tp and pp must be >= 1");
+        }
+        if self.total_npus() % (self.tp * self.pp) != 0 {
+            bail!(
+                "tp*pp = {} must divide total NPUs {}",
+                self.tp * self.pp,
+                self.total_npus()
+            );
+        }
+        if self.intra_bw <= 0.0 || self.inter_bw <= 0.0 {
+            bail!("bandwidths must be positive");
+        }
+        Ok(())
+    }
+}
+
+/// Which training stage is being measured (paper Fig. 6 vs Fig. 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TrainStage {
+    /// Full end-to-end training (vision encoder trained).
+    Full,
+    /// Vision encoder frozen (Fig. 4's generalization experiment).
+    FrozenVision,
+}
+
+/// Top-level run configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub model: ModelPreset,
+    pub dataset: DatasetKind,
+    pub cluster: ClusterConfig,
+    pub stage: TrainStage,
+    /// Global batch size in sequences (paper fixes 512).
+    pub gbs: usize,
+    pub seed: u64,
+    /// Warmup steps excluded from measurement (paper: 5).
+    pub warmup_steps: usize,
+    /// Measured steps (paper: 10).
+    pub measure_steps: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: PRESETS[2].clone(), // InternVL3-8B
+            dataset: DatasetKind::OpenVid,
+            cluster: ClusterConfig::default(),
+            stage: TrainStage::Full,
+            gbs: 512,
+            seed: 0xD4B,
+            warmup_steps: 5,
+            measure_steps: 10,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn validate(&self) -> Result<()> {
+        self.cluster.validate()?;
+        if self.gbs == 0 {
+            bail!("gbs must be positive");
+        }
+        Ok(())
+    }
+
+    /// Load from a TOML-subset file (see [`parser`]).
+    pub fn from_toml_file(path: &str) -> Result<TrainConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        Self::from_toml(&text)
+    }
+
+    pub fn from_toml(text: &str) -> Result<TrainConfig> {
+        let doc = parser::parse(text)?;
+        let mut cfg = TrainConfig::default();
+
+        if let Some(t) = doc.section("train") {
+            if let Some(v) = t.get("gbs") {
+                cfg.gbs = v.as_int()? as usize;
+            }
+            if let Some(v) = t.get("seed") {
+                cfg.seed = v.as_int()? as u64;
+            }
+            if let Some(v) = t.get("model") {
+                cfg.model = presets::by_name(v.as_str()?)
+                    .with_context(|| format!("unknown model {:?}", v.as_str()))?;
+            }
+            if let Some(v) = t.get("dataset") {
+                cfg.dataset = DatasetKind::by_name(v.as_str()?)?;
+            }
+            if let Some(v) = t.get("stage") {
+                cfg.stage = match v.as_str()? {
+                    "full" => TrainStage::Full,
+                    "frozen_vision" => TrainStage::FrozenVision,
+                    other => bail!("unknown stage {other:?}"),
+                };
+            }
+            if let Some(v) = t.get("warmup_steps") {
+                cfg.warmup_steps = v.as_int()? as usize;
+            }
+            if let Some(v) = t.get("measure_steps") {
+                cfg.measure_steps = v.as_int()? as usize;
+            }
+        }
+        if let Some(c) = doc.section("cluster") {
+            if let Some(v) = c.get("nodes") {
+                cfg.cluster.nodes = v.as_int()? as usize;
+            }
+            if let Some(v) = c.get("npus_per_node") {
+                cfg.cluster.npus_per_node = v.as_int()? as usize;
+            }
+            if let Some(v) = c.get("mem_gb") {
+                cfg.cluster.mem_bytes = (v.as_float()? * (1u64 << 30) as f64) as u64;
+            }
+            if let Some(v) = c.get("intra_bw_gbps") {
+                cfg.cluster.intra_bw = v.as_float()? * 1e9;
+            }
+            if let Some(v) = c.get("inter_bw_gbps") {
+                cfg.cluster.inter_bw = v.as_float()? * 1e9;
+            }
+            if let Some(v) = c.get("tp") {
+                cfg.cluster.tp = v.as_int()? as usize;
+            }
+            if let Some(v) = c.get("pp") {
+                cfg.cluster.pp = v.as_int()? as usize;
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_cluster_matches_paper() {
+        let c = ClusterConfig::default();
+        assert_eq!(c.total_npus(), 64);
+        assert_eq!(c.replicas(), 64);
+        assert_eq!(c.mem_bytes, 64 << 30);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn replicas_account_for_tp_pp() {
+        let c = ClusterConfig {
+            tp: 2,
+            pp: 2,
+            ..Default::default()
+        };
+        assert_eq!(c.replicas(), 16);
+    }
+
+    #[test]
+    fn with_npus_scales_nodes() {
+        let c = ClusterConfig::default().with_npus(16);
+        assert_eq!(c.nodes, 2);
+        assert_eq!(c.total_npus(), 16);
+    }
+
+    #[test]
+    fn invalid_tp_rejected() {
+        let c = ClusterConfig {
+            tp: 3,
+            ..Default::default()
+        };
+        assert!(c.validate().is_err()); // 3 does not divide 64
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let cfg = TrainConfig::from_toml(
+            r#"
+            [train]
+            gbs = 256
+            model = "Qwen3VL-4B"
+            dataset = "msrvtt"
+            stage = "frozen_vision"
+
+            [cluster]
+            nodes = 4
+            npus_per_node = 8
+            mem_gb = 32.0
+            tp = 2
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.gbs, 256);
+        assert_eq!(cfg.model.name, "Qwen3VL-4B");
+        assert_eq!(cfg.dataset, DatasetKind::Msrvtt);
+        assert_eq!(cfg.stage, TrainStage::FrozenVision);
+        assert_eq!(cfg.cluster.nodes, 4);
+        assert_eq!(cfg.cluster.mem_bytes, 32 << 30);
+        assert_eq!(cfg.cluster.replicas(), 16);
+    }
+
+    #[test]
+    fn unknown_model_is_error() {
+        assert!(TrainConfig::from_toml("[train]\nmodel = \"GPT-9\"\n").is_err());
+    }
+}

@@ -1,0 +1,235 @@
+//! TOML-subset parser for config files (serde/toml unavailable offline).
+//!
+//! Supported: `[section]` headers, `key = value` with string, integer,
+//! float, boolean and flat array values, `#` comments, blank lines.
+//! Unsupported (rejected): nested tables, multi-line strings, dates.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// A parsed scalar or array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            other => Err(anyhow!("expected string, got {other:?}")),
+        }
+    }
+
+    pub fn as_int(&self) -> Result<i64> {
+        match self {
+            Value::Int(i) => Ok(*i),
+            other => Err(anyhow!("expected integer, got {other:?}")),
+        }
+    }
+
+    /// Float accessor that also accepts integers.
+    pub fn as_float(&self) -> Result<f64> {
+        match self {
+            Value::Float(f) => Ok(*f),
+            Value::Int(i) => Ok(*i as f64),
+            other => Err(anyhow!("expected number, got {other:?}")),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            other => Err(anyhow!("expected bool, got {other:?}")),
+        }
+    }
+
+    pub fn as_array(&self) -> Result<&[Value]> {
+        match self {
+            Value::Array(v) => Ok(v),
+            other => Err(anyhow!("expected array, got {other:?}")),
+        }
+    }
+}
+
+/// One `[section]` of key/value pairs.
+pub type Section = BTreeMap<String, Value>;
+
+/// A parsed document: named sections plus a root section for keys that
+/// appear before any header.
+#[derive(Debug, Default, Clone)]
+pub struct Document {
+    pub root: Section,
+    pub sections: BTreeMap<String, Section>,
+}
+
+impl Document {
+    pub fn section(&self, name: &str) -> Option<&Section> {
+        self.sections.get(name)
+    }
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<Document> {
+    let mut doc = Document::default();
+    let mut current: Option<String> = None;
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow!("line {}: unterminated section header", lineno + 1))?
+                .trim();
+            if name.is_empty() || name.contains('[') || name.contains('.') {
+                bail!("line {}: invalid section name {name:?}", lineno + 1);
+            }
+            doc.sections.entry(name.to_string()).or_default();
+            current = Some(name.to_string());
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+        let key = key.trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let value = parse_value(value.trim())
+            .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+        let section = match &current {
+            Some(name) => doc.sections.get_mut(name).unwrap(),
+            None => &mut doc.root,
+        };
+        if section.insert(key.to_string(), value).is_some() {
+            bail!("line {}: duplicate key {key:?}", lineno + 1);
+        }
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> Result<Value> {
+    if text.is_empty() {
+        bail!("missing value");
+    }
+    if let Some(inner) = text.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow!("unterminated string"))?;
+        if inner.contains('"') {
+            bail!("embedded quotes not supported");
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(inner) = text.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("unterminated array"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let items = inner
+            .split(',')
+            .map(|s| parse_value(s.trim()))
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(Value::Array(items));
+    }
+    match text {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = text.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = text.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value {text:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_document() {
+        let doc = parse(
+            r#"
+            # top comment
+            title = "dhp"
+
+            [cluster]
+            nodes = 8            # trailing comment
+            mem_gb = 64.0
+            fast = true
+            npus = [8, 16, 32]
+
+            [train]
+            dataset = "openvid"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.root["title"].as_str().unwrap(), "dhp");
+        let c = doc.section("cluster").unwrap();
+        assert_eq!(c["nodes"].as_int().unwrap(), 8);
+        assert_eq!(c["mem_gb"].as_float().unwrap(), 64.0);
+        assert!(c["fast"].as_bool().unwrap());
+        let arr = c["npus"].as_array().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[1].as_int().unwrap(), 16);
+        assert_eq!(
+            doc.section("train").unwrap()["dataset"].as_str().unwrap(),
+            "openvid"
+        );
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let doc = parse("x = 3").unwrap();
+        assert_eq!(doc.root["x"].as_float().unwrap(), 3.0);
+    }
+
+    #[test]
+    fn hash_in_string_is_not_comment() {
+        let doc = parse("x = \"a#b\"").unwrap();
+        assert_eq!(doc.root["x"].as_str().unwrap(), "a#b");
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("[unterminated").is_err());
+        assert!(parse("novalue =").is_err());
+        assert!(parse("bare").is_err());
+        assert!(parse("x = 1\nx = 2").is_err());
+        assert!(parse("[a.b]\n").is_err());
+        assert!(parse("x = \"unterminated").is_err());
+    }
+
+    #[test]
+    fn empty_array() {
+        let doc = parse("xs = []").unwrap();
+        assert!(doc.root["xs"].as_array().unwrap().is_empty());
+    }
+}

@@ -1,0 +1,203 @@
+//! Model presets — the exact configurations of paper Table 5, plus the
+//! derived quantities the cost model needs (per-token FLOPs and activation
+//! bytes).
+
+use once_cell::sync::Lazy;
+
+/// One evaluated model configuration (paper Table 5).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelPreset {
+    pub name: &'static str,
+    pub family: &'static str,
+    /// Nominal parameter count in billions (from the model name).
+    pub params_b: f64,
+    /// LM transformer layers.
+    pub layers: usize,
+    /// LM attention heads.
+    pub heads: usize,
+    /// GQA key/value groups.
+    pub kv_groups: usize,
+    /// LM hidden dim.
+    pub hidden: usize,
+    /// Vision encoder hidden dim.
+    pub vision_hidden: usize,
+    /// Vision encoder layers (ViT-300M-class towers; not in Table 5 —
+    /// fixed at 24 as in InternViT/Qwen-ViT).
+    pub vision_layers: usize,
+}
+
+impl ModelPreset {
+    /// Dense FLOPs per token for one LM forward pass, excluding the
+    /// attention O(L²) term (that term is carried separately by the cost
+    /// model's α₁ coefficient): QKV/O projections + MLP.
+    pub fn linear_flops_per_token(&self) -> f64 {
+        let h = self.hidden as f64;
+        let l = self.layers as f64;
+        // q + o full size, kv scaled by GQA groups/heads, mlp ratio 4 (up+down).
+        let kv_frac = self.kv_groups as f64 / self.heads as f64;
+        let attn_proj = 2.0 * h * h * (2.0 + 2.0 * kv_frac);
+        let mlp = 2.0 * h * (4.0 * h) * 2.0;
+        l * (attn_proj + mlp)
+    }
+
+    /// FLOPs per token² for the attention score/value matmuls (the
+    /// coefficient of the quadratic |s|² term, causal base cost).
+    pub fn attn_flops_per_token_sq(&self) -> f64 {
+        let h = self.hidden as f64;
+        let l = self.layers as f64;
+        // QK^T + PV: 2 * 2 * h per (query, key) pair, halved by causality.
+        l * 2.0 * 2.0 * h * 0.5
+    }
+
+    /// Vision-encoder FLOPs per vision-token (linear part).
+    pub fn vision_linear_flops_per_token(&self) -> f64 {
+        let h = self.vision_hidden as f64;
+        let l = self.vision_layers as f64;
+        l * (2.0 * h * h * 4.0 + 2.0 * h * (4.0 * h) * 2.0)
+    }
+
+    /// Vision-encoder quadratic FLOPs (full attention: no causal halving).
+    pub fn vision_attn_flops_per_token_sq(&self) -> f64 {
+        let h = self.vision_hidden as f64;
+        let l = self.vision_layers as f64;
+        l * 2.0 * 2.0 * h
+    }
+
+    /// Activation bytes per token (the paper's M_token in Eq. 7): the
+    /// classic Megatron accounting of ~34·h bytes per token per layer
+    /// (residual + attention + MLP activations, mixed precision, flash
+    /// attention removing the L² term) — see Korthikanti et al. 2022.
+    pub fn act_bytes_per_token(&self) -> f64 {
+        34.0 * self.hidden as f64 * self.layers as f64
+    }
+
+    /// Model-state bytes per rank under ZeRO-3 over `n_ranks` (Eq. 7's
+    /// M_ms, constant per rank): params + grads + Adam moments in mixed
+    /// precision = 16 bytes/param, sharded.
+    pub fn model_state_bytes(&self, zero_shards: usize) -> f64 {
+        16.0 * self.params_b * 1e9 / zero_shards.max(1) as f64
+    }
+}
+
+/// All six evaluated models (paper Table 5).
+pub static PRESETS: Lazy<Vec<ModelPreset>> = Lazy::new(|| {
+    vec![
+        ModelPreset {
+            name: "InternVL3-2B",
+            family: "InternVL3",
+            params_b: 2.0,
+            layers: 28,
+            heads: 12,
+            kv_groups: 2,
+            hidden: 1536,
+            vision_hidden: 1024,
+            vision_layers: 24,
+        },
+        ModelPreset {
+            name: "InternVL2.5-4B",
+            family: "InternVL3",
+            params_b: 4.0,
+            layers: 36,
+            heads: 16,
+            kv_groups: 8,
+            hidden: 2048,
+            vision_hidden: 1024,
+            vision_layers: 24,
+        },
+        ModelPreset {
+            name: "InternVL3-8B",
+            family: "InternVL3",
+            params_b: 8.0,
+            layers: 28,
+            heads: 28,
+            kv_groups: 4,
+            hidden: 3584,
+            vision_hidden: 1024,
+            vision_layers: 24,
+        },
+        ModelPreset {
+            name: "Qwen3VL-2B",
+            family: "Qwen3VL",
+            params_b: 2.0,
+            layers: 28,
+            heads: 16,
+            kv_groups: 8,
+            hidden: 2048,
+            vision_hidden: 1024,
+            vision_layers: 24,
+        },
+        ModelPreset {
+            name: "Qwen3VL-4B",
+            family: "Qwen3VL",
+            params_b: 4.0,
+            layers: 36,
+            heads: 32,
+            kv_groups: 8,
+            hidden: 2560,
+            vision_hidden: 1024,
+            vision_layers: 24,
+        },
+        ModelPreset {
+            name: "Qwen3VL-8B",
+            family: "Qwen3VL",
+            params_b: 8.0,
+            layers: 36,
+            heads: 32,
+            kv_groups: 8,
+            hidden: 4096,
+            vision_hidden: 1152,
+            vision_layers: 24,
+        },
+    ]
+});
+
+/// Look up a preset by (case-insensitive) name.
+pub fn by_name(name: &str) -> Option<ModelPreset> {
+    let lower = name.to_lowercase();
+    PRESETS
+        .iter()
+        .find(|p| p.name.to_lowercase() == lower)
+        .cloned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn six_presets_match_table5() {
+        assert_eq!(PRESETS.len(), 6);
+        let q8 = by_name("Qwen3VL-8B").unwrap();
+        assert_eq!(q8.layers, 36);
+        assert_eq!(q8.heads, 32);
+        assert_eq!(q8.kv_groups, 8);
+        assert_eq!(q8.hidden, 4096);
+        assert_eq!(q8.vision_hidden, 1152);
+        let i2 = by_name("internvl3-2b").unwrap();
+        assert_eq!(i2.hidden, 1536);
+        assert_eq!(i2.kv_groups, 2);
+    }
+
+    #[test]
+    fn flops_scale_with_model_size() {
+        let small = by_name("InternVL3-2B").unwrap();
+        let big = by_name("InternVL3-8B").unwrap();
+        assert!(big.linear_flops_per_token() > 3.0 * small.linear_flops_per_token());
+        assert!(big.attn_flops_per_token_sq() > small.attn_flops_per_token_sq());
+    }
+
+    #[test]
+    fn unknown_name_is_none() {
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn memory_model_sane() {
+        let m = by_name("InternVL3-8B").unwrap();
+        // 8B params × 16 B sharded 64 ways = 2 GB/rank.
+        let per_rank = m.model_state_bytes(64);
+        assert!((per_rank - 2e9).abs() < 1e8);
+        // Activation bytes/token positive and grows with hidden.
+        assert!(m.act_bytes_per_token() > by_name("InternVL3-2B").unwrap().act_bytes_per_token());
+    }
+}

@@ -1,0 +1,199 @@
+//! The Profiler (paper §5, implementation detail 3): before training, run
+//! forward/backward passes at swept sequence lengths and CP degrees,
+//! measure execution times, and fit the functional relationship between
+//! runtime and (sequence length, degree) — i.e. the α/β coefficients of
+//! Eqs. 8–9. The scheduler then queries predictions at planning time with
+//! no further measurement.
+//!
+//! Measurement sources are abstracted behind a closure so the same fitting
+//! pipeline serves (a) REAL PJRT-CPU executions of the AOT-lowered model
+//! (see `runtime::profile`) and (b) the cluster simulator's exact model
+//! (for cluster-scale coefficient sets).
+
+use anyhow::{bail, Result};
+
+use crate::util::stats;
+
+use super::CostCoeffs;
+
+/// One profiling observation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Sample {
+    /// Total sequence length (tokens).
+    pub seq_len: u64,
+    /// (1+η)-weighted squared length — the Eq. 8 quadratic feature. For a
+    /// single sequence this is (1+η)·L².
+    pub quad: f64,
+    /// CP degree the measurement ran at.
+    pub degree: usize,
+    /// Measured wall-clock seconds.
+    pub time_s: f64,
+}
+
+impl Sample {
+    pub fn simple(seq_len: u64, eta: f64, time_s: f64) -> Sample {
+        let l = seq_len as f64;
+        Sample {
+            seq_len,
+            quad: (1.0 + eta) * l * l,
+            degree: 1,
+            time_s,
+        }
+    }
+}
+
+/// Fits Eq. 8's compute coefficients from degree-1 measurements:
+/// t = α₁·quad + α₂·L + β₁ (non-negative least squares — negative
+/// coefficients are physically meaningless and would mislead the DP).
+pub fn fit_compute(samples: &[Sample]) -> Result<CostCoeffs> {
+    fit_compute_with(samples, CostCoeffs {
+        alpha1: 0.0,
+        alpha2: 0.0,
+        beta1: 0.0,
+        alpha3: 0.0,
+        beta2: 0.0,
+        attn_frac: 0.95,
+    })
+}
+
+/// Same, but preserving the communication coefficients of `base`.
+pub fn fit_compute_with(samples: &[Sample], base: CostCoeffs) -> Result<CostCoeffs> {
+    let d1: Vec<&Sample> = samples.iter().filter(|s| s.degree == 1).collect();
+    if d1.len() < 3 {
+        bail!(
+            "need >= 3 degree-1 samples to fit (quad, linear, const), got {}",
+            d1.len()
+        );
+    }
+    let mut design = Vec::with_capacity(d1.len() * 3);
+    let mut y = Vec::with_capacity(d1.len());
+    for s in &d1 {
+        design.extend_from_slice(&[s.quad, s.seq_len as f64, 1.0]);
+        y.push(s.time_s);
+    }
+    let beta = stats::nnls(&design, d1.len(), 3, &y, 2000);
+    Ok(CostCoeffs {
+        alpha1: beta[0],
+        alpha2: beta[1],
+        beta1: beta[2],
+        ..base
+    })
+}
+
+/// Fit quality diagnostics for a coefficient set against samples.
+pub fn fit_error(coeffs: &CostCoeffs, samples: &[Sample]) -> FitReport {
+    let mut obs = Vec::new();
+    let mut pred = Vec::new();
+    for s in samples.iter().filter(|s| s.degree == 1) {
+        obs.push(s.time_s);
+        pred.push(coeffs.alpha1 * s.quad + coeffs.alpha2 * s.seq_len as f64 + coeffs.beta1);
+    }
+    FitReport {
+        mape: stats::mape(&obs, &pred),
+        r_squared: stats::r_squared(&obs, &pred),
+        n: obs.len(),
+    }
+}
+
+/// Goodness-of-fit summary.
+#[derive(Debug, Clone, Copy)]
+pub struct FitReport {
+    /// Mean absolute percentage error (%) — Table 3's metric.
+    pub mape: f64,
+    pub r_squared: f64,
+    pub n: usize,
+}
+
+/// Run a measurement sweep: `measure(seq_len)` must return wall-clock
+/// seconds for a degree-1 execution at that length, `reps` times each;
+/// the median per length enters the fit (robust to scheduler noise).
+pub fn sweep<F>(lengths: &[u64], eta: f64, reps: usize, mut measure: F) -> Vec<Sample>
+where
+    F: FnMut(u64) -> f64,
+{
+    let mut samples = Vec::with_capacity(lengths.len());
+    for &l in lengths {
+        let times: Vec<f64> = (0..reps.max(1)).map(|_| measure(l)).collect();
+        samples.push(Sample::simple(l, eta, stats::median(&times)));
+    }
+    samples
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn synth_samples(a1: f64, a2: f64, b1: f64, noise: f64, seed: u64) -> Vec<Sample> {
+        let mut rng = Rng::new(seed);
+        [128u64, 256, 384, 512, 768, 1024, 1536, 2048]
+            .iter()
+            .map(|&l| {
+                let lf = l as f64;
+                let t = a1 * lf * lf + a2 * lf + b1;
+                Sample::simple(l, 0.0, t * (1.0 + noise * rng.normal()))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn exact_fit_recovers_coefficients() {
+        let samples = synth_samples(3e-9, 2e-6, 5e-4, 0.0, 1);
+        let c = fit_compute(&samples).unwrap();
+        assert!((c.alpha1 - 3e-9).abs() / 3e-9 < 1e-6, "{c:?}");
+        assert!((c.alpha2 - 2e-6).abs() / 2e-6 < 1e-4, "{c:?}");
+        assert!((c.beta1 - 5e-4).abs() / 5e-4 < 1e-2, "{c:?}");
+    }
+
+    #[test]
+    fn noisy_fit_stays_close_and_reports_error() {
+        let samples = synth_samples(3e-9, 2e-6, 5e-4, 0.03, 2);
+        let c = fit_compute(&samples).unwrap();
+        assert!((c.alpha1 - 3e-9).abs() / 3e-9 < 0.15, "{c:?}");
+        let report = fit_error(&c, &samples);
+        assert!(report.mape < 8.0, "paper-level error bound: {report:?}");
+        assert!(report.r_squared > 0.99);
+    }
+
+    #[test]
+    fn too_few_samples_is_error() {
+        let samples = synth_samples(1e-9, 1e-6, 1e-4, 0.0, 3);
+        assert!(fit_compute(&samples[..2]).is_err());
+    }
+
+    #[test]
+    fn coefficients_never_negative() {
+        // Pathological data sloping downward: NNLS must clamp.
+        let samples = vec![
+            Sample::simple(128, 0.0, 1.0),
+            Sample::simple(256, 0.0, 0.8),
+            Sample::simple(512, 0.0, 0.6),
+            Sample::simple(1024, 0.0, 0.5),
+        ];
+        let c = fit_compute(&samples).unwrap();
+        assert!(c.alpha1 >= 0.0 && c.alpha2 >= 0.0 && c.beta1 >= 0.0);
+    }
+
+    #[test]
+    fn sweep_takes_medians() {
+        let mut call = 0usize;
+        let samples = sweep(&[100, 200], 0.0, 3, |l| {
+            call += 1;
+            // One outlier per length; median suppresses it.
+            if call % 3 == 0 {
+                1000.0
+            } else {
+                l as f64
+            }
+        });
+        assert_eq!(samples.len(), 2);
+        assert_eq!(samples[0].time_s, 100.0);
+        assert_eq!(samples[1].time_s, 200.0);
+    }
+
+    #[test]
+    fn eta_enters_quad_feature() {
+        let s = Sample::simple(100, 1.0, 0.5);
+        assert!((s.quad - 2.0 * 10_000.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,174 @@
+//! Global-batch and micro-batch structures + the micro-batch planner
+//! (step 1 of the paper's workflow, Fig. 3).
+
+use super::sequence::Sequence;
+
+/// One optimizer step's worth of sequences (paper: GBS = 512).
+#[derive(Debug, Clone)]
+pub struct GlobalBatch {
+    pub step: u64,
+    pub sequences: Vec<Sequence>,
+}
+
+impl GlobalBatch {
+    pub fn total_tokens(&self) -> u64 {
+        self.sequences.iter().map(|s| s.len()).sum()
+    }
+}
+
+/// One scheduling unit handed to the DHP scheduler: a subset of the global
+/// batch whose memory demand fits the cluster in a single wave.
+#[derive(Debug, Clone)]
+pub struct MicroBatch {
+    pub index: usize,
+    pub sequences: Vec<Sequence>,
+}
+
+impl MicroBatch {
+    pub fn total_tokens(&self) -> u64 {
+        self.sequences.iter().map(|s| s.len()).sum()
+    }
+}
+
+/// Splits a global batch into micro-batches that each fit cluster memory
+/// (paper Fig. 3 step 1).
+#[derive(Debug, Clone)]
+pub struct MicroBatchPlanner {
+    /// Model replicas in the cluster (paper's N).
+    pub replicas: usize,
+    /// Usable activation bytes per rank (E − M_ms in Eq. 3/7).
+    pub rank_act_budget: f64,
+    /// Activation bytes per token (M_token).
+    pub m_token: f64,
+    /// Fill fraction: target at most this share of cluster memory per
+    /// micro-batch so the packer has headroom (default 0.9).
+    pub fill: f64,
+}
+
+impl MicroBatchPlanner {
+    pub fn new(replicas: usize, rank_act_budget: f64, m_token: f64) -> Self {
+        MicroBatchPlanner {
+            replicas,
+            rank_act_budget,
+            m_token,
+            fill: 0.9,
+        }
+    }
+
+    /// Cluster-wide activation capacity targeted per micro-batch.
+    pub fn capacity_bytes(&self) -> f64 {
+        self.replicas as f64 * self.rank_act_budget * self.fill
+    }
+
+    /// Chunk `batch` into feasible micro-batches.
+    ///
+    /// Greedy first-fit in arrival order (preserving data order matters
+    /// for training semantics); any sequence too large for even a whole
+    /// dedicated wave is still emitted alone — the packer will then clamp
+    /// its CP degree to N and rely on the memory constraint check.
+    pub fn plan(&self, batch: &GlobalBatch) -> Vec<MicroBatch> {
+        let cap = self.capacity_bytes();
+        let mut out: Vec<MicroBatch> = Vec::new();
+        let mut current: Vec<Sequence> = Vec::new();
+        let mut used = 0.0;
+        for seq in &batch.sequences {
+            let need = seq.act_bytes(self.m_token);
+            if !current.is_empty() && used + need > cap {
+                out.push(MicroBatch {
+                    index: out.len(),
+                    sequences: std::mem::take(&mut current),
+                });
+                used = 0.0;
+            }
+            used += need;
+            current.push(seq.clone());
+        }
+        if !current.is_empty() {
+            out.push(MicroBatch {
+                index: out.len(),
+                sequences: current,
+            });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::datasets::{DatasetKind, DatasetSampler};
+
+    fn gb(seqs: Vec<Sequence>) -> GlobalBatch {
+        GlobalBatch {
+            step: 0,
+            sequences: seqs,
+        }
+    }
+
+    #[test]
+    fn single_small_batch_stays_whole() {
+        let planner = MicroBatchPlanner::new(8, 1e9, 1e3);
+        let batch = gb((0..10).map(|i| Sequence::new(i, 100, 100)).collect());
+        let mbs = planner.plan(&batch);
+        assert_eq!(mbs.len(), 1);
+        assert_eq!(mbs[0].sequences.len(), 10);
+    }
+
+    #[test]
+    fn splits_when_over_capacity() {
+        // Capacity: 2 ranks × 1000 bytes × 0.9 = 1800; each seq = 1000.
+        let planner = MicroBatchPlanner::new(2, 1000.0, 1.0);
+        let batch = gb((0..5).map(|i| Sequence::new(i, 500, 500)).collect());
+        let mbs = planner.plan(&batch);
+        assert_eq!(mbs.len(), 5); // one per micro-batch: 2×1000 > 1800
+        for (i, mb) in mbs.iter().enumerate() {
+            assert_eq!(mb.index, i);
+        }
+    }
+
+    #[test]
+    fn all_sequences_preserved_in_order() {
+        let planner = MicroBatchPlanner::new(4, 1e6, 100.0);
+        let mut sampler = DatasetSampler::new(DatasetKind::OpenVid, 11);
+        let batch = gb(sampler.sample_batch(128));
+        let mbs = planner.plan(&batch);
+        let flat: Vec<u64> = mbs
+            .iter()
+            .flat_map(|mb| mb.sequences.iter().map(|s| s.id))
+            .collect();
+        let orig: Vec<u64> = batch.sequences.iter().map(|s| s.id).collect();
+        assert_eq!(flat, orig);
+    }
+
+    #[test]
+    fn each_microbatch_fits_capacity_unless_singleton() {
+        let planner = MicroBatchPlanner::new(8, 64.0 * 1024.0, 16.0);
+        let mut sampler = DatasetSampler::new(DatasetKind::OpenVid, 13);
+        let batch = gb(sampler.sample_batch(256));
+        for mb in planner.plan(&batch) {
+            let bytes: f64 = mb
+                .sequences
+                .iter()
+                .map(|s| s.act_bytes(planner.m_token))
+                .sum();
+            assert!(
+                bytes <= planner.capacity_bytes() || mb.sequences.len() == 1,
+                "over-capacity micro-batch with {} seqs",
+                mb.sequences.len()
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_sequence_emitted_alone() {
+        let planner = MicroBatchPlanner::new(2, 100.0, 1.0);
+        let batch = gb(vec![
+            Sequence::new(0, 50, 0),
+            Sequence::new(1, 100_000, 0), // way over any capacity
+            Sequence::new(2, 50, 0),
+        ]);
+        let mbs = planner.plan(&batch);
+        assert!(mbs.iter().any(|mb| mb.sequences.len() == 1
+            && mb.sequences[0].id == 1));
+    }
+}

@@ -1,0 +1,206 @@
+//! Length distributions: the statistical shapes behind paper Fig. 1.
+//!
+//! Real multimodal corpora have long-tail video-duration distributions —
+//! "most videos are under 8 seconds, while few exceed 64 seconds" (§4.1).
+//! We model durations with (mixtures of) log-normals plus a bounded
+//! uniform component, parameterized per dataset in [`super::datasets`].
+
+use crate::util::rng::Rng;
+
+/// A duration distribution in seconds.
+#[derive(Debug, Clone)]
+pub enum Distribution {
+    /// exp(N(mu, sigma)), clamped to [min_s, max_s].
+    LogNormal {
+        mu: f64,
+        sigma: f64,
+        min_s: f64,
+        max_s: f64,
+    },
+    /// Uniform in [lo, hi).
+    Uniform { lo: f64, hi: f64 },
+    /// Weighted mixture of components.
+    Mixture(Vec<(f64, Distribution)>),
+}
+
+impl Distribution {
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        match self {
+            Distribution::LogNormal {
+                mu,
+                sigma,
+                min_s,
+                max_s,
+            } => rng.lognormal(*mu, *sigma).clamp(*min_s, *max_s),
+            Distribution::Uniform { lo, hi } => rng.range_f64(*lo, *hi),
+            Distribution::Mixture(parts) => {
+                let weights: Vec<f64> = parts.iter().map(|(w, _)| *w).collect();
+                let idx = rng.weighted(&weights);
+                parts[idx].1.sample(rng)
+            }
+        }
+    }
+
+    /// Draw `n` samples.
+    pub fn sample_n(&self, rng: &mut Rng, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.sample(rng)).collect()
+    }
+}
+
+/// Histogram over fixed duration buckets, for Fig. 1-style reports.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// Bucket upper edges (seconds); the last bucket is open-ended.
+    pub edges: Vec<f64>,
+    pub counts: Vec<usize>,
+    pub total: usize,
+}
+
+impl Histogram {
+    pub fn new(edges: Vec<f64>) -> Self {
+        let n = edges.len() + 1;
+        Histogram {
+            edges,
+            counts: vec![0; n],
+            total: 0,
+        }
+    }
+
+    /// The paper's Fig. 1 buckets: 0-2, 2-4, 4-8, 8-16, 16-32, 32-64, 64+.
+    pub fn fig1_buckets() -> Self {
+        Histogram::new(vec![2.0, 4.0, 8.0, 16.0, 32.0, 64.0])
+    }
+
+    pub fn add(&mut self, x: f64) {
+        let idx = self
+            .edges
+            .iter()
+            .position(|&e| x < e)
+            .unwrap_or(self.edges.len());
+        self.counts[idx] += 1;
+        self.total += 1;
+    }
+
+    pub fn add_all(&mut self, xs: &[f64]) {
+        for &x in xs {
+            self.add(x);
+        }
+    }
+
+    /// Fraction of mass in each bucket.
+    pub fn fractions(&self) -> Vec<f64> {
+        if self.total == 0 {
+            return vec![0.0; self.counts.len()];
+        }
+        self.counts
+            .iter()
+            .map(|&c| c as f64 / self.total as f64)
+            .collect()
+    }
+
+    /// Bucket label strings ("0-2s", ..., ">64s").
+    pub fn labels(&self) -> Vec<String> {
+        let mut labels = Vec::with_capacity(self.counts.len());
+        let mut lo = 0.0;
+        for &e in &self.edges {
+            labels.push(format!("{lo:.0}-{e:.0}s"));
+            lo = e;
+        }
+        labels.push(format!(">{lo:.0}s"));
+        labels
+    }
+}
+
+/// Skewness diagnostic used in reports: mean / median. ≫ 1 ⇒ long tail.
+pub fn tail_ratio(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    let med = crate::util::stats::median(xs);
+    if med == 0.0 {
+        1.0
+    } else {
+        mean / med
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lognormal_clamped() {
+        let d = Distribution::LogNormal {
+            mu: 2.0,
+            sigma: 1.0,
+            min_s: 1.0,
+            max_s: 30.0,
+        };
+        let mut rng = Rng::new(1);
+        for x in d.sample_n(&mut rng, 5000) {
+            assert!((1.0..=30.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn mixture_hits_both_components() {
+        let d = Distribution::Mixture(vec![
+            (
+                0.5,
+                Distribution::Uniform { lo: 0.0, hi: 1.0 },
+            ),
+            (
+                0.5,
+                Distribution::Uniform {
+                    lo: 100.0,
+                    hi: 101.0,
+                },
+            ),
+        ]);
+        let mut rng = Rng::new(2);
+        let xs = d.sample_n(&mut rng, 2000);
+        let low = xs.iter().filter(|&&x| x < 1.0).count();
+        let high = xs.iter().filter(|&&x| x > 100.0).count();
+        assert!(low > 800 && high > 800, "low={low} high={high}");
+    }
+
+    #[test]
+    fn histogram_buckets() {
+        let mut h = Histogram::fig1_buckets();
+        h.add_all(&[1.0, 3.0, 5.0, 9.0, 20.0, 40.0, 100.0]);
+        assert_eq!(h.counts, vec![1, 1, 1, 1, 1, 1, 1]);
+        assert_eq!(h.total, 7);
+        assert_eq!(h.labels().len(), 7);
+        assert_eq!(h.labels()[0], "0-2s");
+        assert_eq!(h.labels()[6], ">64s");
+    }
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let mut h = Histogram::fig1_buckets();
+        let d = Distribution::LogNormal {
+            mu: 1.5,
+            sigma: 1.2,
+            min_s: 0.5,
+            max_s: 256.0,
+        };
+        let mut rng = Rng::new(3);
+        h.add_all(&d.sample_n(&mut rng, 10_000));
+        let sum: f64 = h.fractions().iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lognormal_is_long_tailed() {
+        let d = Distribution::LogNormal {
+            mu: 1.5,
+            sigma: 1.2,
+            min_s: 0.5,
+            max_s: 512.0,
+        };
+        let mut rng = Rng::new(4);
+        let xs = d.sample_n(&mut rng, 20_000);
+        assert!(tail_ratio(&xs) > 1.3, "tail ratio {}", tail_ratio(&xs));
+    }
+}

@@ -1,0 +1,14 @@
+//! Multimodal data substrate: heterogeneous sequences, the long-tail
+//! video-length distributions of the paper's three datasets (Fig. 1),
+//! global-batch / micro-batch structures, and a synthetic trainable corpus
+//! for the real end-to-end run.
+
+pub mod batch;
+pub mod corpus;
+pub mod datasets;
+pub mod distribution;
+pub mod sequence;
+
+pub use batch::{GlobalBatch, MicroBatch, MicroBatchPlanner};
+pub use datasets::{DatasetKind, DatasetSampler};
+pub use sequence::Sequence;

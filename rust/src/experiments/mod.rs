@@ -1,0 +1,119 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (§6). See DESIGN.md §4 for the experiment index.
+//!
+//! Each experiment is callable from the CLI (`dhp reproduce <id>`) and
+//! from `benches/` (which time the same code paths), and returns its rows
+//! so tests can assert the paper's qualitative shape (who wins, by
+//! roughly what factor, where crossovers fall).
+
+pub mod case_study;
+pub mod distributions;
+pub mod end_to_end;
+pub mod estimator;
+pub mod harness;
+pub mod mesh_compare;
+pub mod overhead;
+pub mod scalability;
+
+use anyhow::{bail, Result};
+
+use crate::util::cli::Args;
+
+pub use harness::{dispatch, run_policy, ExpContext, PolicySet, PolicyResult};
+
+/// `dhp reproduce <exp>` dispatcher.
+pub fn reproduce(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let run = |name: &str, args: &Args| -> Result<()> {
+        match name {
+            "fig1" => distributions::run(args),
+            "fig2" => mesh_compare::run(args),
+            "fig4" => end_to_end::run(args, crate::config::TrainStage::FrozenVision),
+            "fig5" => scalability::run(args),
+            "fig6" => end_to_end::run(args, crate::config::TrainStage::Full),
+            "tab1" => overhead::run_gbs(args),
+            "tab2" => overhead::run_npus(args),
+            "tab3" => estimator::run(args),
+            "tab4" => case_study::run(args),
+            other => bail!(
+                "unknown experiment {other:?}: expected fig1|fig2|fig4|fig5|fig6|tab1|tab2|tab3|tab4|all"
+            ),
+        }
+    };
+    if which == "all" {
+        for name in [
+            "fig1", "fig2", "tab3", "tab4", "tab1", "tab2", "fig5", "fig4",
+            "fig6",
+        ] {
+            println!("\n#### reproduce {name} ####");
+            run(name, args)?;
+        }
+        Ok(())
+    } else {
+        run(which, args)
+    }
+}
+
+/// `dhp schedule` — run the scheduler once and print the plan.
+pub fn schedule_cmd(args: &Args) -> Result<()> {
+    use crate::config::presets;
+    use crate::data::datasets::DatasetKind;
+
+    let preset = presets::by_name(args.str_or("model", "InternVL3-8B"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --model"))?;
+    let dataset = DatasetKind::by_name(args.str_or("dataset", "openvid"))?;
+    let npus = args.usize_or("npus", 32)?;
+    let gbs = args.usize_or("gbs", 32)?;
+    let seed = args.u64_or("seed", 0xD4B)?;
+
+    let mut ctx = ExpContext::new(preset, dataset, npus, crate::config::TrainStage::Full);
+    ctx.seed = seed;
+    let mut sampler = ctx.sampler();
+    let seqs = sampler.sample_batch(gbs);
+    let scheduler = ctx.dhp();
+    let schedule = scheduler.schedule(&seqs);
+    schedule.validate(&seqs, ctx.replicas())?;
+
+    let mut t = crate::report::Table::new(
+        &format!(
+            "DHP plan: {} on {} ({} replicas, {} seqs, solver {:.2} ms)",
+            ctx.preset.name,
+            dataset.name(),
+            ctx.replicas(),
+            gbs,
+            schedule.solve_time_s * 1e3
+        ),
+        &["wave", "group", "degree", "#seqs", "tokens", "est time (s)"],
+    );
+    for (wi, wave) in schedule.waves.iter().enumerate() {
+        for (gi, g) in wave.groups.iter().enumerate() {
+            t.row(vec![
+                wi.to_string(),
+                gi.to_string(),
+                g.degree.to_string(),
+                g.seq_idxs.len().to_string(),
+                format!("{:.0}", g.agg.tokens),
+                format!("{:.4}", g.est_time_s),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "degrees: {}",
+        crate::scheduler::format_degree_multiset(&schedule.degree_multiset())
+    );
+    Ok(())
+}
+
+/// Common step-count knobs for experiments (paper protocol by default,
+/// reducible for benches via --warmup/--measure).
+pub fn protocol_steps(args: &Args) -> Result<(usize, usize)> {
+    Ok((
+        args.usize_or("warmup", 2)?,
+        args.usize_or("measure", 5)?,
+    ))
+}

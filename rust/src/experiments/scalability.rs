@@ -1,0 +1,126 @@
+//! Fig. 5 — scalability: token throughput for DHP / DeepSpeed /
+//! Megatron-LM over 8, 16, 32, 64 NPUs (GBS fixed at 512).
+
+use anyhow::Result;
+
+use crate::config::presets::by_name;
+use crate::config::TrainStage;
+use crate::data::datasets::DatasetKind;
+use crate::report::Table;
+use crate::util::cli::Args;
+
+use super::harness::{run_policy, ExpContext, PolicySet};
+
+#[derive(Debug, Clone)]
+pub struct ScaleRow {
+    pub npus: usize,
+    /// k tokens/s, cluster-wide (Fig. 5's y-axis).
+    pub megatron_ktps: f64,
+    pub deepspeed_ktps: f64,
+    pub dhp_ktps: f64,
+}
+
+impl ScaleRow {
+    pub fn dhp_vs_deepspeed(&self) -> f64 {
+        self.dhp_ktps / self.deepspeed_ktps
+    }
+}
+
+pub fn compute(
+    npus_list: &[usize],
+    gbs: usize,
+    warmup: usize,
+    measure: usize,
+    seed: u64,
+) -> Vec<ScaleRow> {
+    let preset = by_name("InternVL3-8B").unwrap();
+    npus_list
+        .iter()
+        .map(|&npus| {
+            let mut ctx = ExpContext::new(
+                preset.clone(),
+                DatasetKind::OpenVid,
+                npus,
+                TrainStage::Full,
+            )
+            .with_gbs(gbs)
+            .with_steps(warmup, measure);
+            ctx.seed = seed;
+            let set = PolicySet::build(&ctx);
+            let mega = run_policy(&ctx, &set.megatron);
+            let ds = run_policy(&ctx, &set.deepspeed);
+            let dhp = run_policy(&ctx, &set.dhp);
+            ScaleRow {
+                npus,
+                megatron_ktps: mega.tokens_per_s / 1e3,
+                deepspeed_ktps: ds.tokens_per_s / 1e3,
+                dhp_ktps: dhp.tokens_per_s / 1e3,
+            }
+        })
+        .collect()
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let npus_list = args.usize_list_or("npus", &[8, 16, 32, 64])?;
+    let gbs = args.usize_or("gbs", 512)?;
+    let (warmup, measure) = super::protocol_steps(args)?;
+    let seed = args.u64_or("seed", 0xF165)?;
+    let rows = compute(&npus_list, gbs, warmup, measure, seed);
+    let mut t = Table::new(
+        &format!("Fig. 5: token throughput scaling (InternVL3-8B, OpenVid, GBS {gbs})"),
+        &[
+            "NPUs",
+            "Megatron (k tok/s)",
+            "DeepSpeed (k tok/s)",
+            "DHP (k tok/s)",
+            "DHP/DeepSpeed",
+        ],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.npus.to_string(),
+            format!("{:.1}", r.megatron_ktps),
+            format!("{:.1}", r.deepspeed_ktps),
+            format!("{:.1}", r.dhp_ktps),
+            format!("{:.2}x", r.dhp_vs_deepspeed()),
+        ]);
+    }
+    t.print();
+    if rows.len() >= 2 {
+        let first = rows.first().unwrap().dhp_vs_deepspeed();
+        let last = rows.last().unwrap().dhp_vs_deepspeed();
+        println!(
+            "DHP advantage vs DeepSpeed grows with scale: {first:.2}x @ {} NPUs \
+             -> {last:.2}x @ {} NPUs (paper: 1.02x -> 1.16x)",
+            rows.first().unwrap().npus,
+            rows.last().unwrap().npus
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_shape_holds() {
+        // Reduced protocol for test speed.
+        let rows = compute(&[8, 32], 128, 1, 2, 3);
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            // DHP is the highest-throughput policy at every scale.
+            assert!(
+                r.dhp_ktps >= r.megatron_ktps && r.dhp_ktps >= r.deepspeed_ktps,
+                "{r:?}"
+            );
+        }
+        // The relative advantage does not shrink with scale.
+        assert!(
+            rows[1].dhp_vs_deepspeed() >= rows[0].dhp_vs_deepspeed() * 0.95,
+            "{rows:?}"
+        );
+        // Cluster throughput grows with more NPUs.
+        assert!(rows[1].dhp_ktps > rows[0].dhp_ktps);
+    }
+}

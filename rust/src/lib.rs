@@ -1,0 +1,45 @@
+//! # DHP — Dynamic Hybrid Parallelism for MLLM training
+//!
+//! A from-scratch reproduction of *"DHP: Efficient Scaling of MLLM Training
+//! with Dynamic Hybrid Parallelism"* as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! * **Layer 3 (this crate)** — the coordination contribution: a
+//!   micro-batch scheduler that dynamically partitions the cluster's model
+//!   replicas into context-parallel (CP) groups of *arbitrary integer*
+//!   degree and assigns heterogeneous-length multimodal sequences to groups
+//!   to minimize makespan, via memory-aware Best-Fit-Decreasing packing
+//!   ([`scheduler::packing`]) followed by 2D dynamic programming
+//!   ([`scheduler::dp`], paper Alg. 1). Plus every substrate the paper
+//!   depends on: a cost model (Eqs. 7–10, [`cost`]), a profiler that fits
+//!   its coefficients from real PJRT executions ([`cost::profiler`]),
+//!   communication-group pooling and MPU parallel state ([`parallel`]), a
+//!   discrete-event cluster simulator ([`cluster`]), static-parallelism
+//!   baselines ([`baselines`]), and an asynchronous scheduling pipeline
+//!   ([`scheduler::pipeline`]).
+//! * **Layer 2** — a JAX MLLM (vision encoder with full attention →
+//!   connector → causal LM) lowered once, ahead of time, to HLO text
+//!   (`python/compile/`).
+//! * **Layer 1** — a Pallas flash-attention kernel called from the L2 model
+//!   (`python/compile/kernels/`).
+//!
+//! The [`runtime`] module loads the AOT artifacts via the PJRT C API (the
+//! `xla` crate) and executes them from Rust; Python never runs on the
+//! training path.
+
+pub mod baselines;
+pub mod cluster;
+pub mod config;
+pub mod cost;
+pub mod data;
+pub mod experiments;
+pub mod metrics;
+pub mod parallel;
+pub mod report;
+pub mod runtime;
+pub mod scheduler;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result type (anyhow-based, like the rest of the stack).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,7 @@
+//! `dhp` CLI — leader entrypoint: experiments, training, reports.
+
+fn main() -> anyhow::Result<()> {
+    dhp::util::logger::init();
+    let args = dhp::util::cli::Args::from_env()?;
+    dhp::report::run_cli(args)
+}

@@ -1,0 +1,102 @@
+//! Training metrics: iteration timing, token throughput, rolling
+//! aggregation with warmup exclusion (the paper's protocol: warm up 5
+//! steps, average the next 10).
+
+use crate::util::stats;
+
+/// Accumulates per-step measurements with a warmup cutoff.
+#[derive(Debug, Clone)]
+pub struct StepMetrics {
+    pub warmup_steps: usize,
+    steps_seen: usize,
+    iter_times_s: Vec<f64>,
+    tokens: Vec<u64>,
+    losses: Vec<f64>,
+}
+
+impl StepMetrics {
+    pub fn new(warmup_steps: usize) -> Self {
+        StepMetrics {
+            warmup_steps,
+            steps_seen: 0,
+            iter_times_s: Vec::new(),
+            tokens: Vec::new(),
+            losses: Vec::new(),
+        }
+    }
+
+    /// Record one step; warmup steps are counted but not aggregated.
+    pub fn record(&mut self, iter_time_s: f64, tokens: u64, loss: Option<f64>) {
+        self.steps_seen += 1;
+        if self.steps_seen <= self.warmup_steps {
+            return;
+        }
+        self.iter_times_s.push(iter_time_s);
+        self.tokens.push(tokens);
+        if let Some(l) = loss {
+            self.losses.push(l);
+        }
+    }
+
+    pub fn measured_steps(&self) -> usize {
+        self.iter_times_s.len()
+    }
+
+    /// Mean iteration time over measured steps (paper's primary metric).
+    pub fn mean_iter_time_s(&self) -> f64 {
+        stats::mean(&self.iter_times_s)
+    }
+
+    pub fn p50_iter_time_s(&self) -> f64 {
+        stats::median(&self.iter_times_s)
+    }
+
+    /// Tokens/s over the measured window.
+    pub fn throughput_tokens_per_s(&self) -> f64 {
+        let t: f64 = self.iter_times_s.iter().sum();
+        if t == 0.0 {
+            return 0.0;
+        }
+        self.tokens.iter().sum::<u64>() as f64 / t
+    }
+
+    /// Per-device throughput (the paper's token/s/device).
+    pub fn throughput_per_device(&self, devices: usize) -> f64 {
+        self.throughput_tokens_per_s() / devices.max(1) as f64
+    }
+
+    pub fn losses(&self) -> &[f64] {
+        &self.losses
+    }
+
+    pub fn last_loss(&self) -> Option<f64> {
+        self.losses.last().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_excluded() {
+        let mut m = StepMetrics::new(2);
+        m.record(100.0, 1, None); // warmup
+        m.record(100.0, 1, None); // warmup
+        m.record(2.0, 10, Some(1.0));
+        m.record(4.0, 20, Some(0.5));
+        assert_eq!(m.measured_steps(), 2);
+        assert_eq!(m.mean_iter_time_s(), 3.0);
+        assert_eq!(m.throughput_tokens_per_s(), 5.0);
+        assert_eq!(m.throughput_per_device(5), 1.0);
+        assert_eq!(m.last_loss(), Some(0.5));
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = StepMetrics::new(5);
+        assert_eq!(m.mean_iter_time_s(), 0.0);
+        assert_eq!(m.throughput_tokens_per_s(), 0.0);
+        assert!(m.last_loss().is_none());
+    }
+}

@@ -1,0 +1,106 @@
+//! Communication groups — the HCCL-group analogue the scheduler
+//! (re)configures. Creation carries a realistic one-time cost, which is
+//! what makes the [`super::pool`] worthwhile (paper §5: "creating new
+//! HCCL communication groups on the fly for each batch would significantly
+//! increase buffer overhead").
+
+/// A model-replica rank (one complete TP×PP model copy).
+pub type RankId = usize;
+
+/// What a group is used for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum GroupKind {
+    /// Ring context-parallel group (dynamically sized by DHP).
+    ContextParallel,
+    /// Data-parallel gradient synchronization group.
+    DataParallel,
+    /// Static tensor-parallel group (never reconfigured).
+    TensorParallel,
+    /// Static pipeline-parallel group (never reconfigured).
+    PipelineParallel,
+}
+
+/// An established communication group over a set of ranks.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct CommGroup {
+    pub kind: GroupKind,
+    /// Member ranks, sorted (identity of the group).
+    pub ranks: Vec<RankId>,
+    /// Creation sequence number (diagnostics).
+    pub serial: u64,
+}
+
+impl CommGroup {
+    /// Canonical identity key: kind + sorted ranks.
+    pub fn key(kind: GroupKind, mut ranks: Vec<RankId>) -> (GroupKind, Vec<RankId>) {
+        ranks.sort_unstable();
+        ranks.dedup();
+        (kind, ranks)
+    }
+
+    pub fn degree(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// Ring neighbours of `rank` inside this group: (prev, next).
+    pub fn ring_neighbours(&self, rank: RankId) -> Option<(RankId, RankId)> {
+        let idx = self.ranks.iter().position(|&r| r == rank)?;
+        let n = self.ranks.len();
+        Some((
+            self.ranks[(idx + n - 1) % n],
+            self.ranks[(idx + 1) % n],
+        ))
+    }
+
+    pub fn contains(&self, rank: RankId) -> bool {
+        self.ranks.binary_search(&rank).is_ok()
+    }
+}
+
+/// Simulated HCCL group-creation cost in seconds (buffer registration +
+/// rendezvous). Charged once per unique group; the pool amortizes it.
+pub const GROUP_CREATE_COST_S: f64 = 0.030;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn group(ranks: Vec<RankId>) -> CommGroup {
+        let (kind, ranks) = CommGroup::key(GroupKind::ContextParallel, ranks);
+        CommGroup {
+            kind,
+            ranks,
+            serial: 0,
+        }
+    }
+
+    #[test]
+    fn key_canonicalizes() {
+        let a = CommGroup::key(GroupKind::ContextParallel, vec![3, 1, 2]);
+        let b = CommGroup::key(GroupKind::ContextParallel, vec![1, 2, 3, 3]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn ring_neighbours_wrap() {
+        let g = group(vec![2, 5, 9]);
+        assert_eq!(g.ring_neighbours(2), Some((9, 5)));
+        assert_eq!(g.ring_neighbours(5), Some((2, 9)));
+        assert_eq!(g.ring_neighbours(9), Some((5, 2)));
+        assert_eq!(g.ring_neighbours(7), None);
+    }
+
+    #[test]
+    fn degree_and_contains() {
+        let g = group(vec![0, 4, 8, 12]);
+        assert_eq!(g.degree(), 4);
+        assert!(g.contains(8));
+        assert!(!g.contains(3));
+    }
+
+    #[test]
+    fn singleton_ring_is_self_loop() {
+        let g = group(vec![7]);
+        assert_eq!(g.ring_neighbours(7), Some((7, 7)));
+    }
+}

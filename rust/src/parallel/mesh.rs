@@ -1,0 +1,173 @@
+//! Device mesh: maps replica ranks to physical (node, device) slots and
+//! allocates contiguous, locality-preserving rank ranges to CP groups —
+//! a group that fits inside one node rides the fast intra-node fabric
+//! (HCCS), a group spanning nodes is bottlenecked by the inter-node link.
+
+use crate::config::ClusterConfig;
+
+use super::group::RankId;
+
+/// Physical placement of replica ranks.
+#[derive(Debug, Clone)]
+pub struct DeviceMesh {
+    pub replicas: usize,
+    pub replicas_per_node: usize,
+    pub intra_bw: f64,
+    pub inter_bw: f64,
+}
+
+impl DeviceMesh {
+    pub fn new(cluster: &ClusterConfig) -> Self {
+        DeviceMesh {
+            replicas: cluster.replicas(),
+            replicas_per_node: cluster.replicas_per_node().max(1),
+            intra_bw: cluster.intra_bw,
+            inter_bw: cluster.inter_bw,
+        }
+    }
+
+    /// Node hosting a replica rank.
+    pub fn node_of(&self, rank: RankId) -> usize {
+        rank / self.replicas_per_node
+    }
+
+    /// Does a rank set stay within one node?
+    pub fn is_intra_node(&self, ranks: &[RankId]) -> bool {
+        match ranks.first() {
+            None => true,
+            Some(&r0) => {
+                let node = self.node_of(r0);
+                ranks.iter().all(|&r| self.node_of(r) == node)
+            }
+        }
+    }
+
+    /// Effective ring P2P bandwidth for a rank set: the slowest link on
+    /// the ring (inter-node if the set crosses nodes).
+    pub fn ring_bandwidth(&self, ranks: &[RankId]) -> f64 {
+        if self.is_intra_node(ranks) {
+            self.intra_bw
+        } else {
+            self.inter_bw
+        }
+    }
+
+    /// Allocate rank blocks for groups of the given degrees,
+    /// LOCALITY-AWARE: a group that fits within one node is placed inside
+    /// a single node (riding the fast intra-node fabric); larger groups
+    /// take whole-node spans first. This mirrors what a real MPU
+    /// reconfiguration does when rebuilding HCCL rings. Returns per-group
+    /// rank vectors in the *input* order. Panics if Σ degrees > replicas.
+    pub fn allocate(&self, degrees: &[usize]) -> Vec<Vec<RankId>> {
+        let total: usize = degrees.iter().sum();
+        assert!(
+            total <= self.replicas,
+            "allocate: need {total} ranks, have {}",
+            self.replicas
+        );
+        let rpn = self.replicas_per_node;
+        let n_nodes = self.replicas.div_ceil(rpn);
+        // Free slots per node.
+        let mut free: Vec<Vec<RankId>> = (0..n_nodes)
+            .map(|node| {
+                (node * rpn..((node + 1) * rpn).min(self.replicas)).collect()
+            })
+            .collect();
+        // Place largest first (stable order for determinism).
+        let mut order: Vec<usize> = (0..degrees.len()).collect();
+        order.sort_by_key(|&i| std::cmp::Reverse(degrees[i]));
+        let mut out = vec![Vec::new(); degrees.len()];
+        for &i in &order {
+            let d = degrees[i];
+            if d <= rpn {
+                // Best fit: the node whose free count is smallest but
+                // sufficient (preserves big holes for later groups).
+                let node = free
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, f)| f.len() >= d)
+                    .min_by_key(|(_, f)| f.len())
+                    .map(|(n, _)| n);
+                if let Some(n) = node {
+                    out[i] = free[n].drain(..d).collect();
+                    continue;
+                }
+            }
+            // Node-spanning (or fragmented) group: take the emptiest
+            // nodes' slots greedily.
+            let mut need = d;
+            let mut ranks = Vec::with_capacity(d);
+            let mut node_order: Vec<usize> = (0..n_nodes).collect();
+            node_order.sort_by_key(|&n| std::cmp::Reverse(free[n].len()));
+            for n in node_order {
+                if need == 0 {
+                    break;
+                }
+                let take = need.min(free[n].len());
+                ranks.extend(free[n].drain(..take));
+                need -= take;
+            }
+            assert_eq!(need, 0, "allocator accounting bug");
+            ranks.sort_unstable();
+            out[i] = ranks;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn mesh() -> DeviceMesh {
+        DeviceMesh::new(&ClusterConfig::default()) // 8 nodes × 8
+    }
+
+    #[test]
+    fn node_mapping() {
+        let m = mesh();
+        assert_eq!(m.node_of(0), 0);
+        assert_eq!(m.node_of(7), 0);
+        assert_eq!(m.node_of(8), 1);
+        assert_eq!(m.node_of(63), 7);
+    }
+
+    #[test]
+    fn intra_vs_inter_bandwidth() {
+        let m = mesh();
+        assert_eq!(m.ring_bandwidth(&[0, 1, 2, 3]), m.intra_bw);
+        assert_eq!(m.ring_bandwidth(&[6, 7, 8]), m.inter_bw);
+        assert_eq!(m.ring_bandwidth(&[]), m.intra_bw);
+    }
+
+    #[test]
+    fn allocate_is_disjoint_and_complete() {
+        let m = mesh();
+        let groups = m.allocate(&[8, 6, 6, 4, 2, 2, 1, 1, 1, 1]);
+        let mut all: Vec<RankId> = groups.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all.len(), 32);
+        all.dedup();
+        assert_eq!(all.len(), 32, "ranks must be disjoint");
+        // Each group's size matches its degree, in input order.
+        assert_eq!(groups[0].len(), 8);
+        assert_eq!(groups[3].len(), 4);
+    }
+
+    #[test]
+    fn large_groups_get_aligned_blocks() {
+        let m = mesh();
+        let groups = m.allocate(&[2, 8]);
+        // The degree-8 group is placed first (largest-first) at offset 0:
+        // exactly one node → intra-node bandwidth.
+        assert_eq!(groups[1], (0..8).collect::<Vec<_>>());
+        assert!(m.is_intra_node(&groups[1]));
+    }
+
+    #[test]
+    #[should_panic(expected = "allocate")]
+    fn over_allocation_panics() {
+        mesh().allocate(&[60, 10]);
+    }
+}

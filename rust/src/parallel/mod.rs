@@ -1,0 +1,14 @@
+//! Parallel state management: communication groups, the group POOL
+//! (paper §5 implementation detail 1), the MPU-style parallel-state
+//! object DHP reconfigures per micro-batch, and the device mesh mapping
+//! replica ranks to physical nodes.
+
+pub mod group;
+pub mod mesh;
+pub mod mpu;
+pub mod pool;
+
+pub use group::{CommGroup, GroupKind, RankId};
+pub use mesh::DeviceMesh;
+pub use mpu::ParallelState;
+pub use pool::GroupPool;

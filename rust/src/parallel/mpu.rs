@@ -1,0 +1,152 @@
+//! MPU-style parallel state (paper §5, implementation detail 4): TP/PP
+//! stay in their static grid; DHP dynamically re-derives the CP (and
+//! implied DP) groups per micro-batch, acquiring them through the pool.
+
+use anyhow::{bail, Result};
+
+use super::group::{CommGroup, GroupKind, RankId};
+use super::mesh::DeviceMesh;
+use super::pool::{GroupPool, PoolStats};
+
+/// The live parallel state of the training job.
+#[derive(Debug)]
+pub struct ParallelState {
+    pub mesh: DeviceMesh,
+    /// Static degrees (validated, never reconfigured).
+    pub tp: usize,
+    pub pp: usize,
+    pool: GroupPool,
+    /// CP groups of the current micro-batch, in plan order.
+    current_cp: Vec<CommGroup>,
+    /// Reconfiguration count (diagnostics).
+    pub reconfigurations: u64,
+}
+
+impl ParallelState {
+    pub fn new(mesh: DeviceMesh, tp: usize, pp: usize) -> Self {
+        ParallelState {
+            mesh,
+            tp,
+            pp,
+            pool: GroupPool::new(),
+            current_cp: Vec::new(),
+            reconfigurations: 0,
+        }
+    }
+
+    /// Reconfigure the CP layout for a new micro-batch: allocate ranks
+    /// for the requested degrees and acquire (pooled) groups.
+    ///
+    /// Validates the paper's Cond. (6): Σ d_p ≤ N.
+    pub fn reconfigure_cp(&mut self, degrees: &[usize]) -> Result<&[CommGroup]> {
+        let total: usize = degrees.iter().sum();
+        if total > self.mesh.replicas {
+            bail!(
+                "plan requests {total} ranks but cluster has {}",
+                self.mesh.replicas
+            );
+        }
+        if degrees.iter().any(|&d| d == 0) {
+            bail!("zero CP degree in plan");
+        }
+        let rank_sets = self.mesh.allocate(degrees);
+        self.current_cp.clear();
+        for ranks in rank_sets {
+            let g = self
+                .pool
+                .acquire(GroupKind::ContextParallel, ranks)
+                .clone();
+            self.current_cp.push(g);
+        }
+        self.reconfigurations += 1;
+        Ok(&self.current_cp)
+    }
+
+    /// The CP group a replica rank currently belongs to (idle ranks — the
+    /// paper's implicit DP-only ranks — return None).
+    pub fn cp_group_of(&self, rank: RankId) -> Option<&CommGroup> {
+        self.current_cp.iter().find(|g| g.contains(rank))
+    }
+
+    /// Ranks not in any CP group this micro-batch (degree-1 DP workers in
+    /// the paper's framing are degree-1 CP groups; truly idle ranks only
+    /// occur when the plan under-subscribes the cluster).
+    pub fn idle_ranks(&self) -> Vec<RankId> {
+        (0..self.mesh.replicas)
+            .filter(|&r| self.cp_group_of(r).is_none())
+            .collect()
+    }
+
+    pub fn current_cp_groups(&self) -> &[CommGroup] {
+        &self.current_cp
+    }
+
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.stats()
+    }
+
+    pub fn pool_size(&self) -> usize {
+        self.pool.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn state() -> ParallelState {
+        let cluster = ClusterConfig::default().with_npus(16); // 16 replicas
+        ParallelState::new(DeviceMesh::new(&cluster), 1, 1)
+    }
+
+    #[test]
+    fn reconfigure_covers_disjoint_ranks() {
+        let mut st = state();
+        let groups = st.reconfigure_cp(&[8, 4, 2, 1, 1]).unwrap();
+        assert_eq!(groups.len(), 5);
+        let mut seen = std::collections::HashSet::new();
+        for g in groups {
+            for &r in &g.ranks {
+                assert!(seen.insert(r), "rank {r} in two groups");
+            }
+        }
+        assert_eq!(seen.len(), 16);
+        assert!(st.idle_ranks().is_empty());
+    }
+
+    #[test]
+    fn under_subscription_leaves_idle_ranks() {
+        let mut st = state();
+        st.reconfigure_cp(&[4, 4]).unwrap();
+        assert_eq!(st.idle_ranks().len(), 8);
+    }
+
+    #[test]
+    fn over_subscription_rejected() {
+        let mut st = state();
+        assert!(st.reconfigure_cp(&[10, 8]).is_err());
+        assert!(st.reconfigure_cp(&[4, 0]).is_err());
+    }
+
+    #[test]
+    fn pool_reuse_across_reconfigurations() {
+        let mut st = state();
+        st.reconfigure_cp(&[8, 4, 4]).unwrap();
+        let misses_first = st.pool_stats().misses;
+        // Same shape again: all groups come from the pool.
+        st.reconfigure_cp(&[8, 4, 4]).unwrap();
+        assert_eq!(st.pool_stats().misses, misses_first);
+        assert!(st.pool_stats().hits >= 3);
+        assert_eq!(st.reconfigurations, 2);
+    }
+
+    #[test]
+    fn rank_lookup() {
+        let mut st = state();
+        st.reconfigure_cp(&[8, 8]).unwrap();
+        let g0 = st.cp_group_of(0).unwrap();
+        assert_eq!(g0.degree(), 8);
+        assert!(st.cp_group_of(15).is_some());
+    }
+}

@@ -1,0 +1,144 @@
+//! The communication-group pool (paper §5, implementation detail 1):
+//! groups are created once, cached, and reused across batches. "In
+//! practice, the total number of unique groups required is limited, and
+//! the creation overhead becomes negligible over long training runs."
+
+use std::collections::HashMap;
+
+use super::group::{CommGroup, GroupKind, RankId, GROUP_CREATE_COST_S};
+
+/// Pool statistics (reported by Table-4-style case studies and the
+//  scalability benches).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PoolStats {
+    pub hits: u64,
+    pub misses: u64,
+    /// Total simulated seconds spent creating groups.
+    pub create_time_s: f64,
+}
+
+impl PoolStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Cache of established communication groups keyed by (kind, ranks).
+#[derive(Debug, Default)]
+pub struct GroupPool {
+    groups: HashMap<(GroupKind, Vec<RankId>), CommGroup>,
+    stats: PoolStats,
+    next_serial: u64,
+}
+
+impl GroupPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fetch-or-create a group. A pool hit is free; a miss pays the
+    /// (simulated) HCCL creation cost and registers the group.
+    pub fn acquire(&mut self, kind: GroupKind, ranks: Vec<RankId>) -> &CommGroup {
+        let key = CommGroup::key(kind, ranks);
+        if self.groups.contains_key(&key) {
+            self.stats.hits += 1;
+        } else {
+            self.stats.misses += 1;
+            self.stats.create_time_s += GROUP_CREATE_COST_S;
+            let serial = self.next_serial;
+            self.next_serial += 1;
+            let group = CommGroup {
+                kind: key.0,
+                ranks: key.1.clone(),
+                serial,
+            };
+            self.groups.insert(key.clone(), group);
+        }
+        self.groups.get(&key).unwrap()
+    }
+
+    /// Pre-create groups at training start (the paper's warm pool).
+    pub fn prewarm<I>(&mut self, entries: I)
+    where
+        I: IntoIterator<Item = (GroupKind, Vec<RankId>)>,
+    {
+        for (kind, ranks) in entries {
+            self.acquire(kind, ranks);
+        }
+        // Prewarming should not count as runtime traffic.
+        self.stats.hits = 0;
+        self.stats.misses = 0;
+    }
+
+    pub fn len(&self) -> usize {
+        self.groups.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.groups.is_empty()
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn second_acquire_is_a_hit() {
+        let mut pool = GroupPool::new();
+        pool.acquire(GroupKind::ContextParallel, vec![0, 1, 2]);
+        pool.acquire(GroupKind::ContextParallel, vec![2, 1, 0]); // same set
+        assert_eq!(pool.stats().misses, 1);
+        assert_eq!(pool.stats().hits, 1);
+        assert_eq!(pool.len(), 1);
+    }
+
+    #[test]
+    fn kind_distinguishes_groups() {
+        let mut pool = GroupPool::new();
+        pool.acquire(GroupKind::ContextParallel, vec![0, 1]);
+        pool.acquire(GroupKind::DataParallel, vec![0, 1]);
+        assert_eq!(pool.len(), 2);
+        assert_eq!(pool.stats().misses, 2);
+    }
+
+    #[test]
+    fn create_cost_accounted_once() {
+        let mut pool = GroupPool::new();
+        for _ in 0..10 {
+            pool.acquire(GroupKind::ContextParallel, vec![0, 1, 2, 3]);
+        }
+        assert!((pool.stats().create_time_s - GROUP_CREATE_COST_S).abs() < 1e-12);
+        assert!((pool.stats().hit_rate() - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prewarm_resets_counters() {
+        let mut pool = GroupPool::new();
+        pool.prewarm([
+            (GroupKind::ContextParallel, vec![0, 1]),
+            (GroupKind::ContextParallel, vec![2, 3]),
+        ]);
+        assert_eq!(pool.len(), 2);
+        assert_eq!(pool.stats().hits + pool.stats().misses, 0);
+        pool.acquire(GroupKind::ContextParallel, vec![0, 1]);
+        assert_eq!(pool.stats().hits, 1);
+    }
+
+    #[test]
+    fn serials_are_unique() {
+        let mut pool = GroupPool::new();
+        let s1 = pool.acquire(GroupKind::ContextParallel, vec![0]).serial;
+        let s2 = pool.acquire(GroupKind::ContextParallel, vec![1]).serial;
+        assert_ne!(s1, s2);
+    }
+}

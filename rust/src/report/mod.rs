@@ -1,0 +1,140 @@
+//! Report rendering (paper-style tables) and the `dhp` CLI dispatcher.
+
+use anyhow::{bail, Result};
+
+use crate::util::cli::Args;
+
+/// Fixed-width table printer for paper-style console reports.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+const USAGE: &str = "\
+dhp — Dynamic Hybrid Parallelism for MLLM training (paper reproduction)
+
+USAGE:
+    dhp <COMMAND> [OPTIONS]
+
+COMMANDS:
+    reproduce <exp>   Regenerate a paper artifact: fig1 fig2 fig4 fig5 fig6
+                      tab1 tab2 tab3 tab4, or `all`
+    models            Print the Table 5 model presets
+    schedule          Run the scheduler once on a sampled batch and print
+                      the plan (options: --dataset --npus --gbs --seed)
+    train             Real e2e training via PJRT artifacts
+                      (options: --steps --artifacts <dir> --log <file>)
+    help              Show this help
+
+OPTIONS (common):
+    --dataset <msrvtt|internvid|openvid>
+    --model <Table-5 name, e.g. InternVL3-8B>
+    --npus <n>            total NPUs (default 64)
+    --gbs <n>             global batch size (default 512)
+    --seed <n>
+    --out <file>          also write a JSON report
+";
+
+/// CLI entry point used by `main.rs`.
+pub fn run_cli(args: Args) -> Result<()> {
+    match args.command.as_deref() {
+        None | Some("help") => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some("models") => {
+            let mut t = Table::new(
+                "Table 5: models for evaluation",
+                &["Model", "#Layers", "#Heads", "#Groups", "Hidden", "VisionHidden"],
+            );
+            for p in crate::config::presets::PRESETS.iter() {
+                t.row(vec![
+                    p.name.to_string(),
+                    p.layers.to_string(),
+                    p.heads.to_string(),
+                    p.kv_groups.to_string(),
+                    p.hidden.to_string(),
+                    p.vision_hidden.to_string(),
+                ]);
+            }
+            t.print();
+            Ok(())
+        }
+        Some("schedule") => crate::experiments::schedule_cmd(&args),
+        Some("reproduce") => crate::experiments::reproduce(&args),
+        Some("train") => crate::train::train_cmd(&args),
+        Some(other) => bail!("unknown command {other:?} — try `dhp help`"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["a", "bbbb"]);
+        t.row(vec!["xx".into(), "y".into()]);
+        t.row(vec!["1".into(), "22222".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("a   bbbb"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn row_arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

@@ -1,0 +1,195 @@
+//! AOT artifact manifest: parses `artifacts/manifest.json` emitted by
+//! `python/compile/aot.py` so the Rust side knows every artifact's
+//! signature (shapes, dtypes, model config) without re-deriving them.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// What an artifact computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// `(params, vis, tok, tgt) -> (loss, grads)`
+    GradStep,
+    /// `(params, vis, tok, tgt) -> (loss,)`
+    FwdLoss,
+    /// Raw f32 parameter blob.
+    Params,
+}
+
+/// Metadata of one artifact (one manifest entry).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub kind: ArtifactKind,
+    pub param_count: usize,
+    pub batch: usize,
+    pub seq_total: usize,
+    pub seq_vision: usize,
+    pub seq_text: usize,
+    pub patch_dim: usize,
+    pub vocab: usize,
+    pub freeze_vision: bool,
+}
+
+impl ArtifactMeta {
+    fn from_json(j: &Json) -> Result<ArtifactMeta> {
+        let kind = match j.get("kind")?.as_str()? {
+            "grad_step" => ArtifactKind::GradStep,
+            "fwd_loss" => ArtifactKind::FwdLoss,
+            "params" => ArtifactKind::Params,
+            other => bail!("unknown artifact kind {other:?}"),
+        };
+        if kind == ArtifactKind::Params {
+            return Ok(ArtifactMeta {
+                kind,
+                param_count: j.get("param_count")?.as_usize()?,
+                batch: 0,
+                seq_total: 0,
+                seq_vision: 0,
+                seq_text: 0,
+                patch_dim: 0,
+                vocab: 0,
+                freeze_vision: false,
+            });
+        }
+        let config = j.get("config")?;
+        Ok(ArtifactMeta {
+            kind,
+            param_count: j.get("param_count")?.as_usize()?,
+            batch: j.get("batch")?.as_usize()?,
+            seq_total: j.get("seq_total")?.as_usize()?,
+            seq_vision: j.get("seq_vision")?.as_usize()?,
+            seq_text: j.get("seq_text")?.as_usize()?,
+            patch_dim: config.get("patch_dim")?.as_usize()?,
+            vocab: config.get("vocab")?.as_usize()?,
+            freeze_vision: j.get("freeze_vision")?.as_bool()?,
+        })
+    }
+}
+
+/// The parsed artifacts manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    entries: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts`"))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let mut entries = BTreeMap::new();
+        for (name, entry) in j.get("artifacts")?.as_obj()? {
+            entries.insert(name.clone(), ArtifactMeta::from_json(entry)?);
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            entries,
+        })
+    }
+
+    pub fn get(&self, file: &str) -> Option<&ArtifactMeta> {
+        self.entries.get(file)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+
+    /// All fwd_loss artifacts matching a name prefix, sorted by seq_total
+    /// — the Profiler's sweep set (e.g. prefix `prof_fwd_`).
+    pub fn sweep(&self, prefix: &str) -> Vec<(String, ArtifactMeta)> {
+        let mut out: Vec<(String, ArtifactMeta)> = self
+            .entries
+            .iter()
+            .filter(|(name, _)| name.starts_with(prefix))
+            .map(|(name, meta)| (name.clone(), meta.clone()))
+            .collect();
+        out.sort_by_key(|(_, m)| m.seq_total);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": {
+        "model.hlo.txt": {
+          "config": {"vocab": 512, "hidden": 64, "layers": 2, "heads": 4,
+                     "vision_hidden": 32, "vision_layers": 1,
+                     "vision_heads": 2, "patch_dim": 16, "mlp_ratio": 4},
+          "param_count": 146752, "batch": 2, "seq_total": 64,
+          "seq_vision": 16, "seq_text": 48, "freeze_vision": false,
+          "inputs": [], "kind": "grad_step", "outputs": [], "bytes": 1},
+        "prof_fwd_L256.hlo.txt": {
+          "config": {"vocab": 2048, "hidden": 256, "layers": 4, "heads": 8,
+                     "vision_hidden": 128, "vision_layers": 2,
+                     "vision_heads": 4, "patch_dim": 64, "mlp_ratio": 4},
+          "param_count": 4110080, "batch": 1, "seq_total": 256,
+          "seq_vision": 64, "seq_text": 192, "freeze_vision": false,
+          "inputs": [], "kind": "fwd_loss", "outputs": [], "bytes": 1},
+        "prof_fwd_L128.hlo.txt": {
+          "config": {"vocab": 2048, "hidden": 256, "layers": 4, "heads": 8,
+                     "vision_hidden": 128, "vision_layers": 2,
+                     "vision_heads": 4, "patch_dim": 64, "mlp_ratio": 4},
+          "param_count": 4110080, "batch": 1, "seq_total": 128,
+          "seq_vision": 32, "seq_text": 96, "freeze_vision": false,
+          "inputs": [], "kind": "fwd_loss", "outputs": [], "bytes": 1},
+        "tiny_params.f32": {"kind": "params", "param_count": 146752, "bytes": 4}
+      }
+    }"#;
+
+    #[test]
+    fn parses_entries() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        let e = m.get("model.hlo.txt").unwrap();
+        assert_eq!(e.kind, ArtifactKind::GradStep);
+        assert_eq!(e.param_count, 146752);
+        assert_eq!(e.batch, 2);
+        assert_eq!(e.seq_vision, 16);
+        assert_eq!(e.patch_dim, 16);
+        assert_eq!(e.vocab, 512);
+        assert!(m.get("missing.hlo.txt").is_none());
+    }
+
+    #[test]
+    fn params_entry_minimal() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        let p = m.get("tiny_params.f32").unwrap();
+        assert_eq!(p.kind, ArtifactKind::Params);
+        assert_eq!(p.param_count, 146752);
+    }
+
+    #[test]
+    fn sweep_sorted_by_length() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        let sweep = m.sweep("prof_fwd_");
+        assert_eq!(sweep.len(), 2);
+        assert_eq!(sweep[0].1.seq_total, 128);
+        assert_eq!(sweep[1].1.seq_total, 256);
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        // Integration: if `make artifacts` has run, the real manifest must
+        // parse and contain the canonical entries.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.get("model.hlo.txt").is_some());
+        assert!(!m.sweep("prof_fwd_").is_empty());
+    }
+}

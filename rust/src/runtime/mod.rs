@@ -1,0 +1,231 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path via
+//! the `xla` crate's PJRT C-API bindings. Python never runs here.
+//!
+//! Interchange is HLO TEXT (`HloModuleProto::from_text_file`) — the
+//! serialized-proto path is rejected by xla_extension 0.5.1 for jax ≥ 0.5
+//! modules (64-bit instruction ids). See /opt/xla-example/README.md.
+
+pub mod artifacts;
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+pub use artifacts::{ArtifactKind, ArtifactMeta, Manifest};
+
+/// A PJRT execution context (CPU plugin).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact from an artifacts directory.
+    pub fn load(&self, dir: &Path, file: &str) -> Result<LoadedModel> {
+        let manifest = Manifest::load(dir)?;
+        let meta = manifest
+            .get(file)
+            .with_context(|| format!("artifact {file:?} not in manifest"))?
+            .clone();
+        self.load_with_meta(dir, file, meta)
+    }
+
+    /// Load + compile with explicit metadata (tests, ad-hoc artifacts).
+    pub fn load_with_meta(
+        &self,
+        dir: &Path,
+        file: &str,
+        meta: ArtifactMeta,
+    ) -> Result<LoadedModel> {
+        let path = dir.join(file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {file}: {e:?}"))?;
+        log::info!(
+            "compiled {file} ({} params) in {:.1}s",
+            meta.param_count,
+            t0.elapsed().as_secs_f64()
+        );
+        Ok(LoadedModel { exe, meta })
+    }
+}
+
+/// A compiled model artifact ready for execution.
+pub struct LoadedModel {
+    exe: xla::PjRtLoadedExecutable,
+    pub meta: ArtifactMeta,
+}
+
+/// Outputs of a gradient step.
+pub struct GradOut {
+    pub loss: f32,
+    pub grads: Vec<f32>,
+}
+
+impl LoadedModel {
+    fn check_inputs(
+        &self,
+        params: &[f32],
+        vis: &[f32],
+        tok: &[i32],
+        tgt: &[i32],
+    ) -> Result<()> {
+        let m = &self.meta;
+        if params.len() != m.param_count {
+            bail!("params len {} != {}", params.len(), m.param_count);
+        }
+        let want_vis = m.batch * m.seq_vision * m.patch_dim;
+        if vis.len() != want_vis {
+            bail!("vis len {} != {}", vis.len(), want_vis);
+        }
+        let want_txt = m.batch * m.seq_text;
+        if tok.len() != want_txt || tgt.len() != want_txt {
+            bail!("tok/tgt len {}/{} != {}", tok.len(), tgt.len(), want_txt);
+        }
+        Ok(())
+    }
+
+    /// Upload inputs as device buffers.
+    ///
+    /// NOTE: this deliberately avoids `PjRtLoadedExecutable::execute`
+    /// (literal inputs): the crate's C shim leaks the input device
+    /// buffers it creates (`buffer.release()` with no matching free),
+    /// which at ~400 MB of parameters per training step OOMs the host in
+    /// minutes. `execute_b` over caller-owned `PjRtBuffer`s (freed by
+    /// their Rust `Drop`) keeps the hot loop allocation-neutral — found
+    /// and fixed during the §Perf pass (EXPERIMENTS.md).
+    fn buffers(
+        &self,
+        params: &[f32],
+        vis: &[f32],
+        tok: &[i32],
+        tgt: &[i32],
+    ) -> Result<[xla::PjRtBuffer; 4]> {
+        let m = &self.meta;
+        let client = self.exe.client();
+        let err = |e: xla::Error, what: &str| anyhow::anyhow!("{what}: {e:?}");
+        let p = client
+            .buffer_from_host_buffer(params, &[params.len()], None)
+            .map_err(|e| err(e, "params upload"))?;
+        let v = client
+            .buffer_from_host_buffer(
+                vis,
+                &[m.batch, m.seq_vision, m.patch_dim],
+                None,
+            )
+            .map_err(|e| err(e, "vis upload"))?;
+        let t = client
+            .buffer_from_host_buffer(tok, &[m.batch, m.seq_text], None)
+            .map_err(|e| err(e, "tok upload"))?;
+        let g = client
+            .buffer_from_host_buffer(tgt, &[m.batch, m.seq_text], None)
+            .map_err(|e| err(e, "tgt upload"))?;
+        Ok([p, v, t, g])
+    }
+
+    /// Execute a `grad_step` artifact: returns (loss, flat gradients).
+    pub fn grad_step(
+        &self,
+        params: &[f32],
+        vis: &[f32],
+        tok: &[i32],
+        tgt: &[i32],
+    ) -> Result<GradOut> {
+        if self.meta.kind != ArtifactKind::GradStep {
+            bail!("artifact {:?} is not a grad_step", self.meta.kind);
+        }
+        self.check_inputs(params, vis, tok, tgt)?;
+        let inputs = self.buffers(params, vis, tok, tgt)?;
+        let result = self
+            .exe
+            .execute_b::<xla::PjRtBuffer>(&inputs)
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch: {e:?}"))?;
+        let (loss_lit, grads_lit) = result
+            .to_tuple2()
+            .map_err(|e| anyhow::anyhow!("tuple2: {e:?}"))?;
+        let loss = loss_lit
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow::anyhow!("loss: {e:?}"))?;
+        let grads = grads_lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("grads: {e:?}"))?;
+        Ok(GradOut { loss, grads })
+    }
+
+    /// Execute a `fwd_loss` artifact: returns the scalar loss.
+    pub fn fwd_loss(
+        &self,
+        params: &[f32],
+        vis: &[f32],
+        tok: &[i32],
+        tgt: &[i32],
+    ) -> Result<f32> {
+        if self.meta.kind != ArtifactKind::FwdLoss {
+            bail!("artifact {:?} is not a fwd_loss", self.meta.kind);
+        }
+        self.check_inputs(params, vis, tok, tgt)?;
+        let inputs = self.buffers(params, vis, tok, tgt)?;
+        let result = self
+            .exe
+            .execute_b::<xla::PjRtBuffer>(&inputs)
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch: {e:?}"))?;
+        let loss_lit = result
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("tuple1: {e:?}"))?;
+        loss_lit
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow::anyhow!("loss: {e:?}"))
+    }
+
+    /// Wall-clock one execution (for the Profiler). Uses synthetic inputs.
+    pub fn time_execution(&self, params: &[f32]) -> Result<f64> {
+        let m = &self.meta;
+        let vis = vec![0.1f32; m.batch * m.seq_vision * m.patch_dim];
+        let tok = vec![1i32; m.batch * m.seq_text];
+        let tgt = vec![2i32; m.batch * m.seq_text];
+        let t0 = std::time::Instant::now();
+        match m.kind {
+            ArtifactKind::FwdLoss => {
+                self.fwd_loss(params, &vis, &tok, &tgt)?;
+            }
+            ArtifactKind::GradStep => {
+                self.grad_step(params, &vis, &tok, &tgt)?;
+            }
+            ArtifactKind::Params => bail!("cannot execute a params blob"),
+        }
+        Ok(t0.elapsed().as_secs_f64())
+    }
+}
+
+/// Load a raw little-endian f32 parameter file (`*_params.f32`).
+pub fn load_params(path: &Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    if bytes.len() % 4 != 0 {
+        bail!("param file size {} not a multiple of 4", bytes.len());
+    }
+    let mut out = Vec::with_capacity(bytes.len() / 4);
+    for chunk in bytes.chunks_exact(4) {
+        out.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+    }
+    Ok(out)
+}

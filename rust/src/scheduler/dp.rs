@@ -1,0 +1,360 @@
+//! Stage 2 — Optimal Resource Assignment via 2D Dynamic Programming
+//! (paper §4.3, Algorithm 1).
+//!
+//! `DP[i][j]` = minimum achievable makespan for the first `i` atomic
+//! groups using `j` ranks in total; transition
+//!
+//! ```text
+//! DP[i][j] = min over d in [d_min_i, j − Σ_{m<i} d_min_m]
+//!            of max(DP[i−1][j−d], T(G_i, d))
+//! ```
+//!
+//! with a `Path` table for backtracking. Complexity O(K′·N²) — the
+//! millisecond-scale solve the paper's Tables 1–2 measure.
+//!
+//! One deliberate refinement over the paper's pseudocode: because per-hop
+//! ring overheads make T(G, d) non-monotone in d, using *all* N ranks is
+//! not always optimal; we therefore backtrack from `argmin_j DP[K′][j]`
+//! (Cond. 6 is an inequality, Σd_p ≤ N, so this stays within the paper's
+//! constraint set and can only improve the objective).
+
+use super::packing::AtomicGroup;
+
+/// Outcome of a DP solve.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DpSolution {
+    /// Chosen CP degree per atomic group (input order).
+    pub degrees: Vec<usize>,
+    /// Predicted makespan (max per-group estimated time).
+    pub makespan_s: f64,
+    /// Total ranks used (≤ N).
+    pub ranks_used: usize,
+}
+
+/// Solve the degree-allocation problem for one wave of atomic groups.
+///
+/// * `n` — available ranks (paper's N).
+/// * `time` — T(G_i, d): estimated execution time of group `i` at degree
+///   `d` (the cost model closure; kept abstract so baselines and tests can
+///   inject their own).
+/// * `allowed` — degree admissibility filter (DHP: any integer → always
+///   true; FlexSP-style baselines: powers of two only).
+///
+/// Panics if Σ d_min > n (the wave planner guarantees feasibility).
+pub fn allocate_degrees<T, A>(
+    groups: &[AtomicGroup],
+    n: usize,
+    time: T,
+    allowed: A,
+) -> DpSolution
+where
+    T: Fn(usize, usize) -> f64,
+    A: Fn(usize) -> bool,
+{
+    let k = groups.len();
+    if k == 0 {
+        return DpSolution {
+            degrees: vec![],
+            makespan_s: 0.0,
+            ranks_used: 0,
+        };
+    }
+    // Effective minimum degrees, clamped to the cluster.
+    let d_min: Vec<usize> = groups.iter().map(|g| g.d_min.min(n).max(1)).collect();
+    // Prefix sums of d_min: prefix[i] = Σ_{m<i} d_min_m.
+    let mut prefix = vec![0usize; k + 1];
+    for i in 0..k {
+        prefix[i + 1] = prefix[i] + d_min[i];
+    }
+    assert!(
+        prefix[k] <= n,
+        "wave infeasible: sum of min degrees {} > N = {n}",
+        prefix[k]
+    );
+
+    const INF: f64 = f64::INFINITY;
+    // Flat DP + Path tables, row-major [(k+1) × (n+1)].
+    let width = n + 1;
+    let mut dp = vec![INF; (k + 1) * width];
+    let mut path = vec![0usize; (k + 1) * width];
+    dp[0] = 0.0; // DP[0][0]
+
+    for i in 1..=k {
+        let dmin_i = d_min[i - 1];
+        // Ranks that must be reserved for the remaining groups.
+        let remain: usize = prefix[k] - prefix[i];
+        let j_lo = prefix[i];
+        let j_hi = n - remain;
+        // Precompute T(G_i, d) for all candidate degrees once per group —
+        // the same value is reused across all j (perf: avoids O(N²) cost-
+        // model calls per group).
+        let d_max_global = j_hi - prefix[i - 1];
+        let mut t_of_d = vec![INF; d_max_global + 1];
+        for (d, slot) in t_of_d.iter_mut().enumerate().skip(dmin_i) {
+            if allowed(d) {
+                *slot = time(i - 1, d);
+            }
+        }
+        for j in j_lo..=j_hi {
+            let d_hi = j - prefix[i - 1];
+            let mut best = INF;
+            let mut best_d = 0;
+            for d in dmin_i..=d_hi {
+                let t = t_of_d[d];
+                if !t.is_finite() {
+                    continue;
+                }
+                let prev = dp[(i - 1) * width + (j - d)];
+                if !prev.is_finite() {
+                    continue;
+                }
+                let cost = prev.max(t);
+                if cost < best {
+                    best = cost;
+                    best_d = d;
+                }
+            }
+            dp[i * width + j] = best;
+            path[i * width + j] = best_d;
+        }
+    }
+
+    // Backtrack from the best total rank usage (see module docs).
+    let mut best_j = prefix[k];
+    for j in prefix[k]..=n {
+        if dp[k * width + j] < dp[k * width + best_j] {
+            best_j = j;
+        }
+    }
+    let makespan = dp[k * width + best_j];
+    assert!(
+        makespan.is_finite(),
+        "DP found no feasible allocation (degree filter too strict?)"
+    );
+    let mut degrees = vec![0usize; k];
+    let mut j = best_j;
+    for i in (1..=k).rev() {
+        let d = path[i * width + j];
+        degrees[i - 1] = d;
+        j -= d;
+    }
+    debug_assert_eq!(j, 0);
+    DpSolution {
+        ranks_used: degrees.iter().sum(),
+        degrees,
+        makespan_s: makespan,
+    }
+}
+
+/// Degree filter admitting every positive integer (DHP's relaxation).
+pub fn any_degree(_d: usize) -> bool {
+    true
+}
+
+/// Degree filter admitting powers of two only (Ulysses/FlexSP-style
+/// head-divisibility restriction the paper §4.1 contrasts against).
+pub fn pow2_degree(d: usize) -> bool {
+    d.is_power_of_two()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::WorkloadAgg;
+    use crate::util::quickcheck::forall;
+
+    fn mk_groups(d_mins: &[usize], works: &[f64]) -> Vec<AtomicGroup> {
+        d_mins
+            .iter()
+            .zip(works)
+            .enumerate()
+            .map(|(i, (&d, &w))| AtomicGroup {
+                seq_idxs: vec![i],
+                d_min: d,
+                mem_bytes: 0.0,
+                capacity_bytes: 1.0,
+                work_cap: 1.0,
+                agg: WorkloadAgg {
+                    quad: w,
+                    quad_base: w,
+                    tokens: w,
+                    count: 1,
+                },
+            })
+            .collect()
+    }
+
+    /// Idealized cost: perfectly divisible work, no comm penalty.
+    fn ideal(groups: &[AtomicGroup]) -> impl Fn(usize, usize) -> f64 + '_ {
+        move |i, d| groups[i].agg.quad / d as f64
+    }
+
+    #[test]
+    fn single_group_gets_all_useful_ranks() {
+        let groups = mk_groups(&[1], &[100.0]);
+        let sol = allocate_degrees(&groups, 8, ideal(&groups), any_degree);
+        assert_eq!(sol.degrees, vec![8]);
+        assert!((sol.makespan_s - 12.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn proportional_split_between_unequal_groups() {
+        // Work 300 vs 100 over 8 ranks: optimal split 6/2 (makespan 50).
+        let groups = mk_groups(&[1, 1], &[300.0, 100.0]);
+        let sol = allocate_degrees(&groups, 8, ideal(&groups), any_degree);
+        assert_eq!(sol.degrees, vec![6, 2]);
+        assert!((sol.makespan_s - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn non_power_of_two_degrees_win() {
+        // The paper's headline relaxation: with 3 equal groups on 9 ranks,
+        // DHP picks 3+3+3; a pow2-restricted solver must accept worse.
+        let groups = mk_groups(&[1, 1, 1], &[90.0, 90.0, 90.0]);
+        let dhp = allocate_degrees(&groups, 9, ideal(&groups), any_degree);
+        assert_eq!(dhp.degrees, vec![3, 3, 3]);
+        let pow2 = allocate_degrees(&groups, 9, ideal(&groups), pow2_degree);
+        assert!(pow2.makespan_s > dhp.makespan_s, "{pow2:?} vs {dhp:?}");
+    }
+
+    #[test]
+    fn respects_min_degrees() {
+        let groups = mk_groups(&[4, 2, 1], &[10.0, 10.0, 1000.0]);
+        let sol = allocate_degrees(&groups, 8, ideal(&groups), any_degree);
+        assert!(sol.degrees[0] >= 4);
+        assert!(sol.degrees[1] >= 2);
+        assert!(sol.degrees[2] >= 1);
+        assert!(sol.ranks_used <= 8);
+    }
+
+    #[test]
+    fn may_leave_ranks_idle_when_degrees_hurt() {
+        // Cost grows past d=2 (hop overheads dominate): the solver must
+        // NOT burn all ranks.
+        let groups = mk_groups(&[1], &[10.0]);
+        let time = |_i: usize, d: usize| {
+            if d <= 2 {
+                10.0 / d as f64
+            } else {
+                5.0 + (d as f64 - 2.0) * 3.0
+            }
+        };
+        let sol = allocate_degrees(&groups, 64, time, any_degree);
+        assert_eq!(sol.degrees, vec![2]);
+        assert_eq!(sol.ranks_used, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "infeasible")]
+    fn infeasible_wave_panics() {
+        let groups = mk_groups(&[8, 8], &[1.0, 1.0]);
+        allocate_degrees(&groups, 8, ideal(&groups), any_degree);
+    }
+
+    #[test]
+    fn empty_input() {
+        let sol = allocate_degrees(&[], 8, |_, _| 0.0, any_degree);
+        assert!(sol.degrees.is_empty());
+        assert_eq!(sol.makespan_s, 0.0);
+    }
+
+    #[test]
+    fn dp_beats_uniform_on_skewed_work() {
+        // Skewed workload: DP's makespan must beat the uniform static
+        // split (Fig. 2's message).
+        let works = [640.0, 80.0, 40.0, 40.0];
+        let groups = mk_groups(&[1, 1, 1, 1], &works);
+        let sol = allocate_degrees(&groups, 16, ideal(&groups), any_degree);
+        // Uniform static: 4 groups × degree 4 → makespan 640/4 = 160.
+        assert!(
+            sol.makespan_s < 160.0 * 0.7,
+            "DP {0} vs uniform 160",
+            sol.makespan_s
+        );
+    }
+
+    #[test]
+    fn property_dp_optimality_vs_bruteforce() {
+        // For small instances, the DP must match exhaustive search.
+        forall(40, 0x2DDF, |rng| {
+            let k = rng.range_usize(1, 4);
+            let n = rng.range_usize(k, 9);
+            let d_mins: Vec<usize> = (0..k).map(|_| 1).collect();
+            let works: Vec<f64> =
+                (0..k).map(|_| rng.range_f64(1.0, 100.0)).collect();
+            let groups = mk_groups(&d_mins, &works);
+            // Non-trivial cost: parallel speedup + per-degree overhead.
+            let time =
+                |i: usize, d: usize| works[i] / d as f64 + 0.7 * d as f64;
+            let sol = allocate_degrees(&groups, n, time, any_degree);
+
+            // Brute force over all degree vectors with Σd ≤ n.
+            fn rec(
+                k: usize,
+                n_left: usize,
+                idx: usize,
+                cur: f64,
+                time: &dyn Fn(usize, usize) -> f64,
+                best: &mut f64,
+            ) {
+                if idx == k {
+                    *best = best.min(cur);
+                    return;
+                }
+                let reserve = k - idx - 1; // 1 rank per remaining group
+                for d in 1..=(n_left - reserve) {
+                    rec(k, n_left - d, idx + 1, cur.max(time(idx, d)), time, best);
+                }
+            }
+            let mut best = f64::INFINITY;
+            rec(k, n, 0, 0.0, &time, &mut best);
+            if (sol.makespan_s - best).abs() > 1e-9 {
+                return Err(format!(
+                    "dp {} != brute {} (works {works:?}, n={n})",
+                    sol.makespan_s, best
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_solution_always_valid() {
+        forall(50, 0xA110C, |rng| {
+            let k = rng.range_usize(1, 12);
+            let n = rng.range_usize(12, 65);
+            let d_mins: Vec<usize> =
+                (0..k).map(|_| rng.range_usize(1, 4)).collect();
+            if d_mins.iter().sum::<usize>() > n {
+                return Ok(()); // infeasible waves are the planner's job
+            }
+            let works: Vec<f64> =
+                (0..k).map(|_| rng.range_f64(1.0, 1000.0)).collect();
+            let groups = mk_groups(&d_mins, &works);
+            let time = |i: usize, d: usize| works[i] / d as f64 + d as f64;
+            let sol = allocate_degrees(&groups, n, time, any_degree);
+            if sol.degrees.len() != k {
+                return Err("wrong arity".into());
+            }
+            if sol.ranks_used > n {
+                return Err(format!("over budget: {} > {n}", sol.ranks_used));
+            }
+            for (i, &d) in sol.degrees.iter().enumerate() {
+                if d < d_mins[i] {
+                    return Err(format!("d[{i}]={d} < dmin {}", d_mins[i]));
+                }
+            }
+            // Makespan consistency.
+            let ms = sol
+                .degrees
+                .iter()
+                .enumerate()
+                .map(|(i, &d)| time(i, d))
+                .fold(0.0f64, f64::max);
+            if (ms - sol.makespan_s).abs() > 1e-9 {
+                return Err(format!("makespan mismatch {ms} vs {}", sol.makespan_s));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,153 @@
+//! Plan types: the output of the DHP scheduler for one micro-batch.
+
+use crate::cost::WorkloadAgg;
+use crate::data::sequence::Sequence;
+
+/// One planned CP group: a degree and the sequences assigned to it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlannedGroup {
+    /// CP degree d_p (any positive integer — the paper's relaxation).
+    pub degree: usize,
+    /// Indices into the micro-batch's sequence list.
+    pub seq_idxs: Vec<usize>,
+    /// Cached workload aggregates of the assigned sequences.
+    pub agg: WorkloadAgg,
+    /// Estimated execution time under the cost model (filled by the
+    /// solver; the simulator computes its own ground truth).
+    pub est_time_s: f64,
+}
+
+/// A complete parallelism plan for one micro-batch (paper Eq. 2's (A, C)).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Plan {
+    pub groups: Vec<PlannedGroup>,
+    /// Estimated makespan = max over groups of est_time_s.
+    pub est_makespan_s: f64,
+    /// Wall-clock the solver spent producing this plan (Tables 1–2's
+    /// "Solver Time").
+    pub solve_time_s: f64,
+}
+
+impl Plan {
+    /// Total ranks consumed (must satisfy Eq. 6: ≤ N).
+    pub fn total_degree(&self) -> usize {
+        self.groups.iter().map(|g| g.degree).sum()
+    }
+
+    /// Degrees in descending order (Table 4 presentation).
+    pub fn degree_multiset(&self) -> Vec<usize> {
+        let mut d: Vec<usize> = self.groups.iter().map(|g| g.degree).collect();
+        d.sort_unstable_by(|a, b| b.cmp(a));
+        d
+    }
+
+    /// Validate the paper's constraints (4)–(6) against a micro-batch.
+    pub fn validate(&self, seqs: &[Sequence], replicas: usize) -> anyhow::Result<()> {
+        use anyhow::bail;
+        if self.total_degree() > replicas {
+            bail!(
+                "Cond. (6) violated: total degree {} > N = {replicas}",
+                self.total_degree()
+            );
+        }
+        let mut seen = vec![0usize; seqs.len()];
+        for g in &self.groups {
+            if g.degree == 0 {
+                bail!("zero-degree group");
+            }
+            for &i in &g.seq_idxs {
+                if i >= seqs.len() {
+                    bail!("sequence index {i} out of range");
+                }
+                seen[i] += 1;
+            }
+        }
+        for (i, &count) in seen.iter().enumerate() {
+            if count != 1 {
+                bail!(
+                    "Cond. (5) violated: sequence {i} assigned {count} times"
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Table-4-style compact rendering: "⟨8⟩×1 ⟨6⟩×2 ⟨4⟩×1 ⟨2⟩×2 ⟨1⟩×4".
+pub fn format_degree_multiset(degrees: &[usize]) -> String {
+    let mut out = String::new();
+    let mut i = 0;
+    while i < degrees.len() {
+        let d = degrees[i];
+        let mut count = 1;
+        while i + count < degrees.len() && degrees[i + count] == d {
+            count += 1;
+        }
+        if !out.is_empty() {
+            out.push(' ');
+        }
+        out.push_str(&format!("<{d}>x{count}"));
+        i += count;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(degrees_and_seqs: &[(usize, &[usize])]) -> Plan {
+        Plan {
+            groups: degrees_and_seqs
+                .iter()
+                .map(|&(d, idxs)| PlannedGroup {
+                    degree: d,
+                    seq_idxs: idxs.to_vec(),
+                    agg: WorkloadAgg::default(),
+                    est_time_s: 0.0,
+                })
+                .collect(),
+            est_makespan_s: 0.0,
+            solve_time_s: 0.0,
+        }
+    }
+
+    fn seqs(n: usize) -> Vec<Sequence> {
+        (0..n).map(|i| Sequence::new(i as u64, 10, 10)).collect()
+    }
+
+    #[test]
+    fn valid_plan_passes() {
+        let p = plan(&[(4, &[0, 2]), (2, &[1]), (1, &[3])]);
+        p.validate(&seqs(4), 8).unwrap();
+        assert_eq!(p.total_degree(), 7);
+        assert_eq!(p.degree_multiset(), vec![4, 2, 1]);
+    }
+
+    #[test]
+    fn over_budget_rejected() {
+        let p = plan(&[(6, &[0]), (4, &[1])]);
+        assert!(p.validate(&seqs(2), 8).is_err());
+    }
+
+    #[test]
+    fn duplicate_assignment_rejected() {
+        let p = plan(&[(2, &[0, 1]), (2, &[1])]);
+        assert!(p.validate(&seqs(2), 8).is_err());
+    }
+
+    #[test]
+    fn missing_assignment_rejected() {
+        let p = plan(&[(2, &[0])]);
+        assert!(p.validate(&seqs(2), 8).is_err());
+    }
+
+    #[test]
+    fn degree_formatting_matches_table4_style() {
+        assert_eq!(
+            format_degree_multiset(&[8, 6, 6, 4, 2, 2, 1, 1, 1, 1]),
+            "<8>x1 <6>x2 <4>x1 <2>x2 <1>x4"
+        );
+        assert_eq!(format_degree_multiset(&[]), "");
+    }
+}

@@ -1,0 +1,189 @@
+//! Adam optimizer over the flat f32 parameter vector.
+//!
+//! Layer 3 owns optimizer state (the AOT artifact returns raw gradients) —
+//! this keeps the PJRT artifact signature trivial and puts the optimizer
+//! where the coordinator can shard/offload it.
+
+/// Adam hyper-parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct AdamConfig {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    /// Global-norm gradient clipping (0 = off).
+    pub grad_clip: f32,
+}
+
+impl Default for AdamConfig {
+    fn default() -> Self {
+        AdamConfig {
+            lr: 1e-3,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            grad_clip: 1.0,
+        }
+    }
+}
+
+/// Optimizer state (first/second moments + step count).
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub cfg: AdamConfig,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(param_count: usize, cfg: AdamConfig) -> Self {
+        Adam {
+            cfg,
+            m: vec![0.0; param_count],
+            v: vec![0.0; param_count],
+            t: 0,
+        }
+    }
+
+    pub fn steps_taken(&self) -> u64 {
+        self.t
+    }
+
+    /// Borrow the first/second moment vectors (checkpointing).
+    pub fn moments(&self) -> (&[f32], &[f32]) {
+        (&self.m, &self.v)
+    }
+
+    /// Rebuild an optimizer from checkpointed state.
+    pub fn from_state(cfg: AdamConfig, m: Vec<f32>, v: Vec<f32>, t: u64) -> Adam {
+        assert_eq!(m.len(), v.len());
+        Adam { cfg, m, v, t }
+    }
+
+    /// Global L2 norm of a gradient vector.
+    pub fn grad_norm(grads: &[f32]) -> f32 {
+        grads.iter().map(|g| (*g as f64) * (*g as f64)).sum::<f64>().sqrt() as f32
+    }
+
+    /// One optimizer step, in place. Returns the (pre-clip) grad norm.
+    pub fn step(&mut self, params: &mut [f32], grads: &[f32]) -> f32 {
+        assert_eq!(params.len(), self.m.len(), "param arity");
+        assert_eq!(grads.len(), self.m.len(), "grad arity");
+        self.t += 1;
+        let c = self.cfg;
+        let norm = Self::grad_norm(grads);
+        let scale = if c.grad_clip > 0.0 && norm > c.grad_clip {
+            c.grad_clip / norm
+        } else {
+            1.0
+        };
+        // Bias corrections hoisted out of the loop.
+        let bc1 = 1.0 - c.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - c.beta2.powi(self.t as i32);
+        let lr_t = c.lr * bc2.sqrt() / bc1;
+        // Zip-based loop: no bounds checks, auto-vectorizes (the §Perf
+        // pass measured ~4× over the naive indexed loop at 100M params).
+        let (b1, b2, wd, eps) = (c.beta1, c.beta2, c.weight_decay, c.eps);
+        for ((p, &gr), (m, v)) in params
+            .iter_mut()
+            .zip(grads.iter())
+            .zip(self.m.iter_mut().zip(self.v.iter_mut()))
+        {
+            let g = gr * scale + wd * *p;
+            let m_new = b1 * *m + (1.0 - b1) * g;
+            let v_new = b2 * *v + (1.0 - b2) * g * g;
+            *m = m_new;
+            *v = v_new;
+            *p -= lr_t * m_new / (v_new.sqrt() + eps);
+        }
+        norm
+    }
+}
+
+/// Average several gradient vectors in place into the first one — the
+/// coordinator-side DP gradient reduction for multi-group steps.
+pub fn average_grads(acc: &mut [f32], others: &[Vec<f32>]) {
+    let n = (others.len() + 1) as f32;
+    for other in others {
+        assert_eq!(other.len(), acc.len());
+    }
+    for i in 0..acc.len() {
+        let mut s = acc[i];
+        for other in others {
+            s += other[i];
+        }
+        acc[i] = s / n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimizes_quadratic() {
+        // f(x) = Σ (x_i − target_i)², gradient 2(x − target).
+        let target = [3.0f32, -2.0, 0.5, 10.0];
+        let mut x = vec![0.0f32; 4];
+        let mut opt = Adam::new(
+            4,
+            AdamConfig {
+                lr: 0.05,
+                grad_clip: 0.0,
+                ..Default::default()
+            },
+        );
+        for _ in 0..2000 {
+            let grads: Vec<f32> =
+                x.iter().zip(&target).map(|(xi, ti)| 2.0 * (xi - ti)).collect();
+            opt.step(&mut x, &grads);
+        }
+        for (xi, ti) in x.iter().zip(&target) {
+            assert!((xi - ti).abs() < 0.05, "{xi} vs {ti}");
+        }
+    }
+
+    #[test]
+    fn grad_clip_bounds_update() {
+        let mut x = vec![0.0f32; 2];
+        let mut opt = Adam::new(2, AdamConfig::default()); // clip = 1.0
+        let norm = opt.step(&mut x, &[1e6, 1e6]);
+        assert!(norm > 1e5);
+        // First-step Adam update magnitude is ≤ lr regardless of raw grad.
+        assert!(x.iter().all(|&v| v.abs() <= opt.cfg.lr * 1.01), "{x:?}");
+    }
+
+    #[test]
+    fn step_count_and_determinism() {
+        let mut a = Adam::new(3, AdamConfig::default());
+        let mut b = Adam::new(3, AdamConfig::default());
+        let mut xa = vec![1.0f32, 2.0, 3.0];
+        let mut xb = xa.clone();
+        for _ in 0..5 {
+            a.step(&mut xa, &[0.1, -0.2, 0.3]);
+            b.step(&mut xb, &[0.1, -0.2, 0.3]);
+        }
+        assert_eq!(xa, xb);
+        assert_eq!(a.steps_taken(), 5);
+    }
+
+    #[test]
+    fn average_grads_means() {
+        let mut a = vec![1.0f32, 2.0];
+        let b = vec![3.0f32, 4.0];
+        let c = vec![5.0f32, 6.0];
+        average_grads(&mut a, &[b, c]);
+        assert_eq!(a, vec![3.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_mismatch_panics() {
+        let mut opt = Adam::new(2, AdamConfig::default());
+        let mut x = vec![0.0f32; 3];
+        opt.step(&mut x, &[0.0, 0.0, 0.0]);
+    }
+}

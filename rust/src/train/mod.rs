@@ -1,0 +1,68 @@
+//! Training drivers: the real PJRT trainer ([`trainer`]) with Rust-side
+//! Adam ([`adam`]), and the `dhp train` CLI command.
+
+pub mod adam;
+pub mod checkpoint;
+pub mod trainer;
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::util::cli::Args;
+
+pub use adam::{average_grads, Adam, AdamConfig};
+pub use checkpoint::Checkpoint;
+pub use trainer::{run, StepRecord, TrainReport, TrainerConfig};
+
+/// `dhp train` — real end-to-end training on the AOT artifacts.
+pub fn train_cmd(args: &Args) -> Result<()> {
+    let preset = args.str_or("preset", "e2e");
+    let (artifact, params_file) = match preset {
+        "tiny" => ("model.hlo.txt", "tiny_params.f32"),
+        "e2e" => ("e2e_grad.hlo.txt", "e2e_params.f32"),
+        other => anyhow::bail!("--preset must be tiny|e2e, got {other:?}"),
+    };
+    let cfg = TrainerConfig {
+        artifacts_dir: PathBuf::from(args.str_or("artifacts", "artifacts")),
+        artifact: artifact.into(),
+        params_file: params_file.into(),
+        steps: args.usize_or("steps", 200)?,
+        adam: AdamConfig {
+            lr: args.f64_or("lr", 3e-4)? as f32,
+            ..Default::default()
+        },
+        seed: args.u64_or("seed", 0xE2E)?,
+        log_path: args.get("log").map(PathBuf::from),
+        sim_npus: args.usize_or("sim-npus", 8)?,
+    };
+    log::info!(
+        "training {} for {} steps (params from {})",
+        cfg.artifact,
+        cfg.steps,
+        cfg.params_file
+    );
+    let report = run(&cfg)?;
+    println!(
+        "trained {} params for {} steps in {:.1}s",
+        report.param_count,
+        report.records.len(),
+        report.total_time_s
+    );
+    println!(
+        "loss: first {:.4} -> last {:.4} (tail-10 mean {:.4})",
+        report.first_loss(),
+        report.last_loss(),
+        report.tail_mean_loss(10)
+    );
+    let hidden = report
+        .records
+        .iter()
+        .filter(|r| r.schedule_latency_s < r.step_time_s)
+        .count();
+    println!(
+        "scheduling hidden behind compute in {hidden}/{} steps",
+        report.records.len()
+    );
+    Ok(())
+}

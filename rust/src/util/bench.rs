@@ -1,0 +1,108 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use `harness = false` and drive this: warmup,
+//! timed repetitions, mean/min/stddev reporting, plus a `BenchReport`
+//! collector that renders a criterion-like summary table.
+
+use std::time::Instant;
+
+use super::stats;
+
+/// Result of timing one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub name: String,
+    pub reps: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub std_s: f64,
+}
+
+impl Timing {
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<44} {:>10.3} ms/iter (min {:>10.3}, sd {:>8.3}, n={})",
+            self.name,
+            self.mean_s * 1e3,
+            self.min_s * 1e3,
+            self.std_s * 1e3,
+            self.reps
+        )
+    }
+}
+
+/// Time `f` with `warmup` discarded runs followed by `reps` measured runs.
+pub fn time<F: FnMut()>(name: &str, warmup: usize, reps: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Timing {
+        name: name.to_string(),
+        reps: samples.len(),
+        mean_s: stats::mean(&samples),
+        min_s: samples.iter().cloned().fold(f64::MAX, f64::min),
+        std_s: stats::std_dev(&samples),
+    }
+}
+
+/// Collects timings for a bench binary and prints the final block.
+#[derive(Debug, Default)]
+pub struct BenchReport {
+    pub title: String,
+    timings: Vec<Timing>,
+}
+
+impl BenchReport {
+    pub fn new(title: &str) -> Self {
+        BenchReport {
+            title: title.to_string(),
+            timings: Vec::new(),
+        }
+    }
+
+    pub fn bench<F: FnMut()>(&mut self, name: &str, warmup: usize, reps: usize, f: F) {
+        let t = time(name, warmup, reps, f);
+        println!("  {}", t.summary());
+        self.timings.push(t);
+    }
+
+    pub fn finish(self) {
+        println!(
+            "[bench] {}: {} cases complete",
+            self.title,
+            self.timings.len()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_measures_something() {
+        let t = time("spin", 1, 5, || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert_eq!(t.reps, 5);
+        assert!(t.mean_s > 0.0);
+        assert!(t.min_s <= t.mean_s);
+    }
+
+    #[test]
+    fn report_collects() {
+        let mut r = BenchReport::new("unit");
+        r.bench("noop", 0, 2, || {});
+        r.finish();
+    }
+}

@@ -1,0 +1,182 @@
+//! A small command-line argument parser (clap is unavailable offline).
+//!
+//! Supports `program <subcommand> [--flag] [--key value] [--key=value]
+//! [positional...]` with typed accessors and defaults.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed arguments for one invocation.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// The subcommand (first non-flag token), if any.
+    pub command: Option<String>,
+    /// `--key value` and `--key=value` pairs; bare `--flag` maps to "true".
+    pub options: BTreeMap<String, String>,
+    /// Remaining positional arguments (after the subcommand).
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if stripped.is_empty() {
+                    // `--` terminator: rest is positional.
+                    args.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else {
+                    // Lookahead: next token is the value unless it is
+                    // another flag (then this is a boolean switch).
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            args.options.insert(stripped.to_string(), v);
+                        }
+                        _ => {
+                            args.options
+                                .insert(stripped.to_string(), "true".into());
+                        }
+                    }
+                }
+            } else if tok.starts_with('-') && tok.len() > 1 {
+                bail!("short flags are not supported: {tok}");
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    /// Comma-separated list of integers, e.g. `--npus 8,16,32`.
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .with_context(|| format!("--{key}: bad element {s:?}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("reproduce fig5 --npus 8,16 --seed=42 --verbose");
+        assert_eq!(a.command.as_deref(), Some("reproduce"));
+        assert_eq!(a.positional, vec!["fig5"]);
+        assert_eq!(a.get("npus"), Some("8,16"));
+        assert_eq!(a.get("seed"), Some("42"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn typed_accessors_and_defaults() {
+        let a = parse("train --steps 100 --lr 0.001");
+        assert_eq!(a.usize_or("steps", 5).unwrap(), 100);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+        assert!((a.f64_or("lr", 0.1).unwrap() - 0.001).abs() < 1e-12);
+        assert_eq!(
+            a.usize_list_or("npus", &[8, 64]).unwrap(),
+            vec![8, 64]
+        );
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse("x --npus 8,16,32,64");
+        assert_eq!(
+            a.usize_list_or("npus", &[]).unwrap(),
+            vec![8, 16, 32, 64]
+        );
+    }
+
+    #[test]
+    fn bool_flag_before_flag() {
+        let a = parse("run --fast --steps 3");
+        assert!(a.flag("fast"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn bad_integer_is_error() {
+        let a = parse("run --steps abc");
+        assert!(a.usize_or("steps", 0).is_err());
+    }
+
+    #[test]
+    fn double_dash_terminator() {
+        let a = parse("run -- --not-a-flag pos");
+        assert_eq!(a.positional, vec!["--not-a-flag", "pos"]);
+    }
+
+    #[test]
+    fn short_flags_rejected() {
+        assert!(Args::parse(["-x".to_string()]).is_err());
+    }
+}

@@ -1,0 +1,63 @@
+//! Minimal `log`-crate backend (no env_logger offline): timestamped,
+//! level-filtered stderr logging, controlled by `DHP_LOG`
+//! (`error|warn|info|debug|trace`, default `info`).
+
+use std::sync::Once;
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Metadata, Record};
+use once_cell::sync::Lazy;
+
+static START: Lazy<Instant> = Lazy::new(Instant::now);
+static INIT: Once = Once::new();
+
+struct DhpLogger {
+    max: Level,
+}
+
+impl log::Log for DhpLogger {
+    fn enabled(&self, meta: &Metadata) -> bool {
+        meta.level() <= self.max
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = START.elapsed().as_secs_f64();
+        eprintln!(
+            "[{t:9.3}s {:5} {}] {}",
+            record.level(),
+            record.target().split("::").last().unwrap_or(""),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger once (idempotent). Reads `DHP_LOG` for the level.
+pub fn init() {
+    INIT.call_once(|| {
+        let level = match std::env::var("DHP_LOG").as_deref() {
+            Ok("error") => Level::Error,
+            Ok("warn") => Level::Warn,
+            Ok("debug") => Level::Debug,
+            Ok("trace") => Level::Trace,
+            _ => Level::Info,
+        };
+        Lazy::force(&START);
+        let _ = log::set_boxed_logger(Box::new(DhpLogger { max: level }));
+        log::set_max_level(LevelFilter::Trace);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logger smoke");
+    }
+}

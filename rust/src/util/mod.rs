@@ -1,0 +1,12 @@
+//! Foundation utilities built in-repo (the offline environment provides no
+//! clap / serde / criterion / proptest — these substrates replace them).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logger;
+pub mod quickcheck;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;

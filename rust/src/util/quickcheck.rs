@@ -1,0 +1,100 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! Usage:
+//! ```no_run
+//! use dhp::util::quickcheck::forall;
+//! forall(100, 0xC0FFEE, |rng| {
+//!     let n = rng.range_usize(1, 64);
+//!     // ... generate a case from `rng`, assert the property, or return
+//!     // Err(msg) to report a counterexample.
+//!     if n < 64 { Ok(()) } else { Err(format!("n = {n}")) }
+//! });
+//! ```
+//!
+//! On failure the harness panics with the case index and per-case seed so
+//! the exact counterexample can be replayed with `replay`.
+
+use super::rng::Rng;
+
+/// Run `cases` random cases of `prop`, panicking on the first failure with
+/// a replayable seed.
+pub fn forall<F>(cases: usize, seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let case_seed = seed ^ ((case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property failed at case {case}/{cases} \
+                 (replay seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by its reported seed.
+pub fn replay<F>(case_seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(case_seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("replayed failure (seed {case_seed:#x}): {msg}");
+    }
+}
+
+/// Generate a random vector of length in [min_len, max_len) with elements
+/// from `gen`.
+pub fn vec_of<T>(
+    rng: &mut Rng,
+    min_len: usize,
+    max_len: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+) -> Vec<T> {
+    let n = rng.range_usize(min_len, max_len);
+    (0..n).map(|_| gen(rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        forall(50, 1, |rng| {
+            let x = rng.uniform();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall(50, 2, |rng| {
+            let x = rng.range_usize(0, 10);
+            if x < 5 {
+                Ok(())
+            } else {
+                Err(format!("x = {x}"))
+            }
+        });
+    }
+
+    #[test]
+    fn vec_of_respects_bounds() {
+        forall(30, 3, |rng| {
+            let v = vec_of(rng, 2, 9, |r| r.range_usize(0, 100));
+            if (2..9).contains(&v.len()) {
+                Ok(())
+            } else {
+                Err(format!("len = {}", v.len()))
+            }
+        });
+    }
+}

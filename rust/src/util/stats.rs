@@ -1,0 +1,272 @@
+//! Small numerical toolkit: descriptive statistics and linear least
+//! squares, used by the [`crate::cost::profiler`] to fit the paper's
+//! cost-model coefficients (Eqs. 8–9) from measured execution times.
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Median (copies + sorts).
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Linear-interpolated percentile, p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (s.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (rank - lo as f64) * (s[hi] - s[lo])
+    }
+}
+
+/// Coefficient of determination of predictions vs observations.
+pub fn r_squared(obs: &[f64], pred: &[f64]) -> f64 {
+    assert_eq!(obs.len(), pred.len());
+    let m = mean(obs);
+    let ss_tot: f64 = obs.iter().map(|y| (y - m).powi(2)).sum();
+    let ss_res: f64 = obs
+        .iter()
+        .zip(pred)
+        .map(|(y, f)| (y - f).powi(2))
+        .sum();
+    if ss_tot == 0.0 {
+        return if ss_res == 0.0 { 1.0 } else { 0.0 };
+    }
+    1.0 - ss_res / ss_tot
+}
+
+/// Mean absolute percentage error (%), skipping zero observations.
+pub fn mape(obs: &[f64], pred: &[f64]) -> f64 {
+    assert_eq!(obs.len(), pred.len());
+    let mut total = 0.0;
+    let mut n = 0usize;
+    for (y, f) in obs.iter().zip(pred) {
+        if y.abs() > 1e-12 {
+            total += ((y - f) / y).abs();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        100.0 * total / n as f64
+    }
+}
+
+/// Ordinary least squares: find beta minimizing ||X beta - y||^2.
+///
+/// `x` is row-major, `n` rows × `k` columns. Solves the normal equations
+/// with Gaussian elimination + partial pivoting (tiny k — the cost model
+/// has ≤ 4 features). Returns `None` if the system is singular.
+pub fn least_squares(x: &[f64], n: usize, k: usize, y: &[f64]) -> Option<Vec<f64>> {
+    assert_eq!(x.len(), n * k);
+    assert_eq!(y.len(), n);
+    // Normal equations: (X^T X) beta = X^T y.
+    let mut a = vec![0.0; k * k];
+    let mut b = vec![0.0; k];
+    for i in 0..n {
+        let row = &x[i * k..(i + 1) * k];
+        for p in 0..k {
+            b[p] += row[p] * y[i];
+            for q in 0..k {
+                a[p * k + q] += row[p] * row[q];
+            }
+        }
+    }
+    solve_dense(&mut a, &mut b, k)
+}
+
+/// Solve A x = b in place for a small dense system; returns x.
+pub fn solve_dense(a: &mut [f64], b: &mut [f64], n: usize) -> Option<Vec<f64>> {
+    for col in 0..n {
+        // Partial pivot.
+        let mut piv = col;
+        for r in (col + 1)..n {
+            if a[r * n + col].abs() > a[piv * n + col].abs() {
+                piv = r;
+            }
+        }
+        if a[piv * n + col].abs() < 1e-12 {
+            return None;
+        }
+        if piv != col {
+            for c in 0..n {
+                a.swap(col * n + c, piv * n + c);
+            }
+            b.swap(col, piv);
+        }
+        let d = a[col * n + col];
+        for r in (col + 1)..n {
+            let f = a[r * n + col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for c in col..n {
+                a[r * n + c] -= f * a[col * n + c];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    let mut x = vec![0.0; n];
+    for col in (0..n).rev() {
+        let mut acc = b[col];
+        for c in (col + 1)..n {
+            acc -= a[col * n + c] * x[c];
+        }
+        x[col] = acc / a[col * n + col];
+    }
+    Some(x)
+}
+
+/// Non-negative least squares via projected coordinate descent.
+///
+/// The cost-model coefficients (α₁, α₂, α₃, β₁, β₂) are physically
+/// non-negative; plain OLS can go negative on noisy profiles, which would
+/// let the DP solver exploit nonsensical "negative time" regions.
+pub fn nnls(x: &[f64], n: usize, k: usize, y: &[f64], iters: usize) -> Vec<f64> {
+    let mut beta = least_squares(x, n, k, y)
+        .unwrap_or_else(|| vec![0.0; k])
+        .iter()
+        .map(|b| b.max(0.0))
+        .collect::<Vec<_>>();
+    // Precompute Gram matrix and X^T y.
+    let mut g = vec![0.0; k * k];
+    let mut xty = vec![0.0; k];
+    for i in 0..n {
+        let row = &x[i * k..(i + 1) * k];
+        for p in 0..k {
+            xty[p] += row[p] * y[i];
+            for q in 0..k {
+                g[p * k + q] += row[p] * row[q];
+            }
+        }
+    }
+    for _ in 0..iters {
+        for p in 0..k {
+            if g[p * k + p] < 1e-12 {
+                continue;
+            }
+            let mut grad = -xty[p];
+            for q in 0..k {
+                grad += g[p * k + q] * beta[q];
+            }
+            beta[p] = (beta[p] - grad / g[p * k + p]).max(0.0);
+        }
+    }
+    beta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_median_std() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(mean(&xs), 3.0);
+        assert_eq!(median(&xs), 3.0);
+        assert!((std_dev(&xs) - 1.4142).abs() < 1e-3);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert_eq!(percentile(&xs, 0.0), 0.0);
+        assert_eq!(percentile(&xs, 100.0), 10.0);
+        assert_eq!(percentile(&xs, 50.0), 5.0);
+    }
+
+    #[test]
+    fn least_squares_exact_line() {
+        // y = 2 + 3x
+        let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let mut design = Vec::new();
+        let mut y = Vec::new();
+        for &x in &xs {
+            design.extend_from_slice(&[1.0, x]);
+            y.push(2.0 + 3.0 * x);
+        }
+        let beta = least_squares(&design, 10, 2, &y).unwrap();
+        assert!((beta[0] - 2.0).abs() < 1e-9);
+        assert!((beta[1] - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn least_squares_quadratic_cost_shape() {
+        // t = a1*L^2 + a2*L + b (the paper's Eq. 8 shape).
+        let mut design = Vec::new();
+        let mut y = Vec::new();
+        for l in [128.0f64, 256.0, 512.0, 1024.0, 2048.0] {
+            design.extend_from_slice(&[l * l, l, 1.0]);
+            y.push(3e-9 * l * l + 2e-6 * l + 0.5e-3);
+        }
+        let beta = least_squares(&design, 5, 3, &y).unwrap();
+        assert!((beta[0] - 3e-9).abs() < 1e-12);
+        assert!((beta[1] - 2e-6).abs() < 1e-9);
+        assert!((beta[2] - 0.5e-3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn singular_system_returns_none() {
+        // Two identical columns.
+        let design = [1.0, 1.0, 2.0, 2.0, 3.0, 3.0];
+        assert!(least_squares(&design, 3, 2, &[1.0, 2.0, 3.0]).is_none());
+    }
+
+    #[test]
+    fn nnls_clamps_nonnegative() {
+        // Data generated with a negative coefficient: NNLS must clamp to 0.
+        let mut design = Vec::new();
+        let mut y = Vec::new();
+        for l in [1.0f64, 2.0, 3.0, 4.0] {
+            design.extend_from_slice(&[l, 1.0]);
+            y.push(-2.0 * l + 10.0);
+        }
+        let beta = nnls(&design, 4, 2, &y, 200);
+        assert!(beta.iter().all(|&b| b >= 0.0), "{beta:?}");
+    }
+
+    #[test]
+    fn nnls_matches_ols_when_positive() {
+        let mut design = Vec::new();
+        let mut y = Vec::new();
+        for l in [1.0f64, 2.0, 3.0, 4.0, 7.0] {
+            design.extend_from_slice(&[l, 1.0]);
+            y.push(2.5 * l + 1.0);
+        }
+        let beta = nnls(&design, 5, 2, &y, 500);
+        assert!((beta[0] - 2.5).abs() < 1e-6, "{beta:?}");
+        assert!((beta[1] - 1.0).abs() < 1e-5, "{beta:?}");
+    }
+
+    #[test]
+    fn r2_and_mape() {
+        let obs = [1.0, 2.0, 3.0];
+        assert!((r_squared(&obs, &obs) - 1.0).abs() < 1e-12);
+        assert!(mape(&obs, &obs) < 1e-12);
+        let pred = [1.1, 2.2, 3.3];
+        assert!((mape(&obs, &pred) - 10.0).abs() < 1e-9);
+    }
+}

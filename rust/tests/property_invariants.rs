@@ -1,0 +1,272 @@
+//! Property-based tests over coordinator invariants (routing, batching,
+//! parallel state) — the whole-system complement to the per-module
+//! quickcheck suites.
+
+use dhp::config::presets::{by_name, PRESETS};
+use dhp::config::{ClusterConfig, TrainStage};
+use dhp::cost::{CostCoeffs, CostModel, HardwareSpec, MemoryModel, WorkloadAgg};
+use dhp::data::batch::{GlobalBatch, MicroBatchPlanner};
+use dhp::data::datasets::{DatasetKind, DatasetSampler, TokenizerSpec};
+use dhp::data::sequence::Sequence;
+use dhp::parallel::{DeviceMesh, GroupKind, GroupPool, ParallelState};
+use dhp::util::quickcheck::forall;
+use dhp::util::rng::Rng;
+
+fn rand_cluster(rng: &mut Rng) -> ClusterConfig {
+    let mut c = ClusterConfig::default().with_npus(*rng.choose(&[8, 16, 32, 64]));
+    c.tp = *rng.choose(&[1, 2]);
+    c.pp = *rng.choose(&[1, 2]);
+    c
+}
+
+#[test]
+fn mesh_allocation_always_disjoint_and_local() {
+    forall(200, 0xA110, |rng| {
+        let cluster = rand_cluster(rng);
+        let mesh = DeviceMesh::new(&cluster);
+        let n = mesh.replicas;
+        // Random degree vector within budget.
+        let mut degrees = Vec::new();
+        let mut left = n;
+        while left > 0 && rng.bool(0.85) {
+            let d = rng.range_usize(1, left + 1);
+            degrees.push(d);
+            left -= d;
+        }
+        if degrees.is_empty() {
+            return Ok(());
+        }
+        let placements = mesh.allocate(&degrees);
+        // Disjoint + arity.
+        let mut seen = std::collections::HashSet::new();
+        for (d, ranks) in degrees.iter().zip(&placements) {
+            if ranks.len() != *d {
+                return Err(format!("arity {} != {d}", ranks.len()));
+            }
+            for &r in ranks {
+                if r >= n || !seen.insert(r) {
+                    return Err(format!("rank {r} reused/out of range"));
+                }
+            }
+        }
+        // Locality guarantee: the LARGEST group is placed first into an
+        // empty mesh, so if it fits within one node it must be intra-node.
+        // (Smaller later groups may legitimately fragment across nodes.)
+        let (imax, dmax) = degrees
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, d)| **d)
+            .map(|(i, d)| (i, *d))
+            .unwrap();
+        if dmax <= mesh.replicas_per_node && !mesh.is_intra_node(&placements[imax]) {
+            return Err(format!(
+                "largest group (degree {dmax}) spans nodes: {:?} (rpn {})",
+                placements[imax], mesh.replicas_per_node
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn parallel_state_reconfigure_is_sound_and_pooled() {
+    forall(100, 0xA111, |rng| {
+        let cluster = rand_cluster(rng);
+        let mesh = DeviceMesh::new(&cluster);
+        let n = mesh.replicas;
+        let mut st = ParallelState::new(mesh, cluster.tp, cluster.pp);
+        let mut prev_pool = 0usize;
+        for round in 0..4 {
+            let mut degrees = Vec::new();
+            let mut left = n;
+            while left > 0 {
+                let d = rng.range_usize(1, left + 1);
+                degrees.push(d);
+                left -= d;
+            }
+            st.reconfigure_cp(&degrees)
+                .map_err(|e| format!("round {round}: {e}"))?;
+            // Full coverage: every rank in exactly one group.
+            if !st.idle_ranks().is_empty() {
+                return Err(format!("idle ranks after full plan: {:?}", st.idle_ranks()));
+            }
+            // The pool only ever grows, never re-creates.
+            let pool_now = st.pool_size();
+            if pool_now < prev_pool {
+                return Err("pool shrank".into());
+            }
+            prev_pool = pool_now;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn group_pool_is_idempotent_under_any_acquire_sequence() {
+    forall(100, 0xA112, |rng| {
+        let mut pool = GroupPool::new();
+        let mut reference: std::collections::HashSet<Vec<usize>> =
+            Default::default();
+        for _ in 0..rng.range_usize(1, 40) {
+            let len = rng.range_usize(1, 8);
+            let mut ranks: Vec<usize> =
+                (0..len).map(|_| rng.range_usize(0, 16)).collect();
+            let g = pool.acquire(GroupKind::ContextParallel, ranks.clone());
+            // Group identity is the canonical sorted-dedup set.
+            ranks.sort_unstable();
+            ranks.dedup();
+            if g.ranks != ranks {
+                return Err(format!("{:?} != {ranks:?}", g.ranks));
+            }
+            reference.insert(ranks);
+        }
+        if pool.len() != reference.len() {
+            return Err(format!(
+                "pool has {} unique groups, expected {}",
+                pool.len(),
+                reference.len()
+            ));
+        }
+        let s = pool.stats();
+        if s.misses as usize != reference.len() {
+            return Err(format!("misses {} != unique {}", s.misses, reference.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn micro_batch_planner_partitions_any_stream() {
+    forall(100, 0xA113, |rng| {
+        let preset = rng.choose(&PRESETS).clone();
+        let mm = MemoryModel::new(&preset, 128e9, 16);
+        let planner = MicroBatchPlanner::new(
+            rng.range_usize(2, 32),
+            mm.rank_budget(),
+            mm.m_token,
+        );
+        let kind = *rng.choose(&DatasetKind::all());
+        let mut sampler = DatasetSampler::new(kind, rng.next_u64()).with_spec(
+            TokenizerSpec {
+                fps: 2.0,
+                tokens_per_frame: 256.0,
+                text_min: 32,
+                text_max: 512,
+            },
+        );
+        let batch = GlobalBatch {
+            step: 0,
+            sequences: sampler.sample_batch(rng.range_usize(1, 128)),
+        };
+        let mbs = planner.plan(&batch);
+        // Exact partition, order preserved.
+        let flat: Vec<u64> = mbs
+            .iter()
+            .flat_map(|mb| mb.sequences.iter().map(|s| s.id))
+            .collect();
+        let orig: Vec<u64> = batch.sequences.iter().map(|s| s.id).collect();
+        if flat != orig {
+            return Err("partition broke order/coverage".into());
+        }
+        for mb in &mbs {
+            let bytes: f64 = mb
+                .sequences
+                .iter()
+                .map(|s| s.act_bytes(planner.m_token))
+                .sum();
+            if bytes > planner.capacity_bytes() && mb.sequences.len() > 1 {
+                return Err("oversized multi-sequence micro-batch".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cost_model_monotonicities() {
+    forall(200, 0xA114, |rng| {
+        let preset = rng.choose(&PRESETS).clone();
+        let hw = HardwareSpec::default();
+        let cm = CostModel {
+            coeffs: CostCoeffs::analytic(&preset, TrainStage::Full, &hw),
+            memory: MemoryModel::new(&preset, 256e9, 16),
+        };
+        let lv = rng.range_u64(16, 60_000);
+        let lt = rng.range_u64(16, 512);
+        let seq = Sequence::new(0, lv, lt);
+        let agg = WorkloadAgg::of(std::slice::from_ref(&seq));
+        let d = rng.range_usize(2, 64);
+        // More bandwidth never hurts.
+        let slow = cm.t_total(&agg, d, 12.5e9);
+        let fast = cm.t_total(&agg, d, 196e9);
+        if fast > slow + 1e-12 {
+            return Err(format!("bw monotonicity: {fast} > {slow}"));
+        }
+        // More tokens never cost less (same degree, same bandwidth).
+        let bigger = Sequence::new(1, lv + 1024, lt);
+        let agg2 = WorkloadAgg::of(std::slice::from_ref(&bigger));
+        if cm.t_total(&agg2, d, 12.5e9) < slow {
+            return Err("token monotonicity violated".into());
+        }
+        // Memory min-degree is monotone in tokens.
+        if cm.memory.min_degree(bigger.len()) < cm.memory.min_degree(seq.len()) {
+            return Err("min_degree not monotone".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn schedules_respect_memory_constraint_eq3() {
+    // Every group in every DHP plan satisfies Eq. 3:
+    // Σ tokens · M_token ≤ d · E′.
+    forall(40, 0xA115, |rng| {
+        let preset = by_name("InternVL3-8B").unwrap();
+        let cluster = {
+            let mut c = ClusterConfig::default().with_npus(32);
+            c.tp = 2;
+            c.pp = 2;
+            c
+        };
+        let hw = HardwareSpec {
+            peak_flops: 376e12 * 4.0,
+            ..HardwareSpec::default()
+        };
+        let memory = MemoryModel::new(
+            &preset,
+            cluster.mem_bytes as f64 * cluster.tp as f64,
+            cluster.replicas(),
+        );
+        let cost = CostModel {
+            coeffs: CostCoeffs::analytic(&preset, TrainStage::Full, &hw),
+            memory: memory.clone(),
+        };
+        let sch = dhp::scheduler::Scheduler::new(cost, DeviceMesh::new(&cluster));
+        let mut sampler = DatasetSampler::new(DatasetKind::OpenVid, rng.next_u64())
+            .with_spec(TokenizerSpec {
+                fps: 2.0,
+                tokens_per_frame: 256.0,
+                text_min: 32,
+                text_max: 512,
+            });
+        let seqs = sampler.sample_batch(rng.range_usize(1, 48));
+        let schedule = sch.schedule(&seqs);
+        schedule.validate(&seqs, cluster.replicas()).map_err(|e| e.to_string())?;
+        for plan in &schedule.waves {
+            for g in &plan.groups {
+                let tokens: u64 = g.seq_idxs.iter().map(|&i| seqs[i].len()).sum();
+                // Allow the clamped case: a sequence too big for the whole
+                // cluster is scheduled anyway (real system would OOM).
+                if !memory.fits(tokens, g.degree)
+                    && memory.min_degree(tokens) <= cluster.replicas()
+                {
+                    return Err(format!(
+                        "Eq.3 violated: {tokens} tokens at degree {}",
+                        g.degree
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,154 @@
+//! Integration tests over the REAL PJRT runtime: load the AOT artifacts
+//! produced by `make artifacts`, execute them, and verify numerics +
+//! training behaviour end to end. Skipped gracefully when artifacts are
+//! missing (CI without `make artifacts`).
+
+use std::path::{Path, PathBuf};
+
+use dhp::data::corpus::CorpusGenerator;
+use dhp::runtime::{load_params, ArtifactKind, Manifest, Runtime};
+use dhp::train::{Adam, AdamConfig};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn manifest_lists_canonical_artifacts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    for name in [
+        "model.hlo.txt",
+        "tiny.hlo.txt",
+        "tiny_params.f32",
+        "e2e_grad.hlo.txt",
+    ] {
+        assert!(m.get(name).is_some(), "manifest missing {name}");
+    }
+    assert!(m.sweep("prof_fwd_").len() >= 3);
+    let tiny = m.get("model.hlo.txt").unwrap();
+    assert_eq!(tiny.kind, ArtifactKind::GradStep);
+    assert_eq!(tiny.param_count, 146_752);
+}
+
+#[test]
+fn params_blob_matches_manifest() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let meta = m.get("tiny_params.f32").unwrap();
+    let params = load_params(&dir.join("tiny_params.f32")).unwrap();
+    assert_eq!(params.len(), meta.param_count);
+    // Sane initialization: finite, non-degenerate.
+    assert!(params.iter().all(|p| p.is_finite()));
+    let nonzero = params.iter().filter(|p| **p != 0.0).count();
+    assert!(nonzero > params.len() / 2);
+}
+
+#[test]
+fn pjrt_grad_step_trains_tiny_model() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let model = rt.load(&dir, "model.hlo.txt").unwrap();
+    let meta = model.meta.clone();
+    let mut params = load_params(&dir.join("tiny_params.f32")).unwrap();
+    let mut corpus = CorpusGenerator::new(meta.vocab, meta.patch_dim, 42);
+    let mut opt = Adam::new(
+        params.len(),
+        AdamConfig {
+            lr: 5e-3,
+            ..Default::default()
+        },
+    );
+
+    // Fixed batch: the model must fit it (memorization ⇒ loss drops fast).
+    let (vis, tok, tgt) =
+        corpus.sample_flat_batch(meta.batch, meta.seq_vision, meta.seq_text);
+    let first = model.grad_step(&params, &vis, &tok, &tgt).unwrap();
+    assert!(first.loss.is_finite());
+    // Near-uniform init: loss ≈ ln(vocab).
+    let uniform = (meta.vocab as f32).ln();
+    assert!((first.loss - uniform).abs() < 1.5, "loss {}", first.loss);
+    assert_eq!(first.grads.len(), params.len());
+
+    let mut last = first.loss;
+    for _ in 0..30 {
+        let out = model.grad_step(&params, &vis, &tok, &tgt).unwrap();
+        opt.step(&mut params, &out.grads);
+        last = out.loss;
+    }
+    assert!(
+        last < first.loss - 0.5,
+        "loss did not drop on fixed batch: {} -> {last}",
+        first.loss
+    );
+}
+
+#[test]
+fn pjrt_fwd_loss_matches_grad_step_loss() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let grad = rt.load(&dir, "model.hlo.txt").unwrap();
+    let fwd = rt.load(&dir, "tiny.hlo.txt").unwrap();
+    let params = load_params(&dir.join("tiny_params.f32")).unwrap();
+    let meta = grad.meta.clone();
+    let mut corpus = CorpusGenerator::new(meta.vocab, meta.patch_dim, 7);
+    let (vis, tok, tgt) =
+        corpus.sample_flat_batch(meta.batch, meta.seq_vision, meta.seq_text);
+    let g = grad.grad_step(&params, &vis, &tok, &tgt).unwrap();
+    let f = fwd.fwd_loss(&params, &vis, &tok, &tgt).unwrap();
+    // Same params, same inputs, same graph → identical losses.
+    assert!((g.loss - f).abs() < 1e-5, "grad {} vs fwd {f}", g.loss);
+}
+
+#[test]
+fn pjrt_execution_is_deterministic() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let model = rt.load(&dir, "tiny.hlo.txt").unwrap();
+    let params = load_params(&dir.join("tiny_params.f32")).unwrap();
+    let meta = model.meta.clone();
+    let mut corpus = CorpusGenerator::new(meta.vocab, meta.patch_dim, 9);
+    let (vis, tok, tgt) =
+        corpus.sample_flat_batch(meta.batch, meta.seq_vision, meta.seq_text);
+    let a = model.fwd_loss(&params, &vis, &tok, &tgt).unwrap();
+    let b = model.fwd_loss(&params, &vis, &tok, &tgt).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn wrong_shapes_rejected() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let model = rt.load(&dir, "model.hlo.txt").unwrap();
+    let params = load_params(&dir.join("tiny_params.f32")).unwrap();
+    assert!(model.grad_step(&params[..10], &[], &[], &[]).is_err());
+    let meta = model.meta.clone();
+    let vis = vec![0.0f32; meta.batch * meta.seq_vision * meta.patch_dim];
+    let tok = vec![0i32; 3]; // wrong
+    let tgt = vec![0i32; meta.batch * meta.seq_text];
+    assert!(model.grad_step(&params, &vis, &tok, &tgt).is_err());
+}
+
+#[test]
+fn profiler_fits_real_runtime_structurally() {
+    // Wall-clock profiling under `cargo test`'s parallel threads on a
+    // single-core box is too noisy for a tight MAPE assertion (the tab3
+    // bench, run serially, reports < 2% — paper band < 8%). Here we
+    // assert the structural properties that must hold regardless of
+    // contention: a valid non-negative fit over all buckets whose
+    // predictions grow with sequence length.
+    let Some(dir) = artifacts_dir() else { return };
+    let (coeffs, fit) =
+        dhp::experiments::estimator::fit_from_runtime(&dir, 3).unwrap();
+    assert!(coeffs.alpha1 >= 0.0 && coeffs.alpha2 >= 0.0 && coeffs.beta1 >= 0.0);
+    assert!(fit.n >= 3);
+    let predict = |l: f64| coeffs.alpha1 * l * l + coeffs.alpha2 * l + coeffs.beta1;
+    assert!(predict(768.0) > predict(128.0));
+    assert!(predict(128.0) > 0.0);
+}

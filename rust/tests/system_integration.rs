@@ -1,0 +1,195 @@
+//! Whole-system integration: scheduler + baselines + simulator + async
+//! pipeline + CLI dispatch composing, at realistic experiment scales.
+
+use dhp::baselines::SchedulePolicy;
+use dhp::cluster::CommKind;
+use dhp::config::presets::{by_name, PRESETS};
+use dhp::config::{TrainConfig, TrainStage};
+use dhp::data::batch::GlobalBatch;
+use dhp::data::datasets::DatasetKind;
+use dhp::experiments::harness::{dispatch, run_policy, ExpContext, PolicySet};
+use dhp::scheduler::pipeline::SchedulePipeline;
+use dhp::util::cli::Args;
+use dhp::util::quickcheck::forall;
+
+fn ctx(npus: usize, dataset: DatasetKind) -> ExpContext {
+    ExpContext::new(
+        by_name("InternVL3-8B").unwrap(),
+        dataset,
+        npus,
+        TrainStage::Full,
+    )
+}
+
+#[test]
+fn full_iteration_all_policies_consistent() {
+    let ctx = ctx(32, DatasetKind::OpenVid).with_gbs(96).with_steps(0, 2);
+    let set = PolicySet::build(&ctx);
+    let results = [
+        run_policy(&ctx, &set.megatron),
+        run_policy(&ctx, &set.deepspeed),
+        run_policy(&ctx, &set.dhp),
+    ];
+    for r in &results {
+        assert!(r.mean_iter_s.is_finite() && r.mean_iter_s > 0.0);
+        assert!(r.tokens_per_s > 0.0);
+        assert!(r.mean_solver_s <= r.mean_schedule_s + 1e-9);
+        assert!((0.0..=1.0).contains(&r.mean_idle_fraction));
+    }
+    // DHP does not lose to either baseline.
+    assert!(results[2].mean_iter_s <= results[0].mean_iter_s * 1.01);
+    assert!(results[2].mean_iter_s <= results[1].mean_iter_s * 1.01);
+}
+
+#[test]
+fn headline_claim_small_scale() {
+    // The paper's headline: DHP beats the BEST tuned baseline, more on
+    // skewed data. Checked at reduced scale for test runtime.
+    let skewed = ctx(32, DatasetKind::OpenVid).with_gbs(128).with_steps(1, 3);
+    let set = PolicySet::build(&skewed);
+    let dhp = run_policy(&skewed, &set.dhp);
+    let mega = run_policy(&skewed, &set.megatron);
+    let ds = run_policy(&skewed, &set.deepspeed);
+    let best = mega.mean_iter_s.min(ds.mean_iter_s);
+    assert!(
+        dhp.mean_iter_s < best,
+        "DHP {} should beat best baseline {best}",
+        dhp.mean_iter_s
+    );
+}
+
+#[test]
+fn async_pipeline_with_simulated_training_loop() {
+    let ctx = ctx(32, DatasetKind::InternVid);
+    let pipe = SchedulePipeline::spawn(ctx.dhp(), 2);
+    let sim = ctx.sim();
+    let mut sampler = ctx.sampler();
+    let batches: Vec<Vec<_>> = (0..4).map(|_| sampler.sample_batch(24)).collect();
+    pipe.submit(0, batches[0].clone());
+    let mut total_sim = 0.0;
+    for step in 0..4u64 {
+        if (step as usize) + 1 < batches.len() {
+            pipe.submit(step + 1, batches[step as usize + 1].clone());
+        }
+        let done = pipe.recv().unwrap();
+        assert_eq!(done.step, step);
+        let seqs = &batches[step as usize];
+        done.schedule.validate(seqs, ctx.replicas()).unwrap();
+        total_sim += sim
+            .execute_schedule(seqs, &done.schedule, CommKind::RingCp)
+            .iter()
+            .map(|w| w.makespan_s)
+            .sum::<f64>();
+    }
+    pipe.shutdown();
+    assert!(total_sim > 0.0);
+}
+
+#[test]
+fn dispatch_lists_cover_plans_for_all_policies() {
+    let ctx = ctx(32, DatasetKind::Msrvtt).with_gbs(48);
+    let set = PolicySet::build(&ctx);
+    let mut sampler = ctx.sampler();
+    let batch = GlobalBatch {
+        step: 0,
+        sequences: sampler.sample_batch(48),
+    };
+    let mbs = ctx.micro_batch_planner().plan(&batch);
+    let policies: [&dyn SchedulePolicy; 3] =
+        [&set.megatron, &set.deepspeed, &set.dhp];
+    for policy in policies {
+        for mb in &mbs {
+            let schedule = policy.schedule(&mb.sequences);
+            for plan in &schedule.waves {
+                let entries = dispatch(&mb.sequences, plan);
+                // Every assigned sequence's tokens are fully covered.
+                for g in &plan.groups {
+                    for &si in &g.seq_idxs {
+                        let covered: u64 = entries
+                            .iter()
+                            .filter(|e| e.seq_idx == si)
+                            .map(|e| e.token_end - e.token_start)
+                            .sum();
+                        assert_eq!(covered, mb.sequences[si].len());
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn cli_dispatch_smoke() {
+    // Cheap CLI paths: help / models / schedule / fig1 / fig2 / tab4.
+    for tokens in [
+        vec!["help"],
+        vec!["models"],
+        vec!["schedule", "--gbs", "12", "--npus", "16"],
+        vec!["reproduce", "fig1", "--samples", "2000"],
+        vec!["reproduce", "fig2", "--batch", "12", "--npus", "16"],
+        vec!["reproduce", "tab4", "--gbs", "24", "--npus", "16"],
+    ] {
+        let args = Args::parse(tokens.iter().map(|s| s.to_string())).unwrap();
+        dhp::report::run_cli(args).unwrap_or_else(|e| panic!("{tokens:?}: {e}"));
+    }
+    // Unknown command errors cleanly.
+    let bad = Args::parse(["nope".to_string()]).unwrap();
+    assert!(dhp::report::run_cli(bad).is_err());
+}
+
+#[test]
+fn config_file_round_trip_drives_context() {
+    let cfg = TrainConfig::from_toml(
+        "[train]\ngbs = 64\nmodel = \"Qwen3VL-4B\"\ndataset = \"internvid\"\n\
+         [cluster]\nnodes = 4\nnpus_per_node = 8\ntp = 2\npp = 2\n",
+    )
+    .unwrap();
+    assert_eq!(cfg.cluster.replicas(), 8);
+    assert_eq!(cfg.model.name, "Qwen3VL-4B");
+    assert_eq!(cfg.gbs, 64);
+}
+
+#[test]
+fn property_every_policy_schedules_any_workload() {
+    forall(10, 0x515, |rng| {
+        let npus = *rng.choose(&[16usize, 32]);
+        let kind = *rng.choose(&DatasetKind::all());
+        let mut c = ctx(npus, kind);
+        c.seed = rng.next_u64();
+        let set = PolicySet::build(&c);
+        let mut sampler = c.sampler();
+        let n = rng.range_usize(1, 48);
+        let seqs = sampler.sample_batch(n);
+        let policies: [&dyn SchedulePolicy; 3] =
+            [&set.megatron, &set.deepspeed, &set.dhp];
+        for policy in policies {
+            let schedule = policy.schedule(&seqs);
+            schedule
+                .validate(&seqs, c.replicas())
+                .map_err(|e| format!("{} on {n} seqs: {e}", policy.name()))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn all_presets_work_end_to_end() {
+    for preset in PRESETS.iter() {
+        let mut c = ExpContext::new(
+            preset.clone(),
+            DatasetKind::OpenVid,
+            16,
+            TrainStage::FrozenVision,
+        )
+        .with_gbs(24)
+        .with_steps(0, 1);
+        c.seed = 5;
+        let set = PolicySet::build(&c);
+        let r = run_policy(&c, &set.dhp);
+        assert!(
+            r.mean_iter_s.is_finite() && r.mean_iter_s > 0.0,
+            "{}: {r:?}",
+            preset.name
+        );
+    }
+}
