@@ -1,15 +1,34 @@
 //! Micro-benchmarks of the scheduler hot path (the §Perf targets): BFD
 //! packing, 2D-DP allocation, and the full schedule() pipeline at the
-//! paper's scales.
+//! paper's scales — with before/after pairs so one run measures the
+//! ISSUE-1 overhaul against the retained pre-overhaul reference path
+//! (`Scheduler::schedule_reference`, `dp::allocate_degrees_reference`).
+//!
+//! Usage:
+//!   cargo bench --bench solver_micro              # full repetitions
+//!   cargo bench --bench solver_micro -- --quick   # CI smoke (fewer reps)
+//!
+//! Both modes persist machine-readable per-case mean/p50 latencies to
+//! `BENCH_solver_micro.json` at the repo root (see scripts/bench_smoke.sh)
+//! so future PRs can track the solver-latency trajectory.
+
+use std::path::Path;
 
 use dhp::config::presets::by_name;
 use dhp::config::TrainStage;
 use dhp::data::datasets::DatasetKind;
 use dhp::experiments::harness::ExpContext;
-use dhp::scheduler::packing;
+use dhp::scheduler::{packing, solver_threads, SolverScratch};
 use dhp::util::bench::BenchReport;
+use dhp::util::json::{self, Json};
 
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    // (warmup, reps) per tier: full mode mirrors the seed counts.
+    let (pack_w, pack_r) = if quick { (1, 5) } else { (2, 20) };
+    let (sch_w, sch_r) = if quick { (1, 3) } else { (2, 10) };
+    let (dp_w, dp_r) = if quick { (1, 10) } else { (2, 50) };
+
     let mut report = BenchReport::new("solver_micro");
     for (npus, gbs) in [(16usize, 512usize), (32, 512), (64, 512), (64, 128)] {
         let ctx = ExpContext::new(
@@ -24,15 +43,43 @@ fn main() {
         let memory = ctx.memory();
         let n = ctx.replicas();
 
-        report.bench(&format!("pack_gbs{gbs}_n{n}"), 2, 20, || {
+        report.bench(&format!("pack_gbs{gbs}_n{n}"), pack_w, pack_r, || {
             std::hint::black_box(packing::pack(&seqs, &memory, n));
         });
-        report.bench(&format!("schedule_gbs{gbs}_npus{npus}"), 2, 10, || {
+        // Single-target pass through the scratch arena (pack + waves +
+        // DP with reused buffers and memoized costs).
+        {
+            let mut scratch = SolverScratch::acquire();
+            report.bench(
+                &format!("target_pass_scratch_gbs{gbs}_n{n}"),
+                pack_w,
+                pack_r,
+                || {
+                    std::hint::black_box(
+                        sch.schedule_with_target_in(&seqs, n, &mut scratch),
+                    );
+                },
+            );
+            scratch.release();
+        }
+        // AFTER: the overhauled solver (parallel pruned search, at-most-j
+        // DP, scratch arena, memoized costs).
+        report.bench(&format!("schedule_gbs{gbs}_npus{npus}"), sch_w, sch_r, || {
             std::hint::black_box(sch.schedule(&seqs));
         });
+        // BEFORE: the seed's sequential exact-j path, retained verbatim.
+        report.bench(
+            &format!("schedule_reference_gbs{gbs}_npus{npus}"),
+            sch_w,
+            sch_r,
+            || {
+                std::hint::black_box(sch.schedule_reference(&seqs));
+            },
+        );
     }
 
-    // Pure DP at K'=64 groups / N=64 ranks (the O(K'N²) core).
+    // Pure DP at K'=64 groups / N=16 ranks (the O(K'N²) → O(K'N log N)
+    // core), optimized vs reference over identical inputs.
     let ctx = ExpContext::new(
         by_name("InternVL3-8B").unwrap(),
         DatasetKind::OpenVid,
@@ -44,7 +91,7 @@ fn main() {
     let groups = packing::pack_with_target(&seqs, &ctx.memory(), 16, 64);
     let wave = packing::waves(groups, 16).into_iter().next().unwrap();
     let cost = ctx.cost_model();
-    report.bench(&format!("dp_allocate_k{}_n16", wave.len()), 2, 50, || {
+    report.bench(&format!("dp_allocate_k{}_n16", wave.len()), dp_w, dp_r, || {
         std::hint::black_box(dhp::scheduler::dp::allocate_degrees(
             &wave,
             16,
@@ -52,5 +99,34 @@ fn main() {
             dhp::scheduler::any_degree,
         ));
     });
+    report.bench(
+        &format!("dp_allocate_reference_k{}_n16", wave.len()),
+        dp_w,
+        dp_r,
+        || {
+            std::hint::black_box(dhp::scheduler::dp::allocate_degrees_reference(
+                &wave,
+                16,
+                |i, d| cost.t_total(&wave[i].agg, d, 12.5e9),
+                dhp::scheduler::any_degree,
+            ));
+        },
+    );
+
+    // Persist the trajectory record at the repo root (the package lives
+    // in rust/, so the root is one level up from the manifest).
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap_or_else(|| Path::new("."))
+        .to_path_buf();
+    let out = root.join("BENCH_solver_micro.json");
+    let meta = vec![
+        ("quick", Json::Bool(quick)),
+        ("solver_threads", json::num(solver_threads() as f64)),
+    ];
+    match report.write_json(&out, meta) {
+        Ok(()) => println!("[bench] wrote {}", out.display()),
+        Err(e) => eprintln!("[bench] failed to write {}: {e}", out.display()),
+    }
     report.finish();
 }

@@ -2,7 +2,7 @@
 //! derived quantities the cost model needs (per-token FLOPs and activation
 //! bytes).
 
-use once_cell::sync::Lazy;
+use std::sync::OnceLock;
 
 /// One evaluated model configuration (paper Table 5).
 #[derive(Debug, Clone, PartialEq)]
@@ -79,8 +79,23 @@ impl ModelPreset {
     }
 }
 
+/// Lazily-built preset table (std `OnceLock`; `once_cell` is not
+/// vendored offline). Derefs to a slice so call sites read naturally:
+/// `PRESETS.iter()`, `PRESETS[2]`, `&PRESETS` as `&[ModelPreset]`.
+pub struct Presets(OnceLock<Vec<ModelPreset>>);
+
+impl std::ops::Deref for Presets {
+    type Target = [ModelPreset];
+
+    fn deref(&self) -> &[ModelPreset] {
+        self.0.get_or_init(build_presets)
+    }
+}
+
 /// All six evaluated models (paper Table 5).
-pub static PRESETS: Lazy<Vec<ModelPreset>> = Lazy::new(|| {
+pub static PRESETS: Presets = Presets(OnceLock::new());
+
+fn build_presets() -> Vec<ModelPreset> {
     vec![
         ModelPreset {
             name: "InternVL3-2B",
@@ -149,7 +164,7 @@ pub static PRESETS: Lazy<Vec<ModelPreset>> = Lazy::new(|| {
             vision_layers: 24,
         },
     ]
-});
+}
 
 /// Look up a preset by (case-insensitive) name.
 pub fn by_name(name: &str) -> Option<ModelPreset> {

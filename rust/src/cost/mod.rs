@@ -110,6 +110,26 @@ impl CostCoeffs {
         }
     }
 
+    /// Content fingerprint of the coefficient set (FNV over the raw f64
+    /// bit patterns). The solver's memoized cost cache
+    /// ([`crate::scheduler::scratch::CostCache`]) keys every entry on this
+    /// so cached `T(agg, d, bw)` values from one cost model are never
+    /// served to another (the scratch pool is shared process-wide).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for bits in [
+            self.alpha1.to_bits(),
+            self.alpha2.to_bits(),
+            self.beta1.to_bits(),
+            self.alpha3.to_bits(),
+            self.beta2.to_bits(),
+            self.attn_frac.to_bits(),
+        ] {
+            h = (h ^ bits).wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+
     /// Scale coefficients fitted on one (small) model to another preset by
     /// FLOP ratio — how the repo transfers real PJRT-CPU profiles of the
     /// ~4M profile model onto the 2B–8B presets (DESIGN.md §2).

@@ -7,6 +7,22 @@
 //! modules (64-bit instruction ids). See /opt/xla-example/README.md.
 
 pub mod artifacts;
+#[cfg(not(feature = "pjrt"))]
+pub mod pjrt_stub;
+
+// The `pjrt` feature swaps the stub for the real `xla` crate, which is
+// not vendorable offline and therefore not declared in Cargo.toml. Fail
+// with a clear message instead of a wall of E0433s.
+#[cfg(feature = "pjrt")]
+compile_error!(
+    "the `pjrt` feature requires the `xla` crate (PJRT C-API bindings): add a \
+     local `xla` path dependency to rust/Cargo.toml and remove this guard"
+);
+
+// Without the `pjrt` feature the real `xla` crate is absent; alias the
+// stub under the same name so the whole module typechecks unchanged.
+#[cfg(not(feature = "pjrt"))]
+use pjrt_stub as xla;
 
 use std::path::Path;
 

@@ -1,0 +1,107 @@
+//! Offline stand-in for the `xla` crate (PJRT C-API bindings).
+//!
+//! Compiled when the `pjrt` cargo feature is OFF (the default — the real
+//! crate cannot be vendored offline). It mirrors exactly the API surface
+//! `runtime::mod` uses so the module typechecks unchanged; the only
+//! reachable entry point, [`PjRtClient::cpu`], returns an error, so every
+//! other method is unreachable by construction (the runtime integration
+//! tests skip when artifacts are absent and `Runtime::cpu()` fails fast
+//! otherwise).
+
+use std::path::Path;
+
+/// Error type standing in for `xla::Error` (only `Debug` is needed).
+#[derive(Debug)]
+pub struct Error(pub &'static str);
+
+const UNAVAILABLE: &str =
+    "PJRT unavailable: built without the `pjrt` cargo feature (add a local \
+     `xla` dependency and build with `--features pjrt`)";
+
+/// Stand-in for `xla::PjRtClient`.
+#[derive(Debug, Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(Error(UNAVAILABLE))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "pjrt-stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(Error(UNAVAILABLE))
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer, Error> {
+        Err(Error(UNAVAILABLE))
+    }
+}
+
+/// Stand-in for `xla::HloModuleProto`.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto, Error> {
+        Err(Error(UNAVAILABLE))
+    }
+}
+
+/// Stand-in for `xla::XlaComputation`.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Stand-in for `xla::PjRtBuffer`.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(Error(UNAVAILABLE))
+    }
+}
+
+/// Stand-in for `xla::PjRtLoadedExecutable`.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn client(&self) -> PjRtClient {
+        PjRtClient
+    }
+
+    pub fn execute_b<B>(&self, _inputs: &[B]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(Error(UNAVAILABLE))
+    }
+}
+
+/// Stand-in for `xla::Literal`.
+pub struct Literal;
+
+impl Literal {
+    pub fn to_tuple1(&self) -> Result<Literal, Error> {
+        Err(Error(UNAVAILABLE))
+    }
+
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal), Error> {
+        Err(Error(UNAVAILABLE))
+    }
+
+    pub fn get_first_element<T: Default>(&self) -> Result<T, Error> {
+        Err(Error(UNAVAILABLE))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(Error(UNAVAILABLE))
+    }
+}

@@ -7,6 +7,7 @@
 //! decision-variable count and avoids "communication redundancy caused by
 //! packing massive short sequences" into oversized CP groups.
 
+use super::scratch::PackScratch;
 use crate::cost::{MemoryModel, WorkloadAgg};
 use crate::data::sequence::Sequence;
 
@@ -75,6 +76,21 @@ pub fn pack_with_target(
     max_degree: usize,
     group_target: usize,
 ) -> Vec<AtomicGroup> {
+    pack_with_target_in(seqs, memory, max_degree, group_target, &mut PackScratch::default())
+}
+
+/// [`pack_with_target`] with caller-owned scratch: the sort-order buffer
+/// and bin index vectors come from (and return to) the scratch free-lists,
+/// so steady-state packing performs no allocations beyond first growth.
+/// Produces bit-identical groups to the scratch-free path (recycled
+/// buffers are cleared; the BFD order and tie-breaks are unchanged).
+pub fn pack_with_target_in(
+    seqs: &[Sequence],
+    memory: &MemoryModel,
+    max_degree: usize,
+    group_target: usize,
+    scratch: &mut PackScratch,
+) -> Vec<AtomicGroup> {
     let budget = memory.rank_budget();
     // Work-balance cap (token² units): makespan follows the quadratic
     // workload, so bins close on WORK at ~1/target of the batch (5% slack
@@ -90,8 +106,11 @@ pub fn pack_with_target(
     let work_cap = total_quad / group_target.max(1) as f64 * 1.05;
     let mem_cap = max_degree as f64 * budget;
 
-    // Order by memory (≡ token count × M_token) descending.
-    let mut order: Vec<usize> = (0..seqs.len()).collect();
+    // Order by memory (≡ token count × M_token) descending. The sort
+    // buffer is reused; sort_by is stable, so results match a fresh Vec.
+    let mut order = std::mem::take(&mut scratch.order);
+    order.clear();
+    order.extend(0..seqs.len());
     order.sort_by(|&a, &b| {
         seqs[b]
             .len()
@@ -99,7 +118,7 @@ pub fn pack_with_target(
             .then_with(|| a.cmp(&b)) // deterministic tie-break
     });
 
-    let mut groups: Vec<AtomicGroup> = Vec::new();
+    let mut groups: Vec<AtomicGroup> = scratch.take_groups();
     for &idx in &order {
         let seq = &seqs[idx];
         let mem = seq.act_bytes(memory.m_token);
@@ -134,8 +153,10 @@ pub fn pack_with_target(
             None => {
                 let mut agg = WorkloadAgg::default();
                 agg.add(seq);
+                let mut seq_idxs = scratch.take_idxs();
+                seq_idxs.push(idx);
                 groups.push(AtomicGroup {
-                    seq_idxs: vec![idx],
+                    seq_idxs,
                     d_min,
                     mem_bytes: mem,
                     capacity_bytes: mem_cap.max(mem),
@@ -145,13 +166,63 @@ pub fn pack_with_target(
             }
         }
     }
+    scratch.order = order;
     groups
+}
+
+/// Do two packings describe the same atomic groups, in the same order?
+/// Compares exactly the fields everything downstream of packing reads —
+/// membership (`seq_idxs`, which determines the workload aggregates) and
+/// minimum degree. Bin bookkeeping (`work_cap`, `capacity_bytes`,
+/// `mem_bytes`) is packer-internal and varies with the group-count target
+/// even when the resulting groups are identical, so it is deliberately
+/// ignored (derived `PartialEq` would never match across targets).
+pub fn same_packing(a: &[AtomicGroup], b: &[AtomicGroup]) -> bool {
+    a.len() == b.len()
+        && a.iter()
+            .zip(b)
+            .all(|(x, y)| x.d_min == y.d_min && x.seq_idxs == y.seq_idxs)
+}
+
+/// Content fingerprint of a packing: hashes group boundaries, membership,
+/// and minimum degrees (in the packer's deterministic output order). Two
+/// targets whose packings collapse to the same groups produce the same
+/// fingerprint, letting the outer search skip the redundant DP solve
+/// (confirmed by [`same_packing`] before anything is dropped).
+pub fn fingerprint(groups: &[AtomicGroup]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut mix = |x: u64, h: &mut u64| {
+        *h = (*h ^ x).wrapping_mul(0x100000001b3);
+        *h ^= *h >> 29;
+    };
+    for g in groups {
+        mix(0x9E37_79B9_7F4A_7C15, &mut h); // group boundary sentinel
+        mix(g.d_min as u64, &mut h);
+        for &i in &g.seq_idxs {
+            mix(i as u64 + 1, &mut h);
+        }
+    }
+    h
 }
 
 /// Split atomic groups into feasibility waves (Σ d_min ≤ N per wave),
 /// balancing estimated WORK across waves LPT-style so one wave doesn't
 /// hoard all the long groups while later waves run nearly empty.
 pub fn waves(groups: Vec<AtomicGroup>, replicas: usize) -> Vec<Vec<AtomicGroup>> {
+    let mut groups = groups;
+    waves_in(&mut groups, replicas, &mut PackScratch::default())
+}
+
+/// [`waves`] draining a caller-owned group vector, with wave containers
+/// drawn from the scratch free-list. The caller should hand the drained
+/// input buffer back via [`PackScratch::put_groups`] and, once the
+/// candidate's plan is assembled, pass the result to
+/// [`PackScratch::reclaim_waves`] to recycle everything.
+pub fn waves_in(
+    groups: &mut Vec<AtomicGroup>,
+    replicas: usize,
+    scratch: &mut PackScratch,
+) -> Vec<Vec<AtomicGroup>> {
     if groups.is_empty() {
         return vec![];
     }
@@ -159,17 +230,18 @@ pub fn waves(groups: Vec<AtomicGroup>, replicas: usize) -> Vec<Vec<AtomicGroup>>
     let n_waves = total_dmin.div_ceil(replicas).max(1);
 
     // LPT over estimated work, respecting each wave's rank budget.
-    let mut sorted = groups;
+    let sorted = groups;
     sorted.sort_by(|a, b| {
         b.agg
             .quad
             .partial_cmp(&a.agg.quad)
             .unwrap_or(std::cmp::Ordering::Equal)
     });
-    let mut out: Vec<Vec<AtomicGroup>> = (0..n_waves).map(|_| Vec::new()).collect();
+    let mut out: Vec<Vec<AtomicGroup>> =
+        (0..n_waves).map(|_| scratch.take_groups()).collect();
     let mut used = vec![0usize; n_waves];
     let mut load = vec![0.0f64; n_waves];
-    for g in sorted {
+    for g in sorted.drain(..) {
         let need = g.d_min.min(replicas);
         // Least-loaded wave with room.
         let mut best: Option<usize> = None;
@@ -185,7 +257,7 @@ pub fn waves(groups: Vec<AtomicGroup>, replicas: usize) -> Vec<Vec<AtomicGroup>>
             Some(w) => w,
             None => {
                 // All existing waves full: open a new one.
-                out.push(Vec::new());
+                out.push(scratch.take_groups());
                 used.push(0);
                 load.push(0.0);
                 out.len() - 1
@@ -195,7 +267,15 @@ pub fn waves(groups: Vec<AtomicGroup>, replicas: usize) -> Vec<Vec<AtomicGroup>>
         load[w] += g.agg.quad;
         out[w].push(g);
     }
-    out.retain(|w| !w.is_empty());
+    // Recycle emptied containers (input buffer + unused waves).
+    out.retain_mut(|w| {
+        if w.is_empty() {
+            scratch.put_groups(std::mem::take(w));
+            false
+        } else {
+            true
+        }
+    });
     out
 }
 

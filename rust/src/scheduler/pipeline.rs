@@ -6,7 +6,11 @@
 //! scheduling latency behind accelerator compute.
 //!
 //! Built on std threads + mpsc channels (tokio is unavailable offline;
-//! a single scheduling thread matches the paper's design anyway).
+//! a single scheduling thread matches the paper's design anyway). Solver
+//! scratches (DP tables, packing buffers, the memoized cost cache) return
+//! to a process-wide pool with their capacity intact, so from the second
+//! micro-batch onward every solve on this thread reuses warm buffers
+//! instead of allocating (see `scheduler::scratch`).
 
 use std::sync::mpsc::{self, Receiver, SyncSender};
 use std::thread::JoinHandle;

@@ -1,0 +1,340 @@
+//! Reusable solver scratch (the §Perf arena): DP tables, packing buffers,
+//! and a memoized cost-model cache, recycled across candidate solves and
+//! across micro-batches so the steady-state planner stops allocating on
+//! the hot path.
+//!
+//! Three pieces:
+//!
+//! * [`DpTables`] — the flat DP/path/t_of_d buffers `dp::allocate_degrees_in`
+//!   writes into. One wave solve at GBS 512 / N 64 previously allocated
+//!   ~4 tables × (K′+1)·(N+1) cells per candidate target; now the buffers
+//!   persist and only `resize` (no-op once capacity is reached).
+//! * [`PackScratch`] — the BFD packing's sort-order buffer plus free-lists
+//!   for bin index vectors and wave containers, reclaimed after each
+//!   candidate's plan is assembled.
+//! * [`CostCache`] — memoized `T(agg, d, bw)` evaluations keyed on the
+//!   *content* of the workload aggregate plus a cost-model fingerprint
+//!   ([`crate::cost::CostCoeffs::fingerprint`]). The same atomic groups
+//!   recur across the balance-target outer search (singleton bins in
+//!   particular are shared by most targets), so candidate solves after the
+//!   first hit the cache for the bulk of their cost-model queries. Because
+//!   keys are content-addressed, entries stay valid across micro-batches
+//!   and across schedulers (the model fingerprint isolates different
+//!   coefficient sets); the map is bounded and cleared wholesale at
+//!   capacity.
+//!
+//! A process-wide pool ([`SolverScratch::acquire`]/[`SolverScratch::release`])
+//! hands scratches to the outer-search worker threads; after the first few
+//! batches every worker draws a warm scratch, which is what makes the
+//! per-micro-batch solve allocation-free in steady state (the returned
+//! `Schedule` itself still owns its plan vectors — that output allocation
+//! is inherent).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+use std::sync::{Mutex, OnceLock};
+
+use super::packing::AtomicGroup;
+use crate::cost::{CostModel, WorkloadAgg};
+
+/// Flat DP buffers for one `allocate_degrees_in` solve (reused across
+/// waves, candidates, and micro-batches).
+#[derive(Debug, Default)]
+pub struct DpTables {
+    /// `DP[i][j]` row-major, `(k+1) × (n+1)`.
+    pub(crate) dp: Vec<f64>,
+    /// Rank budget consumed by the transition at each cell (backtrack step).
+    pub(crate) slot: Vec<u32>,
+    /// Actual degree chosen at each cell (≤ slot; the prefix-min argmin).
+    pub(crate) deg: Vec<u32>,
+    /// Prefix-min of the admissible cost curve for the current group.
+    pub(crate) tmin: Vec<f64>,
+    /// Argmin degree behind each `tmin` entry.
+    pub(crate) argt: Vec<u32>,
+    /// Prefix sums of minimum degrees.
+    pub(crate) prefix: Vec<usize>,
+    /// Clamped minimum degrees.
+    pub(crate) dmin: Vec<usize>,
+}
+
+/// Reusable buffers for BFD packing and wave splitting.
+#[derive(Debug, Default)]
+pub struct PackScratch {
+    /// Sequence indices sorted by memory demand (reused sort buffer).
+    pub(crate) order: Vec<usize>,
+    /// Free-list of bin index vectors (cleared, capacity retained).
+    pub(crate) idx_pool: Vec<Vec<usize>>,
+    /// Free-list of `Vec<AtomicGroup>` containers (groups and waves).
+    pub(crate) group_pool: Vec<Vec<AtomicGroup>>,
+}
+
+const IDX_POOL_CAP: usize = 1024;
+const GROUP_POOL_CAP: usize = 64;
+
+impl PackScratch {
+    /// Pop a recycled index vector (or a fresh one).
+    pub fn take_idxs(&mut self) -> Vec<usize> {
+        self.idx_pool.pop().unwrap_or_default()
+    }
+
+    /// Pop a recycled group container (or a fresh one).
+    pub fn take_groups(&mut self) -> Vec<AtomicGroup> {
+        self.group_pool.pop().unwrap_or_default()
+    }
+
+    /// Return a drained group container to the free-list.
+    pub fn put_groups(&mut self, mut v: Vec<AtomicGroup>) {
+        debug_assert!(v.is_empty());
+        if self.group_pool.len() < GROUP_POOL_CAP {
+            v.clear();
+            self.group_pool.push(v);
+        }
+    }
+
+    /// Reclaim the index vectors of a drained-in-place group list (the
+    /// container itself stays with the caller — hand it back via
+    /// [`PackScratch::put_groups`]).
+    pub fn reclaim_groups(&mut self, groups: &mut Vec<AtomicGroup>) {
+        for g in groups.drain(..) {
+            let mut idxs = g.seq_idxs;
+            idxs.clear();
+            if self.idx_pool.len() < IDX_POOL_CAP {
+                self.idx_pool.push(idxs);
+            }
+        }
+    }
+
+    /// Reclaim every buffer inside a wave set once the candidate's plan
+    /// has been assembled (plans clone the index lists they keep).
+    pub fn reclaim_waves(&mut self, waves: &mut Vec<Vec<AtomicGroup>>) {
+        for mut wave in waves.drain(..) {
+            for g in wave.drain(..) {
+                let mut idxs = g.seq_idxs;
+                idxs.clear();
+                if self.idx_pool.len() < IDX_POOL_CAP {
+                    self.idx_pool.push(idxs);
+                }
+            }
+            self.put_groups(wave);
+        }
+    }
+}
+
+/// FNV/SplitMix-style hasher for the cost-cache keys (the keys are
+/// already well-mixed 64-bit pairs; SipHash would dominate the lookup).
+#[derive(Default)]
+pub struct KeyHasher(u64);
+
+impl Hasher for KeyHasher {
+    fn finish(&self) -> u64 {
+        self.0
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        let mut h = if self.0 == 0 { 0xcbf29ce484222325 } else { self.0 };
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        self.0 = h;
+    }
+
+    fn write_u64(&mut self, x: u64) {
+        let mut h = self.0 ^ x;
+        h = h.wrapping_mul(0x9E3779B97F4A7C15);
+        h ^= h >> 32;
+        self.0 = h;
+    }
+}
+
+/// SplitMix64 finalizer — used to build content keys.
+fn mix(mut x: u64) -> u64 {
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+const CACHE_CAP: usize = 1 << 17;
+
+/// Memoized cost-model evaluations, content-keyed (see module docs).
+#[derive(Debug, Default)]
+pub struct CostCache {
+    map: RefCell<HashMap<(u64, u64), f64, BuildHasherDefault<KeyHasher>>>,
+}
+
+impl CostCache {
+    fn key(model_fp: u64, agg: &WorkloadAgg, d: usize, bw: f64) -> (u64, u64) {
+        let a = mix(model_fp ^ agg.quad.to_bits())
+            .wrapping_add(mix(agg.tokens.to_bits() ^ (d as u64).rotate_left(32)));
+        let b = mix(agg.quad_base.to_bits() ^ bw.to_bits())
+            .wrapping_add(mix((agg.count as u64) ^ (d as u64) ^ model_fp.rotate_left(17)));
+        (a, b)
+    }
+
+    /// `T(agg, d, bw)` through the memo table. `model_fp` must be
+    /// [`crate::cost::CostCoeffs::fingerprint`] of `cost.coeffs` — it keeps
+    /// entries from different cost models apart in the shared pool.
+    pub fn t_total(
+        &self,
+        model_fp: u64,
+        cost: &CostModel,
+        agg: &WorkloadAgg,
+        d: usize,
+        bw: f64,
+    ) -> f64 {
+        let key = Self::key(model_fp, agg, d, bw);
+        if let Some(&t) = self.map.borrow().get(&key) {
+            return t;
+        }
+        let t = cost.t_total(agg, d, bw);
+        let mut map = self.map.borrow_mut();
+        if map.len() >= CACHE_CAP {
+            map.clear();
+        }
+        map.insert(key, t);
+        t
+    }
+
+    /// Number of resident entries (diagnostics/tests).
+    pub fn len(&self) -> usize {
+        self.map.borrow().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The full per-worker solver arena.
+#[derive(Debug, Default)]
+pub struct SolverScratch {
+    pub(crate) dp: DpTables,
+    pub(crate) pack: PackScratch,
+    pub(crate) cache: CostCache,
+}
+
+const POOL_CAP: usize = 64;
+
+static SCRATCH_POOL: Mutex<Vec<SolverScratch>> = Mutex::new(Vec::new());
+
+impl SolverScratch {
+    /// Draw a warm scratch from the process-wide pool (or a cold one).
+    pub fn acquire() -> SolverScratch {
+        SCRATCH_POOL
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .pop()
+            .unwrap_or_default()
+    }
+
+    /// Return a scratch to the pool for the next solve.
+    pub fn release(self) {
+        let mut pool = SCRATCH_POOL.lock().unwrap_or_else(|e| e.into_inner());
+        if pool.len() < POOL_CAP {
+            pool.push(self);
+        }
+    }
+
+}
+
+/// Worker count for the parallel plan search: `DHP_SOLVER_THREADS`
+/// overrides; otherwise available parallelism capped at 8 (the outer
+/// search has ~20 candidates — more threads than that just contend).
+pub fn solver_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        if let Ok(v) = std::env::var("DHP_SOLVER_THREADS") {
+            if let Ok(x) = v.parse::<usize>() {
+                return x.clamp(1, 64);
+            }
+        }
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .min(8)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::by_name;
+    use crate::config::TrainStage;
+    use crate::cost::{CostCoeffs, HardwareSpec, MemoryModel};
+
+    fn cost_model() -> CostModel {
+        let preset = by_name("InternVL3-8B").unwrap();
+        CostModel {
+            coeffs: CostCoeffs::analytic(&preset, TrainStage::Full, &HardwareSpec::default()),
+            memory: MemoryModel::new(&preset, 64e9, 8),
+        }
+    }
+
+    #[test]
+    fn cache_returns_exact_model_values() {
+        let cost = cost_model();
+        let fp = cost.coeffs.fingerprint();
+        let cache = CostCache::default();
+        let mut agg = WorkloadAgg::default();
+        agg.add(&crate::data::sequence::Sequence::new(0, 2000, 1000));
+        for d in 1..=16usize {
+            let want = cost.t_total(&agg, d, 12.5e9);
+            // First call computes, second must hit and return the bit-same value.
+            assert_eq!(cache.t_total(fp, &cost, &agg, d, 12.5e9).to_bits(), want.to_bits());
+            assert_eq!(cache.t_total(fp, &cost, &agg, d, 12.5e9).to_bits(), want.to_bits());
+        }
+        assert_eq!(cache.len(), 16);
+    }
+
+    #[test]
+    fn cache_separates_models_by_fingerprint() {
+        let cost_a = cost_model();
+        let mut cost_b = cost_model();
+        cost_b.coeffs.alpha1 *= 2.0;
+        assert_ne!(cost_a.coeffs.fingerprint(), cost_b.coeffs.fingerprint());
+        let cache = CostCache::default();
+        let mut agg = WorkloadAgg::default();
+        agg.add(&crate::data::sequence::Sequence::new(0, 512, 512));
+        let ta = cache.t_total(cost_a.coeffs.fingerprint(), &cost_a, &agg, 4, 12.5e9);
+        let tb = cache.t_total(cost_b.coeffs.fingerprint(), &cost_b, &agg, 4, 12.5e9);
+        assert!(ta != tb, "fingerprints failed to separate models");
+    }
+
+    #[test]
+    fn pool_roundtrips_scratches() {
+        // The pool is process-global and shared with concurrently running
+        // tests, so only the round-trip contract is asserted here (buffer
+        // capacity retention is covered deterministically by the
+        // DpTables/PackScratch tests, which own their scratches).
+        let mut s = SolverScratch::acquire();
+        s.dp.dp.resize(1024, 0.0);
+        s.release();
+        let s2 = SolverScratch::acquire();
+        s2.release();
+    }
+
+    #[test]
+    fn pack_scratch_reclaims_buffers() {
+        let mut p = PackScratch::default();
+        let mut waves = vec![vec![AtomicGroup {
+            seq_idxs: vec![1, 2, 3],
+            d_min: 1,
+            mem_bytes: 0.0,
+            capacity_bytes: 1.0,
+            work_cap: 1.0,
+            agg: WorkloadAgg::default(),
+        }]];
+        p.reclaim_waves(&mut waves);
+        assert!(waves.is_empty());
+        assert_eq!(p.idx_pool.len(), 1);
+        assert_eq!(p.group_pool.len(), 1);
+        let idxs = p.take_idxs();
+        assert!(idxs.is_empty() && idxs.capacity() >= 3);
+    }
+
+    #[test]
+    fn solver_threads_positive() {
+        assert!(solver_threads() >= 1);
+    }
+}

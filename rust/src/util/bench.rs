@@ -1,11 +1,15 @@
 //! Minimal benchmark harness (criterion is unavailable offline).
 //!
 //! `cargo bench` targets use `harness = false` and drive this: warmup,
-//! timed repetitions, mean/min/stddev reporting, plus a `BenchReport`
-//! collector that renders a criterion-like summary table.
+//! timed repetitions, mean/p50/min/stddev reporting, plus a `BenchReport`
+//! collector that renders a criterion-like summary table and can persist
+//! the results as machine-readable JSON (`BENCH_*.json`) so successive
+//! PRs can track latency trajectories (see `scripts/bench_smoke.sh`).
 
+use std::path::Path;
 use std::time::Instant;
 
+use super::json::{self, Json};
 use super::stats;
 
 /// Result of timing one benchmark case.
@@ -14,6 +18,7 @@ pub struct Timing {
     pub name: String,
     pub reps: usize,
     pub mean_s: f64,
+    pub p50_s: f64,
     pub min_s: f64,
     pub std_s: f64,
 }
@@ -21,13 +26,25 @@ pub struct Timing {
 impl Timing {
     pub fn summary(&self) -> String {
         format!(
-            "{:<44} {:>10.3} ms/iter (min {:>10.3}, sd {:>8.3}, n={})",
+            "{:<44} {:>10.3} ms/iter (p50 {:>10.3}, min {:>10.3}, sd {:>8.3}, n={})",
             self.name,
             self.mean_s * 1e3,
+            self.p50_s * 1e3,
             self.min_s * 1e3,
             self.std_s * 1e3,
             self.reps
         )
+    }
+
+    /// Milliseconds-denominated JSON record (the persisted unit).
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("mean_ms", json::num(self.mean_s * 1e3)),
+            ("p50_ms", json::num(self.p50_s * 1e3)),
+            ("min_ms", json::num(self.min_s * 1e3)),
+            ("std_ms", json::num(self.std_s * 1e3)),
+            ("reps", json::num(self.reps as f64)),
+        ])
     }
 }
 
@@ -46,6 +63,7 @@ pub fn time<F: FnMut()>(name: &str, warmup: usize, reps: usize, mut f: F) -> Tim
         name: name.to_string(),
         reps: samples.len(),
         mean_s: stats::mean(&samples),
+        p50_s: stats::percentile(&samples, 50.0),
         min_s: samples.iter().cloned().fold(f64::MAX, f64::min),
         std_s: stats::std_dev(&samples),
     }
@@ -70,6 +88,30 @@ impl BenchReport {
         let t = time(name, warmup, reps, f);
         println!("  {}", t.summary());
         self.timings.push(t);
+    }
+
+    /// All collected timings (ordered by bench() call).
+    pub fn timings(&self) -> &[Timing] {
+        &self.timings
+    }
+
+    /// Persist the collected cases as `{"bench": ..., "meta": ...,
+    /// "cases": {name: {mean_ms, p50_ms, ...}}}`. `meta` carries run
+    /// conditions (e.g. quick mode, solver threads) so trajectories
+    /// compare like with like.
+    pub fn write_json(&self, path: &Path, meta: Vec<(&str, Json)>) -> std::io::Result<()> {
+        let cases = Json::Obj(
+            self.timings
+                .iter()
+                .map(|t| (t.name.clone(), t.to_json()))
+                .collect(),
+        );
+        let doc = json::obj(vec![
+            ("bench", json::s(&self.title)),
+            ("meta", json::obj(meta)),
+            ("cases", cases),
+        ]);
+        std::fs::write(path, doc.to_string_pretty() + "\n")
     }
 
     pub fn finish(self) {
@@ -97,6 +139,7 @@ mod tests {
         assert_eq!(t.reps, 5);
         assert!(t.mean_s > 0.0);
         assert!(t.min_s <= t.mean_s);
+        assert!(t.min_s <= t.p50_s);
     }
 
     #[test]
@@ -104,5 +147,25 @@ mod tests {
         let mut r = BenchReport::new("unit");
         r.bench("noop", 0, 2, || {});
         r.finish();
+    }
+
+    #[test]
+    fn json_roundtrips_cases() {
+        let mut r = BenchReport::new("unit_json");
+        r.bench("a_case", 0, 3, || {
+            std::hint::black_box(2u64.pow(10));
+        });
+        let dir = std::env::temp_dir();
+        let path = dir.join("dhp_bench_unit.json");
+        r.write_json(&path, vec![("quick", Json::Bool(true))]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = Json::parse(&text).unwrap();
+        assert_eq!(doc.get("bench").unwrap().as_str().unwrap(), "unit_json");
+        assert!(doc.get("meta").unwrap().get("quick").unwrap().as_bool().unwrap());
+        let case = doc.get("cases").unwrap().get("a_case").unwrap();
+        assert_eq!(case.get("reps").unwrap().as_usize().unwrap(), 3);
+        assert!(case.get("mean_ms").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(case.get("p50_ms").unwrap().as_f64().unwrap() >= 0.0);
+        let _ = std::fs::remove_file(&path);
     }
 }

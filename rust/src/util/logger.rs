@@ -2,14 +2,17 @@
 //! level-filtered stderr logging, controlled by `DHP_LOG`
 //! (`error|warn|info|debug|trace`, default `info`).
 
-use std::sync::Once;
+use std::sync::{Once, OnceLock};
 use std::time::Instant;
 
 use log::{Level, LevelFilter, Metadata, Record};
-use once_cell::sync::Lazy;
 
-static START: Lazy<Instant> = Lazy::new(Instant::now);
+static START: OnceLock<Instant> = OnceLock::new();
 static INIT: Once = Once::new();
+
+fn start() -> Instant {
+    *START.get_or_init(Instant::now)
+}
 
 struct DhpLogger {
     max: Level,
@@ -24,7 +27,7 @@ impl log::Log for DhpLogger {
         if !self.enabled(record.metadata()) {
             return;
         }
-        let t = START.elapsed().as_secs_f64();
+        let t = start().elapsed().as_secs_f64();
         eprintln!(
             "[{t:9.3}s {:5} {}] {}",
             record.level(),
@@ -46,7 +49,7 @@ pub fn init() {
             Ok("trace") => Level::Trace,
             _ => Level::Info,
         };
-        Lazy::force(&START);
+        let _ = start(); // pin t = 0 at init time
         let _ = log::set_boxed_logger(Box::new(DhpLogger { max: level }));
         log::set_max_level(LevelFilter::Trace);
     });

@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Solver-latency smoke gate: runs the solver micro-bench in --quick mode
+# and prints the machine-readable record it persists at the repo root
+# (BENCH_solver_micro.json, per-case mean/p50 in ms). Run it before and
+# after solver changes — the schedule_* vs schedule_reference_* pairs
+# measure the ISSUE-1 overhaul against the retained pre-overhaul path in
+# a single invocation, so the trajectory survives across PRs.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+cargo bench --bench solver_micro -- --quick
+
+echo
+echo "=== BENCH_solver_micro.json ==="
+cat BENCH_solver_micro.json
