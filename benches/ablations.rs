@@ -11,7 +11,7 @@ use dhp::config::TrainStage;
 use dhp::data::batch::GlobalBatch;
 use dhp::data::datasets::DatasetKind;
 use dhp::experiments::harness::{run_policy, ExpContext, PolicySet};
-use dhp::parallel::{GroupKind, GroupPool};
+use dhp::parallel::GroupPool;
 use dhp::scheduler::DegreePolicy;
 use dhp::util::bench::BenchReport;
 
@@ -74,16 +74,17 @@ fn main() {
         (t_single / t_full - 1.0) * 100.0
     );
 
-    // --- Ablation 3: group pool reuse.
+    // --- Ablation 3: group pool reuse. Schedules are PLACED, so the
+    // pool keys come straight off the plans (no re-allocation here).
     println!("=== ablation: communication-group pooling ===");
     let mut pool = GroupPool::new();
     let mut created_without_pool = 0u64;
     for mb in &mbs {
         let s = sch.schedule(&mb.sequences);
         for plan in &s.waves {
-            let degrees: Vec<usize> = plan.groups.iter().map(|g| g.degree).collect();
-            for ranks in ctx.mesh().allocate(&degrees) {
-                pool.acquire(GroupKind::ContextParallel, ranks);
+            for g in &plan.groups {
+                let (kind, ranks) = g.pool_key();
+                pool.acquire(kind, ranks);
                 created_without_pool += 1;
             }
         }

@@ -88,10 +88,13 @@ fn main() -> anyhow::Result<()> {
         std::thread::sleep(std::time::Duration::from_millis(20));
         let done = pipe.recv().expect("schedule");
         println!(
-            "  step {}: plan ready (latency {:.2} ms, solver {:.2} ms) — hidden: {}",
+            "  step {}: plan ready (latency {:.2} ms, solver {:.2} ms, \
+             group prewarm {:.0} ms, pool hit-rate {:.2}) — hidden: {}",
             done.step,
             done.schedule_latency_s * 1e3,
             done.schedule.solve_time_s * 1e3,
+            done.reconfig_time_s * 1e3,
+            done.pool.hit_rate(),
             done.schedule_latency_s < 0.020,
         );
     }

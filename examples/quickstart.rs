@@ -52,8 +52,11 @@ fn main() -> anyhow::Result<()> {
         println!("  wave {wi} (est makespan {:.3}s):", wave.est_makespan_s);
         for g in &wave.groups {
             println!(
-                "    CP degree {} <- {} seqs, {:.0} tokens (est {:.3}s)",
+                "    CP degree {} on ranks {:?} ({:.0} GB/s ring) <- {} seqs, \
+                 {:.0} tokens (est {:.3}s)",
                 g.degree,
+                g.ranks,
+                g.ring_bw / 1e9,
                 g.seq_idxs.len(),
                 g.agg.tokens,
                 g.est_time_s

@@ -50,6 +50,14 @@ fn main() -> anyhow::Result<()> {
     let planner = ctx.micro_batch_planner();
     let sim = ctx.sim();
     let mut sampler = ctx.sampler();
+    // One persistent communication-group pool per policy: reconfiguration
+    // cost (pool misses) is charged into each iteration, so group reuse
+    // across iterations is part of the measurement.
+    let mut pools = [
+        dhp::parallel::GroupPool::new(),
+        dhp::parallel::GroupPool::new(),
+        dhp::parallel::GroupPool::new(),
+    ];
 
     let mut table = Table::new(
         "per-iteration time (s) and DHP plan",
@@ -62,23 +70,31 @@ fn main() -> anyhow::Result<()> {
             sequences: sampler.sample_batch(gbs),
         };
         let mbs = planner.plan(&batch);
-        let run = |policy: &dyn SchedulePolicy| -> (f64, Vec<usize>) {
+        let run = |policy: &dyn SchedulePolicy,
+                   pool: &mut dhp::parallel::GroupPool|
+         -> (f64, Vec<usize>) {
             let scheduled: Vec<(Vec<Sequence>, Schedule)> = mbs
                 .iter()
                 .map(|mb| (mb.sequences.clone(), policy.schedule(&mb.sequences)))
                 .collect();
+            if iter == 0 {
+                // Warm pool at training start (paper §5).
+                dhp::experiments::harness::prewarm_from_schedules(pool, &scheduled);
+            }
             let degrees = scheduled
                 .iter()
                 .flat_map(|(_, s)| s.degree_multiset())
                 .collect();
             (
-                sim.execute_iteration(&scheduled, policy.comm_kind()).iter_time_s,
+                sim.execute_iteration(&scheduled, policy.comm_kind(), pool)
+                    .iter_time_s,
                 degrees,
             )
         };
-        let (t_mega, _) = run(&set.megatron);
-        let (t_ds, _) = run(&set.deepspeed);
-        let (t_dhp, mut degrees) = run(&set.dhp);
+        let [pool_mega, pool_ds, pool_dhp] = &mut pools;
+        let (t_mega, _) = run(&set.megatron, pool_mega);
+        let (t_ds, _) = run(&set.deepspeed, pool_ds);
+        let (t_dhp, mut degrees) = run(&set.dhp, pool_dhp);
         degrees.sort_unstable_by(|a, b| b.cmp(a));
         degrees.dedup();
         totals[0] += t_mega;

@@ -51,6 +51,13 @@ impl DeepSpeedUlysses {
     pub fn degree(&self) -> usize {
         self.inner.degree
     }
+
+    /// Place the static grid on a real cluster topology (see
+    /// [`MegatronStaticCp::with_mesh`]).
+    pub fn with_mesh(mut self, mesh: crate::parallel::mesh::DeviceMesh) -> Self {
+        self.inner = self.inner.with_mesh(mesh);
+        self
+    }
 }
 
 impl SchedulePolicy for DeepSpeedUlysses {

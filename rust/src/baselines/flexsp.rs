@@ -108,8 +108,10 @@ mod tests {
                 sequences: sampler.sample_batch(96),
             };
             for mb in ctx2.micro_batch_planner().plan(&batch) {
-                t_dhp += dhp.schedule(&mb.sequences).est_time_s;
-                t_flex += flex.schedule(&mb.sequences).est_time_s;
+                // Search objective: the ablation is about the degree
+                // search space, not placement fragmentation noise.
+                t_dhp += dhp.schedule(&mb.sequences).search_est_time_s;
+                t_flex += flex.schedule(&mb.sequences).search_est_time_s;
             }
         }
         assert!(

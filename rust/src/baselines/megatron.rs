@@ -10,7 +10,8 @@
 use crate::cluster::CommKind;
 use crate::cost::{CostModel, WorkloadAgg};
 use crate::data::sequence::Sequence;
-use crate::scheduler::{Plan, PlannedGroup, Schedule};
+use crate::parallel::mesh::DeviceMesh;
+use crate::scheduler::{place_plan, Plan, PlannedGroup, Schedule};
 
 use super::SchedulePolicy;
 
@@ -20,8 +21,13 @@ pub struct MegatronStaticCp {
     pub degree: usize,
     pub replicas: usize,
     pub cost: CostModel,
-    /// Ring bandwidth the groups will see (for est_time bookkeeping).
+    /// Ring bandwidth the groups are assumed to see pre-placement (the
+    /// draft-level est_time bookkeeping).
     pub bandwidth: f64,
+    /// Physical topology the static grid is placed on. Defaults to a
+    /// uniform single-fabric mesh at `bandwidth`; the experiment harness
+    /// installs the real cluster mesh via [`MegatronStaticCp::with_mesh`].
+    pub mesh: DeviceMesh,
 }
 
 impl MegatronStaticCp {
@@ -33,7 +39,17 @@ impl MegatronStaticCp {
             replicas,
             cost,
             bandwidth,
+            mesh: DeviceMesh::uniform(replicas, bandwidth),
         }
+    }
+
+    /// Place the static grid on a real cluster topology (groups that fit
+    /// inside a node then ride the fast fabric, like a real Megatron
+    /// launch would).
+    pub fn with_mesh(mut self, mesh: DeviceMesh) -> Self {
+        assert_eq!(mesh.replicas, self.replicas, "mesh/replica mismatch");
+        self.mesh = mesh;
+        self
     }
 
     /// The paper's framing: the static degree is forced by the longest
@@ -157,8 +173,13 @@ impl SchedulePolicy for MegatronStaticCp {
                 .iter()
                 .map(|g| g.est_time_s)
                 .fold(0.0f64, f64::max);
-            schedule.est_time_s += plan.est_makespan_s;
-            schedule.waves.push(plan);
+            // Static grids need no reuse hint: the same degree vector
+            // places identically every step, so the pool stays hot by
+            // construction.
+            let placed = place_plan(&plan, &self.mesh, None, &self.cost);
+            schedule.search_est_time_s += plan.est_makespan_s;
+            schedule.est_time_s += placed.est_makespan_s;
+            schedule.waves.push(placed);
         }
         schedule.solve_time_s = t0.elapsed().as_secs_f64();
         schedule

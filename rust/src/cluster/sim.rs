@@ -1,5 +1,13 @@
 //! Discrete-event execution of parallelism plans over the simulated
 //! cluster.
+//!
+//! The simulator consumes scheduler-produced PLACED plans: every group
+//! arrives with its concrete rank set, so ground-truth bandwidths come
+//! from the placement the scheduler committed to — the simulator never
+//! re-derives placement (no internal `mesh.allocate`). Communication
+//! groups are resolved through the caller's [`GroupPool`]; pool misses
+//! charge the (simulated) HCCL group-creation cost into the iteration
+//! time, which is what makes the paper's reuse claim measurable.
 
 use crate::config::presets::ModelPreset;
 use crate::config::{ClusterConfig, TrainStage};
@@ -7,7 +15,8 @@ use crate::cost::exact;
 use crate::cost::HardwareSpec;
 use crate::data::sequence::Sequence;
 use crate::parallel::mesh::DeviceMesh;
-use crate::scheduler::{Plan, Schedule};
+use crate::parallel::pool::GroupPool;
+use crate::scheduler::{PlacedPlan, Schedule};
 
 /// Communication pattern of the sequence-dimension parallelism.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -41,7 +50,11 @@ pub struct IterationReport {
     pub exec_time_s: f64,
     /// Gradient-synchronization time (ZeRO-style all-reduce).
     pub grad_sync_s: f64,
-    /// exec + grad sync.
+    /// Communication-group reconfiguration time actually paid this
+    /// iteration: the pool-miss creation cost for groups that were not
+    /// already established (a warm pool pays nothing).
+    pub reconfig_time_s: f64,
+    /// exec + grad sync + reconfiguration.
     pub iter_time_s: f64,
     /// Total tokens processed.
     pub tokens: u64,
@@ -121,29 +134,28 @@ impl ClusterSim {
         }
     }
 
-    /// Execute one wave: place groups on the mesh, compute each group's
-    /// ground-truth time, derive makespan + idle fraction.
+    /// Execute one PLACED wave: compute each group's ground-truth time on
+    /// the rank set the scheduler committed it to, derive makespan + idle
+    /// fraction. The simulator performs no placement of its own.
     pub fn execute_plan(
         &self,
         seqs: &[Sequence],
-        plan: &Plan,
+        plan: &PlacedPlan,
         comm: CommKind,
     ) -> WaveReport {
-        let degrees: Vec<usize> = plan.groups.iter().map(|g| g.degree).collect();
-        let placements = self.mesh.allocate(&degrees);
         let mut group_times = Vec::with_capacity(plan.groups.len());
-        for (g, ranks) in plan.groups.iter().zip(&placements) {
+        for g in &plan.groups {
             let group_seqs: Vec<Sequence> =
                 g.seq_idxs.iter().map(|&i| seqs[i].clone()).collect();
-            group_times.push(self.group_time(&group_seqs, g.degree, ranks, comm));
+            group_times.push(self.group_time(&group_seqs, g.degree, &g.ranks, comm));
         }
         let makespan = group_times.iter().fold(0.0f64, |a, &b| a.max(b));
         // Rank·seconds busy vs available (idle ranks: whole wave idle).
         let total_ranks = self.mesh.replicas as f64;
         let busy: f64 = group_times
             .iter()
-            .zip(&degrees)
-            .map(|(&t, &d)| t * d as f64)
+            .zip(plan.groups.iter())
+            .map(|(&t, g)| t * g.degree as f64)
             .sum();
         let idle_fraction = if makespan > 0.0 {
             1.0 - busy / (makespan * total_ranks)
@@ -190,27 +202,44 @@ impl ClusterSim {
 
     /// Execute one full training iteration: a set of micro-batch
     /// schedules (each over its own sequence list) + gradient sync.
+    ///
+    /// Every placed group is resolved through `pool`; groups not already
+    /// established pay the (simulated) HCCL creation cost, charged into
+    /// `iter_time_s` as reconfiguration time. Callers persist the pool
+    /// across steps (and typically prewarm it at training start), so a
+    /// stationary workload's reconfiguration cost decays toward zero —
+    /// the measurable form of the paper's group-reuse claim.
     pub fn execute_iteration(
         &self,
         micro_batches: &[(Vec<Sequence>, Schedule)],
         comm: CommKind,
+        pool: &mut GroupPool,
     ) -> IterationReport {
+        let reconfig_before = pool.stats().create_time_s;
         let mut waves = Vec::new();
         let mut exec = 0.0;
         let mut tokens = 0u64;
         for (seqs, schedule) in micro_batches {
             tokens += seqs.iter().map(|s| s.len()).sum::<u64>();
+            for plan in &schedule.waves {
+                for g in &plan.groups {
+                    let (kind, ranks) = g.pool_key();
+                    pool.acquire(kind, ranks);
+                }
+            }
             for w in self.execute_schedule(seqs, schedule, comm) {
                 exec += w.makespan_s;
                 waves.push(w);
             }
         }
+        let reconfig = pool.stats().create_time_s - reconfig_before;
         let grad_sync = self.grad_sync_time();
         IterationReport {
             waves,
             exec_time_s: exec,
             grad_sync_s: grad_sync,
-            iter_time_s: exec + grad_sync,
+            reconfig_time_s: reconfig,
+            iter_time_s: exec + grad_sync + reconfig,
             tokens,
         }
     }
@@ -296,7 +325,8 @@ mod tests {
                 (seqs, schedule)
             })
             .collect();
-        let rep = s.execute_iteration(&mbs, CommKind::RingCp);
+        let mut pool = crate::parallel::GroupPool::new();
+        let rep = s.execute_iteration(&mbs, CommKind::RingCp, &mut pool);
         assert_eq!(
             rep.tokens,
             mbs.iter()
@@ -304,8 +334,23 @@ mod tests {
                 .sum::<u64>()
         );
         assert!(rep.iter_time_s > rep.exec_time_s);
+        // Cold pool: every unique group charged exactly once.
+        assert!(rep.reconfig_time_s > 0.0);
+        assert!(
+            (rep.reconfig_time_s - pool.stats().create_time_s).abs() < 1e-12
+        );
+        assert!(
+            (rep.iter_time_s
+                - (rep.exec_time_s + rep.grad_sync_s + rep.reconfig_time_s))
+                .abs()
+                < 1e-12
+        );
         assert!(rep.tokens_per_sec() > 0.0);
         assert!(rep.tokens_per_sec_per_device(16) * 16.0 - rep.tokens_per_sec() < 1e-9);
+        // A warm pool re-executing the same iteration pays nothing.
+        let rep2 = s.execute_iteration(&mbs, CommKind::RingCp, &mut pool);
+        assert_eq!(rep2.reconfig_time_s, 0.0);
+        assert!(rep2.iter_time_s < rep.iter_time_s + 1e-12);
     }
 
     #[test]

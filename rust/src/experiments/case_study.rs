@@ -59,8 +59,13 @@ pub fn compute_case(dataset: DatasetKind, npus: usize, gbs: usize, seed: u64) ->
                 (mb.sequences.clone(), s)
             })
             .collect();
+        // One-batch case study: compare steady-state iteration time, so
+        // execute against a warm pool (startup creation is not the
+        // phenomenon Table 4 isolates).
+        let mut pool = crate::parallel::GroupPool::new();
+        super::harness::prewarm_from_schedules(&mut pool, &scheduled);
         let t = sim
-            .execute_iteration(&scheduled, policy.comm_kind())
+            .execute_iteration(&scheduled, policy.comm_kind(), &mut pool)
             .iter_time_s;
         (degrees, t)
     };

@@ -87,14 +87,25 @@ pub fn schedule_cmd(args: &Args) -> Result<()> {
             gbs,
             schedule.solve_time_s * 1e3
         ),
-        &["wave", "group", "degree", "#seqs", "tokens", "est time (s)"],
+        &["wave", "group", "degree", "ranks", "#seqs", "tokens", "est time (s)"],
     );
     for (wi, wave) in schedule.waves.iter().enumerate() {
         for (gi, g) in wave.groups.iter().enumerate() {
+            let ranks = if g.ranks.len() <= 8 {
+                format!("{:?}", g.ranks)
+            } else {
+                format!(
+                    "[{}..{}] ({})",
+                    g.ranks.first().unwrap(),
+                    g.ranks.last().unwrap(),
+                    g.ranks.len()
+                )
+            };
             t.row(vec![
                 wi.to_string(),
                 gi.to_string(),
                 g.degree.to_string(),
+                ranks,
                 g.seq_idxs.len().to_string(),
                 format!("{:.0}", g.agg.tokens),
                 format!("{:.4}", g.est_time_s),

@@ -20,6 +20,12 @@ pub struct OverheadRow {
     pub computing_s: f64,
     pub schedule_ms: f64,
     pub solver_ms: f64,
+    /// Mean simulated group-reconfiguration time charged per measured
+    /// iteration (pool misses only — the paper claims this is negligible
+    /// once the pool is warm, and now we measure it).
+    pub reconfig_ms: f64,
+    /// Communication-group pool hit-rate over the measured window.
+    pub pool_hit_rate: f64,
 }
 
 pub fn compute_row(
@@ -43,16 +49,28 @@ pub fn compute_row(
     OverheadRow {
         gbs,
         npus,
-        computing_s: r.mean_iter_s,
+        // Pure execution + grad-sync: reconfiguration is reported in its
+        // own column, so the Computing column stays comparable across
+        // runs and the columns are additive.
+        computing_s: r.mean_iter_s - r.mean_reconfig_s,
         schedule_ms: r.mean_schedule_s * 1e3,
         solver_ms: r.mean_solver_s * 1e3,
+        reconfig_ms: r.mean_reconfig_s * 1e3,
+        pool_hit_rate: r.pool.hit_rate(),
     }
 }
 
 fn print_table(title: &str, label: &str, rows: &[OverheadRow], key: impl Fn(&OverheadRow) -> usize) {
     let mut t = Table::new(
         title,
-        &[label, "Computing Time (s)", "Schedule Time (ms)", "Solver Time (ms)"],
+        &[
+            label,
+            "Computing Time (s)",
+            "Schedule Time (ms)",
+            "Solver Time (ms)",
+            "Reconfig (ms)",
+            "Pool hit-rate",
+        ],
     );
     for r in rows {
         t.row(vec![
@@ -60,6 +78,8 @@ fn print_table(title: &str, label: &str, rows: &[OverheadRow], key: impl Fn(&Ove
             format!("{:.2}", r.computing_s),
             format!("{:.0}", r.schedule_ms),
             format!("{:.1}", r.solver_ms),
+            format!("{:.1}", r.reconfig_ms),
+            format!("{:.2}", r.pool_hit_rate),
         ]);
     }
     t.print();
@@ -130,6 +150,14 @@ mod tests {
             r.schedule_ms / 1e3 < r.computing_s,
             "schedule {} ms vs compute {} s — not hideable",
             r.schedule_ms,
+            r.computing_s
+        );
+        // The reuse claim: warm-pool reconfiguration must be a vanishing
+        // fraction of the iteration.
+        assert!(
+            r.reconfig_ms / 1e3 < r.computing_s * 0.1,
+            "reconfig {} ms vs compute {} s",
+            r.reconfig_ms,
             r.computing_s
         );
     }

@@ -2,10 +2,70 @@
 //! allocates contiguous, locality-preserving rank ranges to CP groups —
 //! a group that fits inside one node rides the fast intra-node fabric
 //! (HCCS), a group spanning nodes is bottlenecked by the inter-node link.
+//!
+//! Placement is the bridge between a *logical* plan (degrees only) and a
+//! *placed* plan (concrete rank sets): [`DeviceMesh::place`] assigns every
+//! group its ranks deterministically, optionally steered by a
+//! [`WaveHint`] — the rank blocks the same wave slot used on the previous
+//! scheduling step. Preferring those blocks is what makes consecutive
+//! steps of a stationary workload key into the same pooled communication
+//! groups ([`super::pool::GroupPool`]), which is the paper's §5 claim that
+//! reconfiguration cost amortizes to nothing.
+
+use std::collections::HashMap;
 
 use crate::config::ClusterConfig;
 
 use super::group::RankId;
+
+/// Placement preferences for ONE wave slot: the rank blocks the previous
+/// realization of this slot used, keyed by group degree, in the order the
+/// placer assigned them (largest-degree first). Replaying the same degree
+/// vector against the same hint reproduces the previous placement
+/// *exactly*, which is both the determinism guarantee the scheduler's
+/// bit-identity tests rely on and the mechanism that turns pool misses
+/// into hits across steps.
+#[derive(Debug, Clone, Default)]
+pub struct WaveHint {
+    blocks: HashMap<usize, Vec<Vec<RankId>>>,
+}
+
+impl WaveHint {
+    /// Record one placed block (ranks must be sorted — they come from the
+    /// placer, which emits sorted sets).
+    pub fn remember(&mut self, ranks: &[RankId]) {
+        let entry = self.blocks.entry(ranks.len()).or_default();
+        // A block the hint already holds is not re-recorded: duplicate
+        // entries would let two groups of one wave race for the same
+        // ranks and fall through to fresh allocation.
+        if !entry.iter().any(|b| b == ranks) {
+            entry.push(ranks.to_vec());
+        }
+    }
+
+    fn candidates(&self, degree: usize) -> Option<&[Vec<RankId>]> {
+        self.blocks.get(&degree).map(|v| v.as_slice())
+    }
+}
+
+/// Placement memory across scheduling steps: one [`WaveHint`] per wave
+/// slot of the previously placed schedule. Wave slots are matched by
+/// index — waves execute serially over the full cluster, so slot `w` of
+/// step `t` reuses slot `w` of step `t-1`.
+#[derive(Debug, Clone, Default)]
+pub struct PlacementHint {
+    pub waves: Vec<WaveHint>,
+}
+
+impl PlacementHint {
+    pub fn wave(&self, idx: usize) -> Option<&WaveHint> {
+        self.waves.get(idx)
+    }
+
+    pub fn clear(&mut self) {
+        self.waves.clear();
+    }
+}
 
 /// Physical placement of replica ranks.
 #[derive(Debug, Clone)]
@@ -23,6 +83,18 @@ impl DeviceMesh {
             replicas_per_node: cluster.replicas_per_node().max(1),
             intra_bw: cluster.intra_bw,
             inter_bw: cluster.inter_bw,
+        }
+    }
+
+    /// A degenerate single-fabric mesh: every link runs at `bw`. Used by
+    /// baseline policies constructed without cluster topology (their
+    /// uniform-bandwidth estimates then match the pre-placement ones).
+    pub fn uniform(replicas: usize, bw: f64) -> Self {
+        DeviceMesh {
+            replicas,
+            replicas_per_node: replicas.max(1),
+            intra_bw: bw,
+            inter_bw: bw,
         }
     }
 
@@ -57,8 +129,18 @@ impl DeviceMesh {
     /// a single node (riding the fast intra-node fabric); larger groups
     /// take whole-node spans first. This mirrors what a real MPU
     /// reconfiguration does when rebuilding HCCL rings. Returns per-group
-    /// rank vectors in the *input* order. Panics if Σ degrees > replicas.
+    /// rank vectors in the *input* order, each sorted ascending.
+    /// Deterministic: the same degree vector always yields the same
+    /// blocks. Panics if Σ degrees > replicas.
     pub fn allocate(&self, degrees: &[usize]) -> Vec<Vec<RankId>> {
+        self.place(degrees, None)
+    }
+
+    /// [`DeviceMesh::allocate`] with reuse preference: before falling back
+    /// to the locality heuristic, each group first tries the hint's blocks
+    /// of its degree (in recorded order, first fully-free block wins).
+    /// With `hint = None` this IS the historical `allocate` behavior.
+    pub fn place(&self, degrees: &[usize], hint: Option<&WaveHint>) -> Vec<Vec<RankId>> {
         let total: usize = degrees.iter().sum();
         assert!(
             total <= self.replicas,
@@ -67,18 +149,58 @@ impl DeviceMesh {
         );
         let rpn = self.replicas_per_node;
         let n_nodes = self.replicas.div_ceil(rpn);
-        // Free slots per node.
+        // Free slots per node (kept sorted), plus a flat freeness map so
+        // hinted blocks can be membership-tested in O(d).
         let mut free: Vec<Vec<RankId>> = (0..n_nodes)
             .map(|node| {
                 (node * rpn..((node + 1) * rpn).min(self.replicas)).collect()
             })
             .collect();
+        let mut is_free = vec![true; self.replicas];
+        // Hinted blocks are consumed at most once per wave placement.
+        let mut hint_used: HashMap<usize, Vec<bool>> = HashMap::new();
         // Place largest first (stable order for determinism).
         let mut order: Vec<usize> = (0..degrees.len()).collect();
         order.sort_by_key(|&i| std::cmp::Reverse(degrees[i]));
         let mut out = vec![Vec::new(); degrees.len()];
-        for &i in &order {
+        'groups: for &i in &order {
             let d = degrees[i];
+            // Reuse preference: the first still-free block this degree
+            // used last step. Matching the k-th degree-d group to the
+            // k-th recorded block replays the previous placement when the
+            // degree vector is unchanged.
+            if let Some(cands) = hint.and_then(|h| h.candidates(d)) {
+                let used = hint_used
+                    .entry(d)
+                    .or_insert_with(|| vec![false; cands.len()]);
+                // Blocks under key d all have length d (WaveHint keys by
+                // block length), so only freeness needs checking.
+                for (bi, block) in cands.iter().enumerate() {
+                    if used[bi]
+                        || !block
+                            .iter()
+                            .all(|&r| is_free.get(r).copied().unwrap_or(false))
+                    {
+                        continue;
+                    }
+                    // Locality guard: never let reuse downgrade a group
+                    // that fits inside one node onto a node-spanning
+                    // block — pool hits must not cost ring bandwidth.
+                    // (Replay stays exact: a fragmented block the
+                    // previous step produced via fresh fallback is
+                    // re-derived identically by the fallback below.)
+                    if d <= rpn && !self.is_intra_node(block) {
+                        continue;
+                    }
+                    used[bi] = true;
+                    for &r in block {
+                        is_free[r] = false;
+                        free[self.node_of(r)].retain(|&x| x != r);
+                    }
+                    out[i] = block.clone();
+                    continue 'groups;
+                }
+            }
             if d <= rpn {
                 // Best fit: the node whose free count is smallest but
                 // sufficient (preserves big holes for later groups).
@@ -89,7 +211,11 @@ impl DeviceMesh {
                     .min_by_key(|(_, f)| f.len())
                     .map(|(n, _)| n);
                 if let Some(n) = node {
-                    out[i] = free[n].drain(..d).collect();
+                    let ranks: Vec<RankId> = free[n].drain(..d).collect();
+                    for &r in &ranks {
+                        is_free[r] = false;
+                    }
+                    out[i] = ranks;
                     continue;
                 }
             }
@@ -108,6 +234,9 @@ impl DeviceMesh {
                 need -= take;
             }
             assert_eq!(need, 0, "allocator accounting bug");
+            for &r in &ranks {
+                is_free[r] = false;
+            }
             ranks.sort_unstable();
             out[i] = ranks;
         }
@@ -169,5 +298,72 @@ mod tests {
     #[should_panic(expected = "allocate")]
     fn over_allocation_panics() {
         mesh().allocate(&[60, 10]);
+    }
+
+    #[test]
+    fn allocate_is_deterministic() {
+        let m = mesh();
+        let degrees = [7usize, 5, 5, 3, 2, 1, 1];
+        let a = m.allocate(&degrees);
+        let b = m.allocate(&degrees);
+        assert_eq!(a, b, "same degrees must always place identically");
+        // And place() with no hint IS allocate.
+        assert_eq!(a, m.place(&degrees, None));
+    }
+
+    #[test]
+    fn hint_replays_previous_placement() {
+        let m = mesh();
+        let degrees = [6usize, 4, 2, 1, 1, 1];
+        let first = m.allocate(&degrees);
+        let mut hint = WaveHint::default();
+        for block in &first {
+            hint.remember(block);
+        }
+        let replay = m.place(&degrees, Some(&hint));
+        assert_eq!(first, replay, "unchanged degree vector must replay");
+    }
+
+    #[test]
+    fn hint_survives_partial_degree_change() {
+        let m = mesh();
+        let first = m.allocate(&[4usize, 4, 4]);
+        let mut hint = WaveHint::default();
+        for block in &first {
+            hint.remember(block);
+        }
+        // One group changes degree; the two surviving degree-4 groups must
+        // still land on previously used blocks (→ pool hits).
+        let next = m.place(&[4usize, 4, 3], Some(&hint));
+        assert!(first.contains(&next[0]));
+        assert!(first.contains(&next[1]));
+        assert_ne!(next[0], next[1]);
+        // Disjointness holds with the fresh degree-3 group.
+        let mut all: Vec<RankId> = next.iter().flatten().copied().collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 11);
+    }
+
+    #[test]
+    fn stale_hint_blocks_are_skipped() {
+        let m = mesh();
+        let mut hint = WaveHint::default();
+        hint.remember(&[0, 1, 2, 3, 4, 5, 6, 7]); // will be free
+        hint.remember(&[200, 201]); // out of range — must be ignored
+        let out = m.place(&[8usize, 2], Some(&hint));
+        assert_eq!(out[0], (0..8).collect::<Vec<_>>());
+        assert_eq!(out[1].len(), 2);
+        assert!(out[1].iter().all(|&r| r < 64));
+    }
+
+    #[test]
+    fn uniform_mesh_is_single_fabric() {
+        let m = DeviceMesh::uniform(16, 12.5e9);
+        assert_eq!(m.ring_bandwidth(&[0, 15]), 12.5e9);
+        assert!(m.is_intra_node(&[0, 15]));
+        let groups = m.allocate(&[8, 8]);
+        assert_eq!(groups[0].len(), 8);
+        assert_eq!(groups[1].len(), 8);
     }
 }

@@ -7,6 +7,7 @@ use anyhow::{bail, Result};
 use super::group::{CommGroup, GroupKind, RankId};
 use super::mesh::DeviceMesh;
 use super::pool::{GroupPool, PoolStats};
+use crate::scheduler::{PlacedPlan, Schedule};
 
 /// The live parallel state of the training job.
 #[derive(Debug)]
@@ -34,8 +35,40 @@ impl ParallelState {
         }
     }
 
-    /// Reconfigure the CP layout for a new micro-batch: allocate ranks
-    /// for the requested degrees and acquire (pooled) groups.
+    /// Reconfigure the CP layout from a PLACED plan: the scheduler
+    /// already bound ranks, so this validates the placement invariants
+    /// and acquires pooled groups directly — no mesh re-allocation
+    /// happens on the execution path.
+    pub fn reconfigure_cp_placed(&mut self, plan: &PlacedPlan) -> Result<&[CommGroup]> {
+        plan.validate_placement(self.mesh.replicas)?;
+        self.current_cp.clear();
+        for g in &plan.groups {
+            let (kind, ranks) = g.pool_key();
+            let cg = self.pool.acquire(kind, ranks).clone();
+            self.current_cp.push(cg);
+        }
+        self.reconfigurations += 1;
+        Ok(&self.current_cp)
+    }
+
+    /// Prepare (prewarm) every wave of a placed schedule ONE STEP AHEAD
+    /// of execution — the paper's CPU-side overlap: group creation for
+    /// the next batch happens while the accelerator is busy with the
+    /// current one. Returns the simulated creation seconds paid for pool
+    /// misses during this prepare. `current_cp` is left on the
+    /// schedule's last wave.
+    pub fn prepare_schedule(&mut self, schedule: &Schedule) -> Result<f64> {
+        let before = self.pool.stats().create_time_s;
+        for wave in &schedule.waves {
+            self.reconfigure_cp_placed(wave)?;
+        }
+        Ok(self.pool.stats().create_time_s - before)
+    }
+
+    /// Reconfigure the CP layout for a new micro-batch from degrees only:
+    /// allocate ranks through the mesh, then acquire (pooled) groups.
+    /// Retained for degree-level callers; the scheduling path goes
+    /// through [`ParallelState::reconfigure_cp_placed`].
     ///
     /// Validates the paper's Cond. (6): Σ d_p ≤ N.
     pub fn reconfigure_cp(&mut self, degrees: &[usize]) -> Result<&[CommGroup]> {
@@ -148,5 +181,54 @@ mod tests {
         let g0 = st.cp_group_of(0).unwrap();
         assert_eq!(g0.degree(), 8);
         assert!(st.cp_group_of(15).is_some());
+    }
+
+    fn placed(groups: &[(usize, Vec<usize>)]) -> crate::scheduler::PlacedPlan {
+        crate::scheduler::PlacedPlan {
+            groups: groups
+                .iter()
+                .map(|(d, ranks)| crate::scheduler::PlacedGroup {
+                    degree: *d,
+                    seq_idxs: vec![],
+                    agg: Default::default(),
+                    est_time_s: 0.0,
+                    ranks: ranks.clone(),
+                    ring_bw: 1.0,
+                })
+                .collect(),
+            est_makespan_s: 0.0,
+            search_makespan_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn placed_reconfigure_uses_exact_ranks_and_pools() {
+        let mut st = state();
+        let plan = placed(&[(2, vec![3, 9]), (1, vec![0])]);
+        let groups = st.reconfigure_cp_placed(&plan).unwrap();
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0].ranks, vec![3, 9]);
+        let misses = st.pool_stats().misses;
+        // Same placement again: all pool hits, no new groups.
+        st.reconfigure_cp_placed(&plan).unwrap();
+        assert_eq!(st.pool_stats().misses, misses);
+        assert_eq!(st.reconfigurations, 2);
+    }
+
+    #[test]
+    fn placed_reconfigure_rejects_bad_placements() {
+        let mut st = state();
+        // Overlapping ranks within one wave.
+        assert!(st
+            .reconfigure_cp_placed(&placed(&[(2, vec![0, 1]), (2, vec![1, 2])]))
+            .is_err());
+        // Arity mismatch.
+        assert!(st
+            .reconfigure_cp_placed(&placed(&[(3, vec![0, 1])]))
+            .is_err());
+        // Out-of-range rank (16 replicas).
+        assert!(st
+            .reconfigure_cp_placed(&placed(&[(1, vec![16])]))
+            .is_err());
     }
 }

@@ -8,7 +8,7 @@ use std::collections::HashMap;
 use super::group::{CommGroup, GroupKind, RankId, GROUP_CREATE_COST_S};
 
 /// Pool statistics (reported by Table-4-style case studies and the
-//  scalability benches).
+/// scalability benches).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct PoolStats {
     pub hits: u64,
@@ -70,9 +70,16 @@ impl GroupPool {
         for (kind, ranks) in entries {
             self.acquire(kind, ranks);
         }
-        // Prewarming should not count as runtime traffic.
-        self.stats.hits = 0;
-        self.stats.misses = 0;
+        // Prewarming should not count as runtime traffic — neither the
+        // hit/miss counters nor the creation-time charge (prewarmed pools
+        // report zero runtime creation cost).
+        self.reset_stats();
+    }
+
+    /// Zero the traffic counters while keeping the cached groups (for
+    /// windowed hit-rate measurements, e.g. "after a 10-step warmup").
+    pub fn reset_stats(&mut self) {
+        self.stats = PoolStats::default();
     }
 
     pub fn len(&self) -> usize {
@@ -130,8 +137,26 @@ mod tests {
         ]);
         assert_eq!(pool.len(), 2);
         assert_eq!(pool.stats().hits + pool.stats().misses, 0);
+        assert_eq!(
+            pool.stats().create_time_s,
+            0.0,
+            "prewarmed pools must report zero runtime creation cost"
+        );
         pool.acquire(GroupKind::ContextParallel, vec![0, 1]);
         assert_eq!(pool.stats().hits, 1);
+        assert_eq!(pool.stats().create_time_s, 0.0);
+    }
+
+    #[test]
+    fn reset_stats_keeps_groups() {
+        let mut pool = GroupPool::new();
+        pool.acquire(GroupKind::ContextParallel, vec![0, 1]);
+        pool.reset_stats();
+        assert_eq!(pool.len(), 1);
+        assert_eq!(pool.stats(), PoolStats::default());
+        pool.acquire(GroupKind::ContextParallel, vec![0, 1]);
+        assert_eq!(pool.stats().hits, 1);
+        assert_eq!(pool.stats().misses, 0);
     }
 
     #[test]

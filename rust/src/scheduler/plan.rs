@@ -1,7 +1,24 @@
 //! Plan types: the output of the DHP scheduler for one micro-batch.
+//!
+//! Two layers, deliberately:
+//!
+//! * [`Plan`]/[`PlannedGroup`] — the *logical* draft the solver's DP
+//!   emits: degrees and sequence assignments, costed against the
+//!   uniform-fabric heuristic (a degree that fits in one node is assumed
+//!   intra-node). This is what the outer search compares candidates on.
+//! * [`PlacedPlan`]/[`PlacedGroup`] — the *physical* realization: every
+//!   group carries its concrete rank set, the ring bandwidth of that
+//!   exact set, and the `(GroupKind, ranks)` key the communication-group
+//!   pool is addressed by. Estimates are re-derived against the actual
+//!   placement, so the estimator-vs-simulator comparison and all
+//!   downstream consumers (simulator, MPU, pipeline prewarm) see one
+//!   consistent physical story — the executor never re-derives placement.
 
-use crate::cost::WorkloadAgg;
+use crate::cost::{CostModel, WorkloadAgg};
 use crate::data::sequence::Sequence;
+use crate::parallel::group::GroupKind;
+use crate::parallel::mesh::{DeviceMesh, WaveHint};
+use crate::parallel::RankId;
 
 /// One planned CP group: a degree and the sequences assigned to it.
 #[derive(Debug, Clone, PartialEq)]
@@ -17,7 +34,8 @@ pub struct PlannedGroup {
     pub est_time_s: f64,
 }
 
-/// A complete parallelism plan for one micro-batch (paper Eq. 2's (A, C)).
+/// A complete logical parallelism plan for one micro-batch (paper Eq. 2's
+/// (A, C)) — degrees only, not yet bound to ranks.
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct Plan {
     pub groups: Vec<PlannedGroup>,
@@ -73,6 +91,130 @@ impl Plan {
     }
 }
 
+/// One physically realized CP group: the planned group plus the rank set
+/// the mesh assigned it and the placement-aware cost estimate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlacedGroup {
+    pub degree: usize,
+    /// Indices into the micro-batch's sequence list.
+    pub seq_idxs: Vec<usize>,
+    pub agg: WorkloadAgg,
+    /// Placement-aware estimate: `T(agg, degree, ring_bw)` of the ACTUAL
+    /// rank set (empty groups — a static mesh's idle slots — cost 0).
+    pub est_time_s: f64,
+    /// Member replica ranks, sorted ascending (the group's identity).
+    pub ranks: Vec<RankId>,
+    /// Ring bandwidth of the slowest link among `ranks`.
+    pub ring_bw: f64,
+}
+
+impl PlacedGroup {
+    /// The communication-group pool key this group resolves to.
+    pub fn pool_key(&self) -> (GroupKind, Vec<RankId>) {
+        (GroupKind::ContextParallel, self.ranks.clone())
+    }
+}
+
+/// A physically realized wave: what the executor (simulator, MPU,
+/// pipeline prewarm) consumes directly — no re-allocation downstream.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct PlacedPlan {
+    pub groups: Vec<PlacedGroup>,
+    /// Placement-aware makespan = max over groups of est_time_s.
+    pub est_makespan_s: f64,
+    /// The DP's pre-placement objective for this wave (uniform-fabric
+    /// heuristic) — retained so candidate-search behavior stays
+    /// comparable against the reference solver.
+    pub search_makespan_s: f64,
+}
+
+impl PlacedPlan {
+    pub fn total_degree(&self) -> usize {
+        self.groups.iter().map(|g| g.degree).sum()
+    }
+
+    pub fn degree_multiset(&self) -> Vec<usize> {
+        let mut d: Vec<usize> = self.groups.iter().map(|g| g.degree).collect();
+        d.sort_unstable_by(|a, b| b.cmp(a));
+        d
+    }
+
+    /// Placement invariants: per-group arity (|ranks| = degree), ranks in
+    /// range, and pairwise disjointness within the wave (Cond. 6 on the
+    /// physical representation).
+    pub fn validate_placement(&self, replicas: usize) -> anyhow::Result<()> {
+        use anyhow::bail;
+        if self.total_degree() > replicas {
+            bail!(
+                "placed wave over rank budget: {} > {replicas}",
+                self.total_degree()
+            );
+        }
+        let mut seen = vec![false; replicas];
+        for (gi, g) in self.groups.iter().enumerate() {
+            if g.degree == 0 {
+                bail!("zero-degree group {gi}");
+            }
+            if g.ranks.len() != g.degree {
+                bail!(
+                    "group {gi}: {} ranks != degree {}",
+                    g.ranks.len(),
+                    g.degree
+                );
+            }
+            for &r in &g.ranks {
+                if r >= replicas {
+                    bail!("group {gi}: rank {r} out of range (N = {replicas})");
+                }
+                if seen[r] {
+                    bail!("group {gi}: rank {r} placed twice in one wave");
+                }
+                seen[r] = true;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Bind a logical plan to ranks: place every group on the mesh (steered
+/// by `hint` — the blocks this wave slot used last step) and re-derive
+/// each group's estimate against the ring bandwidth of its ACTUAL rank
+/// set. This is the single point where plans become physical; everything
+/// downstream (simulator, pool, MPU) consumes the result as-is.
+pub fn place_plan(
+    plan: &Plan,
+    mesh: &DeviceMesh,
+    hint: Option<&WaveHint>,
+    cost: &CostModel,
+) -> PlacedPlan {
+    let degrees: Vec<usize> = plan.groups.iter().map(|g| g.degree).collect();
+    let rank_sets = mesh.place(&degrees, hint);
+    let mut groups = Vec::with_capacity(plan.groups.len());
+    let mut makespan = 0.0f64;
+    for (g, ranks) in plan.groups.iter().zip(rank_sets) {
+        let ring_bw = mesh.ring_bandwidth(&ranks);
+        let est = if g.seq_idxs.is_empty() {
+            0.0
+        } else {
+            cost.t_total(&g.agg, g.degree, ring_bw)
+        };
+        makespan = makespan.max(est);
+        groups.push(PlacedGroup {
+            degree: g.degree,
+            seq_idxs: g.seq_idxs.clone(),
+            agg: g.agg,
+            est_time_s: est,
+            ranks,
+            ring_bw,
+        });
+    }
+    PlacedPlan {
+        groups,
+        est_makespan_s: makespan,
+        search_makespan_s: plan.est_makespan_s,
+    }
+}
+
 /// Table-4-style compact rendering: "⟨8⟩×1 ⟨6⟩×2 ⟨4⟩×1 ⟨2⟩×2 ⟨1⟩×4".
 pub fn format_degree_multiset(degrees: &[usize]) -> String {
     let mut out = String::new();
@@ -95,6 +237,9 @@ pub fn format_degree_multiset(degrees: &[usize]) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::presets::by_name;
+    use crate::config::{ClusterConfig, TrainStage};
+    use crate::cost::{CostCoeffs, HardwareSpec, MemoryModel};
 
     fn plan(degrees_and_seqs: &[(usize, &[usize])]) -> Plan {
         Plan {
@@ -114,6 +259,18 @@ mod tests {
 
     fn seqs(n: usize) -> Vec<Sequence> {
         (0..n).map(|i| Sequence::new(i as u64, 10, 10)).collect()
+    }
+
+    fn cost_model() -> CostModel {
+        let preset = by_name("InternVL3-8B").unwrap();
+        CostModel {
+            coeffs: CostCoeffs::analytic(
+                &preset,
+                TrainStage::Full,
+                &HardwareSpec::default(),
+            ),
+            memory: MemoryModel::new(&preset, 64e9, 8),
+        }
     }
 
     #[test]
@@ -149,5 +306,77 @@ mod tests {
             "<8>x1 <6>x2 <4>x1 <2>x2 <1>x4"
         );
         assert_eq!(format_degree_multiset(&[]), "");
+    }
+
+    #[test]
+    fn place_plan_binds_ranks_and_rescoring_uses_actual_bandwidth() {
+        // 8 nodes × 8 NPUs, TP=PP=1 → 8 replicas/node, 64 replicas.
+        let mesh = DeviceMesh::new(&ClusterConfig::default());
+        let cost = cost_model();
+        let s = seqs(3);
+        let mut p = plan(&[(10, &[0]), (4, &[1]), (1, &[2])]);
+        for g in &mut p.groups {
+            g.agg = WorkloadAgg::of(&[s[g.seq_idxs[0]].clone()]);
+        }
+        let placed = place_plan(&p, &mesh, None, &cost);
+        placed.validate_placement(64).unwrap();
+        assert_eq!(placed.groups.len(), 3);
+        // Degree 10 spans nodes → inter bandwidth; degree 4 fits → intra.
+        assert_eq!(placed.groups[0].ring_bw, mesh.inter_bw);
+        assert_eq!(placed.groups[1].ring_bw, mesh.intra_bw);
+        for g in &placed.groups {
+            assert_eq!(g.ranks.len(), g.degree);
+            let expected = cost.t_total(&g.agg, g.degree, g.ring_bw);
+            assert_eq!(g.est_time_s.to_bits(), expected.to_bits());
+        }
+        assert!(placed.est_makespan_s >= placed.groups[0].est_time_s);
+    }
+
+    #[test]
+    fn placement_validation_rejects_overlap_and_bad_arity() {
+        let g = |degree: usize, ranks: Vec<RankId>| PlacedGroup {
+            degree,
+            seq_idxs: vec![],
+            agg: WorkloadAgg::default(),
+            est_time_s: 0.0,
+            ranks,
+            ring_bw: 1.0,
+        };
+        let overlap = PlacedPlan {
+            groups: vec![g(2, vec![0, 1]), g(2, vec![1, 2])],
+            est_makespan_s: 0.0,
+            search_makespan_s: 0.0,
+        };
+        assert!(overlap.validate_placement(8).is_err());
+        let arity = PlacedPlan {
+            groups: vec![g(3, vec![0, 1])],
+            est_makespan_s: 0.0,
+            search_makespan_s: 0.0,
+        };
+        assert!(arity.validate_placement(8).is_err());
+        let range = PlacedPlan {
+            groups: vec![g(1, vec![9])],
+            est_makespan_s: 0.0,
+            search_makespan_s: 0.0,
+        };
+        assert!(range.validate_placement(8).is_err());
+        let ok = PlacedPlan {
+            groups: vec![g(2, vec![0, 1]), g(1, vec![7])],
+            est_makespan_s: 0.0,
+            search_makespan_s: 0.0,
+        };
+        ok.validate_placement(8).unwrap();
+    }
+
+    #[test]
+    fn empty_groups_cost_nothing_when_placed() {
+        let mesh = DeviceMesh::uniform(8, 12.5e9);
+        let cost = cost_model();
+        let p = plan(&[(4, &[]), (4, &[])]);
+        let placed = place_plan(&p, &mesh, None, &cost);
+        for g in &placed.groups {
+            assert_eq!(g.est_time_s, 0.0);
+        }
+        assert_eq!(placed.est_makespan_s, 0.0);
     }
 }

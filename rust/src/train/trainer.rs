@@ -75,6 +75,12 @@ pub struct StepRecord {
     pub sim_makespan_s: f64,
     /// Background scheduling latency (hidden behind compute).
     pub schedule_latency_s: f64,
+    /// Simulated group-creation time the pipeline paid prewarming this
+    /// step's communication groups (one step ahead, hidden behind the
+    /// previous step's compute; ~0 once the pool is warm).
+    pub reconfig_s: f64,
+    /// Cumulative communication-group pool hit-rate after this step.
+    pub pool_hit_rate: f64,
 }
 
 /// Full run report.
@@ -161,7 +167,11 @@ pub fn run(cfg: &TrainerConfig) -> Result<TrainReport> {
         Some(p) => {
             let mut f = std::fs::File::create(p)
                 .with_context(|| format!("creating log {p:?}"))?;
-            writeln!(f, "step,loss,grad_norm,step_s,sim_makespan_s,sched_latency_s")?;
+            writeln!(
+                f,
+                "step,loss,grad_norm,step_s,sim_makespan_s,sched_latency_s,\
+                 reconfig_s,pool_hit_rate"
+            )?;
             Some(f)
         }
         None => None,
@@ -200,17 +210,21 @@ pub fn run(cfg: &TrainerConfig) -> Result<TrainReport> {
             step_time_s: t0.elapsed().as_secs_f64(),
             sim_makespan_s: sim_makespan,
             schedule_latency_s: scheduled.schedule_latency_s,
+            reconfig_s: scheduled.reconfig_time_s,
+            pool_hit_rate: scheduled.pool.hit_rate(),
         };
         if let Some(f) = log_file.as_mut() {
             writeln!(
                 f,
-                "{},{:.6},{:.4},{:.4},{:.6},{:.6}",
+                "{},{:.6},{:.4},{:.4},{:.6},{:.6},{:.6},{:.4}",
                 rec.step,
                 rec.loss,
                 rec.grad_norm,
                 rec.step_time_s,
                 rec.sim_makespan_s,
-                rec.schedule_latency_s
+                rec.schedule_latency_s,
+                rec.reconfig_s,
+                rec.pool_hit_rate
             )?;
         }
         if step % 10 == 0 || step + 1 == cfg.steps {

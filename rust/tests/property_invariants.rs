@@ -69,6 +69,149 @@ fn mesh_allocation_always_disjoint_and_local() {
 }
 
 #[test]
+fn mesh_allocation_is_deterministic() {
+    // Placement determinism is what makes the group pool effective: the
+    // same degree vector must always land on the same rank blocks.
+    forall(100, 0xA118, |rng| {
+        let cluster = rand_cluster(rng);
+        let mesh = DeviceMesh::new(&cluster);
+        let n = mesh.replicas;
+        let mut degrees = Vec::new();
+        let mut left = n;
+        while left > 0 && rng.bool(0.8) {
+            let d = rng.range_usize(1, left + 1);
+            degrees.push(d);
+            left -= d;
+        }
+        if degrees.is_empty() {
+            return Ok(());
+        }
+        let a = mesh.allocate(&degrees);
+        let b = mesh.allocate(&degrees);
+        if a != b {
+            return Err(format!("allocate({degrees:?}) diverged: {a:?} vs {b:?}"));
+        }
+        // Blocks come out sorted (the pool's canonical identity).
+        for ranks in &a {
+            if ranks.windows(2).any(|w| w[0] >= w[1]) {
+                return Err(format!("unsorted block {ranks:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn placed_schedules_have_disjoint_in_budget_rank_sets() {
+    // The placed-plan invariant, end to end: every wave of every DHP
+    // schedule binds each group to exactly `degree` in-range ranks, with
+    // no rank appearing twice within a wave and Σ degrees ≤ N.
+    use dhp::experiments::harness::ExpContext;
+    forall(15, 0xA119, |rng| {
+        let npus = *rng.choose(&[16usize, 32, 64]);
+        let kind = *rng.choose(&DatasetKind::all());
+        let mut ctx = ExpContext::new(
+            by_name("InternVL3-8B").unwrap(),
+            kind,
+            npus,
+            TrainStage::Full,
+        );
+        ctx.seed = rng.next_u64();
+        let sch = ctx.dhp();
+        let mut sampler = ctx.sampler();
+        let seqs = sampler.sample_batch(rng.range_usize(1, 64));
+        let schedule = sch.schedule(&seqs);
+        let n = ctx.replicas();
+        for (wi, wave) in schedule.waves.iter().enumerate() {
+            wave.validate_placement(n)
+                .map_err(|e| format!("wave {wi}: {e}"))?;
+            let mut seen = std::collections::HashSet::new();
+            let mut total = 0usize;
+            for g in &wave.groups {
+                if g.ranks.len() != g.degree {
+                    return Err(format!(
+                        "wave {wi}: arity {} != degree {}",
+                        g.ranks.len(),
+                        g.degree
+                    ));
+                }
+                total += g.degree;
+                for &r in &g.ranks {
+                    if r >= n || !seen.insert(r) {
+                        return Err(format!("wave {wi}: rank {r} reused/out of range"));
+                    }
+                }
+                // The recorded ring bandwidth matches the actual set.
+                let bw = sch.mesh.ring_bandwidth(&g.ranks);
+                if g.ring_bw != bw {
+                    return Err(format!("wave {wi}: ring_bw {} != {}", g.ring_bw, bw));
+                }
+            }
+            if total > n {
+                return Err(format!("wave {wi}: {total} ranks > N = {n}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn group_pool_hit_rate_rises_across_scheduled_steps() {
+    // Regression for the reuse-aware placement policy: on a stationary
+    // workload, consecutive scheduled steps must key into an increasingly
+    // warm pool — the late-window hit-rate strictly exceeds the early
+    // window's, and after a 10-step warmup it clears 0.8.
+    use dhp::cluster::{ClusterSim, CommKind};
+    use dhp::experiments::harness::ExpContext;
+    use dhp::scheduler::Schedule;
+
+    let mut ctx = ExpContext::new(
+        by_name("InternVL3-8B").unwrap(),
+        DatasetKind::OpenVid,
+        16,
+        TrainStage::Full,
+    );
+    ctx.seed = 0xA11A;
+    let sch = ctx.dhp();
+    let sim: ClusterSim = ctx.sim();
+    let planner = ctx.micro_batch_planner();
+    let mut sampler = ctx.sampler();
+    let mut pool = GroupPool::new();
+
+    let mut windows: Vec<(u64, u64)> = Vec::new(); // (hits, misses) per step
+    for step in 0..15u64 {
+        let batch = GlobalBatch {
+            step,
+            sequences: sampler.sample_batch(48),
+        };
+        let scheduled: Vec<(Vec<Sequence>, Schedule)> = planner
+            .plan(&batch)
+            .iter()
+            .map(|mb| (mb.sequences.clone(), sch.schedule(&mb.sequences)))
+            .collect();
+        let before = pool.stats();
+        sim.execute_iteration(&scheduled, CommKind::RingCp, &mut pool);
+        let after = pool.stats();
+        windows.push((after.hits - before.hits, after.misses - before.misses));
+    }
+    let rate = |w: &[(u64, u64)]| -> f64 {
+        let hits: u64 = w.iter().map(|x| x.0).sum();
+        let misses: u64 = w.iter().map(|x| x.1).sum();
+        hits as f64 / (hits + misses).max(1) as f64
+    };
+    let early = rate(&windows[..3]);
+    let late = rate(&windows[10..]);
+    assert!(
+        late > early,
+        "hit-rate did not rise: early {early:.3} vs late {late:.3} ({windows:?})"
+    );
+    assert!(
+        late > 0.8,
+        "post-warmup hit-rate {late:.3} below 0.8 ({windows:?})"
+    );
+}
+
+#[test]
 fn parallel_state_reconfigure_is_sound_and_pooled() {
     forall(100, 0xA111, |rng| {
         let cluster = rand_cluster(rng);

@@ -5,11 +5,84 @@
 # after solver changes — the schedule_* vs schedule_reference_* pairs
 # measure the ISSUE-1 overhaul against the retained pre-overhaul path in
 # a single invocation, so the trajectory survives across PRs.
+#
+# Compare mode (the ROADMAP "solver-latency trajectory in CI" gate):
+#
+#   scripts/bench_smoke.sh --compare [BASELINE.json]
+#
+# diffs the fresh BENCH_solver_micro.json against the committed baseline
+# (default: scripts/solver_micro.baseline.json) and exits non-zero when
+# the gate case `schedule_gbs512_npus64` regresses by more than 10% on
+# mean latency. Other shared cases only warn — they are tracked, not
+# gated. If no baseline exists yet, the fresh record is installed as the
+# baseline (commit it) and the gate passes.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+COMPARE=0
+BASELINE="scripts/solver_micro.baseline.json"
+if [[ "${1:-}" == "--compare" ]]; then
+    COMPARE=1
+    [[ -n "${2:-}" ]] && BASELINE="$2"
+fi
 
 cargo bench --bench solver_micro -- --quick
 
 echo
 echo "=== BENCH_solver_micro.json ==="
 cat BENCH_solver_micro.json
+
+if [[ "$COMPARE" == "1" ]]; then
+    if [[ ! -f "$BASELINE" ]]; then
+        cp BENCH_solver_micro.json "$BASELINE"
+        echo
+        echo "[bench-compare] no baseline found — seeded $BASELINE from this run."
+        echo "[bench-compare] commit it to activate the regression gate."
+        exit 0
+    fi
+    echo
+    python3 - "$BASELINE" BENCH_solver_micro.json <<'PYEOF'
+import json
+import sys
+
+GATE_CASE = "schedule_gbs512_npus64"
+THRESHOLD = 0.10  # fail the gate case on >10% mean regression
+
+baseline_path, fresh_path = sys.argv[1], sys.argv[2]
+with open(baseline_path) as f:
+    base = json.load(f)["cases"]
+with open(fresh_path) as f:
+    fresh = json.load(f)["cases"]
+
+failed = False
+shared = sorted(set(base) & set(fresh))
+if not shared:
+    print("[bench-compare] no shared cases between baseline and fresh run")
+    sys.exit(1)
+print(f"[bench-compare] baseline {baseline_path} vs fresh {fresh_path}")
+for name in shared:
+    b, f = base[name]["mean_ms"], fresh[name]["mean_ms"]
+    if b <= 0:
+        # A zero/negative baseline is corrupt; never let it disarm the gate.
+        print(f"  {name:<44} invalid baseline mean_ms={b}")
+        if name == GATE_CASE:
+            failed = True
+        continue
+    delta = (f - b) / b
+    tag = "ok"
+    if delta > THRESHOLD:
+        if name == GATE_CASE:
+            tag = "FAIL (gate)"
+            failed = True
+        else:
+            tag = "warn"
+    print(f"  {name:<44} {b:>10.3f} -> {f:>10.3f} ms  ({delta:+7.1%})  {tag}")
+missing = sorted(set(base) - set(fresh))
+if missing:
+    print(f"[bench-compare] cases missing from fresh run: {missing}")
+if GATE_CASE not in shared:
+    print(f"[bench-compare] gate case {GATE_CASE!r} not present in both records")
+    failed = True
+sys.exit(1 if failed else 0)
+PYEOF
+fi
