@@ -2,7 +2,10 @@
 //!
 //! * degree policy: arbitrary-integer vs power-of-two (FlexSP) vs static;
 //! * the balance-target outer search vs single-target packing;
-//! * group pooling on vs off (creation-cost accounting).
+//! * group pooling on vs off (creation-cost accounting);
+//! * pool capacity: unbounded vs 2×/1×/0.5× of the workload's working
+//!   set, with overlap-hidden vs fully-serial reconfiguration charging —
+//!   locating where the paper's near-free-reconfiguration claim breaks.
 
 use dhp::baselines::SchedulePolicy;
 use dhp::cluster::CommKind;
@@ -11,7 +14,7 @@ use dhp::config::TrainStage;
 use dhp::data::batch::GlobalBatch;
 use dhp::data::datasets::DatasetKind;
 use dhp::experiments::harness::{run_policy, ExpContext, PolicySet};
-use dhp::parallel::GroupPool;
+use dhp::parallel::{GroupPool, PoolCapacity};
 use dhp::scheduler::DegreePolicy;
 use dhp::util::bench::BenchReport;
 
@@ -99,6 +102,54 @@ fn main() {
             * dhp::parallel::group::GROUP_CREATE_COST_S
             * 1e3
     );
+
+    // --- Ablation 4: pool capacity. The paper's "creation overhead
+    // becomes negligible" claim holds only while the pool retains the
+    // workload's working set; this sweep shows where it breaks down and
+    // how much of the residual cost the prewarm overlap still hides.
+    println!("=== ablation: pool capacity (reconfiguration economics) ===");
+    let cap_ctx = ctx.clone().with_steps(4, 6);
+    let unbounded = run_policy(&cap_ctx, &cap_ctx.dhp());
+    let working_set = unbounded.pool_groups.max(2);
+    println!(
+        "  working set: {} groups ({:.0} MB modeled communicator buffers)",
+        working_set,
+        unbounded.pool_buffer_bytes as f64 / 1e6
+    );
+    println!(
+        "  {:<24} {:>8} {:>8} {:>9} {:>12} {:>12} {:>8}",
+        "capacity", "hit-rate", "replay", "evictions", "charged (ms)", "serial (ms)", "iter (s)"
+    );
+    let mut sweep: Vec<(String, Option<usize>)> = vec![("unbounded".into(), None)];
+    for (label, frac) in [("2.0x working set", 2.0), ("1.0x working set", 1.0), ("0.5x working set", 0.5)] {
+        let cap = ((working_set as f64 * frac).round() as usize).max(1);
+        sweep.push((format!("{label} ({cap})"), Some(cap)));
+    }
+    for (label, cap) in sweep {
+        let r = match cap {
+            None => unbounded.clone(),
+            Some(c) => {
+                let cctx = cap_ctx
+                    .clone()
+                    .with_pool_capacity(PoolCapacity::MaxGroups(c));
+                run_policy(&cctx, &cctx.dhp())
+            }
+        };
+        println!(
+            "  {:<24} {:>8.2} {:>8.2} {:>9} {:>12.1} {:>12.1} {:>8.3}",
+            label,
+            r.pool.hit_rate(),
+            r.replay_rate,
+            r.pool.evictions,
+            r.mean_reconfig_s * 1e3,
+            r.mean_reconfig_serial_s * 1e3,
+            r.mean_iter_s,
+        );
+        assert!(
+            r.mean_reconfig_s <= r.mean_reconfig_serial_s + 1e-12,
+            "overlap charging exceeded the serial cost"
+        );
+    }
 
     // --- Timings.
     let mut report = BenchReport::new("ablations");

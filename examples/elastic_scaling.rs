@@ -93,7 +93,7 @@ fn main() -> anyhow::Result<()> {
             done.step,
             done.schedule_latency_s * 1e3,
             done.schedule.solve_time_s * 1e3,
-            done.reconfig_time_s * 1e3,
+            done.reconfig_serial_s * 1e3,
             done.pool.hit_rate(),
             done.schedule_latency_s < 0.020,
         );

@@ -18,10 +18,13 @@ use super::SchedulePolicy;
 #[derive(Debug, Clone)]
 pub struct DeepSpeedUlysses {
     inner: MegatronStaticCp,
+    /// Attention-head count the SP degree must divide.
     pub heads: usize,
 }
 
 impl DeepSpeedUlysses {
+    /// Static Ulysses grid at `degree` (must divide the preset's head
+    /// count), estimated at uniform `bandwidth` pre-placement.
     pub fn new(
         degree: usize,
         replicas: usize,
@@ -48,6 +51,7 @@ impl DeepSpeedUlysses {
             .collect()
     }
 
+    /// The fixed SP degree.
     pub fn degree(&self) -> usize {
         self.inner.degree
     }

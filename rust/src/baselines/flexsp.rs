@@ -16,6 +16,8 @@ pub struct FlexSp {
 }
 
 impl FlexSp {
+    /// Wrap a DHP scheduler, restricting its degree search to powers of
+    /// two.
     pub fn new(scheduler: Scheduler) -> Self {
         FlexSp {
             inner: scheduler.with_policy(DegreePolicy::PowerOfTwo),

@@ -18,8 +18,11 @@ use super::SchedulePolicy;
 /// Static-CP policy with a fixed degree.
 #[derive(Debug, Clone)]
 pub struct MegatronStaticCp {
+    /// The fixed CP degree every group runs at.
     pub degree: usize,
+    /// Total model replicas in the cluster.
     pub replicas: usize,
+    /// Cost model used for the draft-level estimates.
     pub cost: CostModel,
     /// Ring bandwidth the groups are assumed to see pre-placement (the
     /// draft-level est_time bookkeeping).
@@ -31,6 +34,8 @@ pub struct MegatronStaticCp {
 }
 
 impl MegatronStaticCp {
+    /// Static grid of N/`degree` groups (`degree` must divide
+    /// `replicas`), estimated at uniform `bandwidth` pre-placement.
     pub fn new(degree: usize, replicas: usize, cost: CostModel, bandwidth: f64) -> Self {
         assert!(degree >= 1 && degree <= replicas);
         assert_eq!(replicas % degree, 0, "static degree must divide N");

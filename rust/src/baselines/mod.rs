@@ -17,9 +17,11 @@ use crate::scheduler::Schedule;
 
 /// A parallelism scheduling policy: micro-batch sequences → schedule.
 pub trait SchedulePolicy: Send {
+    /// Display name used in tables and reports.
     fn name(&self) -> &'static str;
     /// Communication pattern the policy's groups use at execution time.
     fn comm_kind(&self) -> CommKind;
+    /// Plan one micro-batch into a placed schedule.
     fn schedule(&self, seqs: &[Sequence]) -> Schedule;
 }
 

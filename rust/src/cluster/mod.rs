@@ -1,11 +1,12 @@
 //! Simulated NPU cluster — the substrate substituting for the paper's
 //! 8-node Ascend 910B testbed (DESIGN.md §2).
 //!
-//! The simulator executes a PLACED [`Schedule`] (from DHP or any
-//! baseline) with:
+//! The simulator executes a PLACED [`crate::scheduler::Schedule`] (from
+//! DHP or any baseline) with:
 //! * the rank placement the scheduler committed to (intra-node HCCS vs
 //!   inter-node IB bandwidth read off each group's actual rank set via
-//!   the [`DeviceMesh`] — the simulator never re-places),
+//!   the [`crate::parallel::DeviceMesh`] — the simulator never
+//!   re-places),
 //! * ground-truth per-group times from the first-principles
 //!   [`crate::cost::exact`] model (ring CP) or the Ulysses all-to-all
 //!   model (DeepSpeed baseline),

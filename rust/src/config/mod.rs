@@ -14,7 +14,9 @@ use crate::data::datasets::DatasetKind;
 /// HCCS intra-node, 100 Gbps InfiniBand inter-node).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClusterConfig {
+    /// Physical node count.
     pub nodes: usize,
+    /// NPUs per node.
     pub npus_per_node: usize,
     /// Per-NPU memory budget in bytes (910B: 64 GB).
     pub mem_bytes: u64,
@@ -58,6 +60,8 @@ impl ClusterConfig {
         self.npus_per_node / (self.tp * self.pp).min(self.npus_per_node)
     }
 
+    /// Rescale the cluster to `total` NPUs, keeping the per-node shape
+    /// (clusters smaller than one node collapse to a single node).
     pub fn with_npus(mut self, total: usize) -> Self {
         assert!(total % self.npus_per_node == 0 || total < self.npus_per_node);
         if total < self.npus_per_node {
@@ -69,6 +73,8 @@ impl ClusterConfig {
         self
     }
 
+    /// Reject impossible topologies (zero devices, non-dividing TP×PP,
+    /// non-positive bandwidths).
     pub fn validate(&self) -> Result<()> {
         if self.nodes == 0 || self.npus_per_node == 0 {
             bail!("cluster must have at least one NPU");
@@ -102,12 +108,17 @@ pub enum TrainStage {
 /// Top-level run configuration.
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
+    /// Model under training (paper Table 5 preset).
     pub model: ModelPreset,
+    /// Workload dataset.
     pub dataset: DatasetKind,
+    /// Cluster topology.
     pub cluster: ClusterConfig,
+    /// Which parameters train.
     pub stage: TrainStage,
     /// Global batch size in sequences (paper fixes 512).
     pub gbs: usize,
+    /// Data-sampling seed.
     pub seed: u64,
     /// Warmup steps excluded from measurement (paper: 5).
     pub warmup_steps: usize,
@@ -131,6 +142,7 @@ impl Default for TrainConfig {
 }
 
 impl TrainConfig {
+    /// Validate the cluster topology and batch settings.
     pub fn validate(&self) -> Result<()> {
         self.cluster.validate()?;
         if self.gbs == 0 {
@@ -146,6 +158,8 @@ impl TrainConfig {
         Self::from_toml(&text)
     }
 
+    /// Parse from TOML-subset text (see [`parser`]), validating the
+    /// result.
     pub fn from_toml(text: &str) -> Result<TrainConfig> {
         let doc = parser::parse(text)?;
         let mut cfg = TrainConfig::default();

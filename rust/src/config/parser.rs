@@ -11,14 +11,20 @@ use anyhow::{anyhow, bail, Result};
 /// A parsed scalar or array value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// A quoted string.
     Str(String),
+    /// A signed integer.
     Int(i64),
+    /// A float literal.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// A flat `[v, v, ...]` array.
     Array(Vec<Value>),
 }
 
 impl Value {
+    /// String accessor (errors on any other variant).
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Value::Str(s) => Ok(s),
@@ -26,6 +32,7 @@ impl Value {
         }
     }
 
+    /// Integer accessor (errors on any other variant).
     pub fn as_int(&self) -> Result<i64> {
         match self {
             Value::Int(i) => Ok(*i),
@@ -42,6 +49,7 @@ impl Value {
         }
     }
 
+    /// Boolean accessor (errors on any other variant).
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Value::Bool(b) => Ok(*b),
@@ -49,6 +57,7 @@ impl Value {
         }
     }
 
+    /// Array accessor (errors on any other variant).
     pub fn as_array(&self) -> Result<&[Value]> {
         match self {
             Value::Array(v) => Ok(v),
@@ -64,11 +73,14 @@ pub type Section = BTreeMap<String, Value>;
 /// appear before any header.
 #[derive(Debug, Default, Clone)]
 pub struct Document {
+    /// Keys appearing before any `[section]` header.
     pub root: Section,
+    /// Named sections in declaration order-independent storage.
     pub sections: BTreeMap<String, Section>,
 }
 
 impl Document {
+    /// Look up a named `[section]`.
     pub fn section(&self, name: &str) -> Option<&Section> {
         self.sections.get(name)
     }

@@ -7,7 +7,9 @@ use std::sync::OnceLock;
 /// One evaluated model configuration (paper Table 5).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelPreset {
+    /// Table 5 model name (e.g. "InternVL3-8B").
     pub name: &'static str,
+    /// Model family ("InternVL3" / "Qwen3VL").
     pub family: &'static str,
     /// Nominal parameter count in billions (from the model name).
     pub params_b: f64,

@@ -26,7 +26,9 @@ use crate::data::sequence::Sequence;
 /// 910B-class — 376 TFLOPS half-precision peak, ~0.35 achievable MFU).
 #[derive(Debug, Clone)]
 pub struct HardwareSpec {
+    /// Peak half-precision FLOP/s of one replica.
     pub peak_flops: f64,
+    /// Achievable fraction of peak (model FLOPs utilization).
     pub efficiency: f64,
     /// P2P hop latency inside a ring (seconds).
     pub p2p_latency_s: f64,
@@ -52,6 +54,7 @@ impl Default for HardwareSpec {
 }
 
 impl HardwareSpec {
+    /// Sustained FLOP/s: peak × efficiency.
     pub fn effective_flops(&self) -> f64 {
         self.peak_flops * self.efficiency
     }
@@ -166,6 +169,8 @@ pub struct MemoryModel {
 }
 
 impl MemoryModel {
+    /// Eq. 7 instantiated for a model preset: per-rank budget `e_bytes`,
+    /// ZeRO-3 model states sharded over `zero_shards` ranks.
     pub fn new(preset: &ModelPreset, e_bytes: f64, zero_shards: usize) -> Self {
         MemoryModel {
             e_bytes,
@@ -212,6 +217,7 @@ pub struct WorkloadAgg {
 }
 
 impl WorkloadAgg {
+    /// Aggregate a sequence set.
     pub fn of(seqs: &[Sequence]) -> WorkloadAgg {
         let mut agg = WorkloadAgg::default();
         for s in seqs {
@@ -220,6 +226,7 @@ impl WorkloadAgg {
         agg
     }
 
+    /// Fold one sequence into the aggregates.
     pub fn add(&mut self, s: &Sequence) {
         let l = s.len() as f64;
         self.quad += (1.0 + s.eta()) * l * l;
@@ -228,6 +235,7 @@ impl WorkloadAgg {
         self.count += 1;
     }
 
+    /// Fold another aggregate in (union of disjoint sequence sets).
     pub fn merge(&mut self, other: &WorkloadAgg) {
         self.quad += other.quad;
         self.quad_base += other.quad_base;
@@ -239,7 +247,9 @@ impl WorkloadAgg {
 /// The paper's parametric execution-time estimator (Eqs. 8–10).
 #[derive(Debug, Clone)]
 pub struct CostModel {
+    /// Eq. 8–10 coefficients (analytic or profiler-fitted).
     pub coeffs: CostCoeffs,
+    /// Eq. 7 memory model (drives packing feasibility, not time).
     pub memory: MemoryModel,
 }
 

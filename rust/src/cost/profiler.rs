@@ -31,6 +31,7 @@ pub struct Sample {
 }
 
 impl Sample {
+    /// Degree-1 observation of one sequence with mask-efficiency `eta`.
     pub fn simple(seq_len: u64, eta: f64, time_s: f64) -> Sample {
         let l = seq_len as f64;
         Sample {
@@ -100,7 +101,9 @@ pub fn fit_error(coeffs: &CostCoeffs, samples: &[Sample]) -> FitReport {
 pub struct FitReport {
     /// Mean absolute percentage error (%) — Table 3's metric.
     pub mape: f64,
+    /// Coefficient of determination of the fit.
     pub r_squared: f64,
+    /// Number of degree-1 samples the report covers.
     pub n: usize,
 }
 

@@ -6,11 +6,14 @@ use super::sequence::Sequence;
 /// One optimizer step's worth of sequences (paper: GBS = 512).
 #[derive(Debug, Clone)]
 pub struct GlobalBatch {
+    /// Optimizer step this batch belongs to.
     pub step: u64,
+    /// The batch's sequences in arrival order.
     pub sequences: Vec<Sequence>,
 }
 
 impl GlobalBatch {
+    /// Total tokens across the batch.
     pub fn total_tokens(&self) -> u64 {
         self.sequences.iter().map(|s| s.len()).sum()
     }
@@ -20,11 +23,14 @@ impl GlobalBatch {
 /// batch whose memory demand fits the cluster in a single wave.
 #[derive(Debug, Clone)]
 pub struct MicroBatch {
+    /// Position within the parent global batch.
     pub index: usize,
+    /// The micro-batch's sequences (order preserved from the batch).
     pub sequences: Vec<Sequence>,
 }
 
 impl MicroBatch {
+    /// Total tokens across the micro-batch.
     pub fn total_tokens(&self) -> u64 {
         self.sequences.iter().map(|s| s.len()).sum()
     }
@@ -46,6 +52,8 @@ pub struct MicroBatchPlanner {
 }
 
 impl MicroBatchPlanner {
+    /// Planner for `replicas` ranks at the given per-rank activation
+    /// budget, with the default 0.9 fill fraction.
     pub fn new(replicas: usize, rank_act_budget: f64, m_token: f64) -> Self {
         MicroBatchPlanner {
             replicas,

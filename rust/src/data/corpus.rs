@@ -28,12 +28,15 @@ pub struct CorpusItem {
 
 /// Deterministic generator of class-structured multimodal samples.
 pub struct CorpusGenerator {
+    /// Model vocabulary size (token-id space of the artifact).
     pub vocab: usize,
     /// Tokens actually used by the corpus (≤ vocab): keeping the active
     /// vocabulary small makes the bigram structure learnable within a few
     /// hundred streaming steps — the point of the e2e loss curve.
     pub active_vocab: usize,
+    /// Vision patch feature dimension.
     pub patch_dim: usize,
+    /// Number of latent classes in the synthetic corpus.
     pub num_classes: usize,
     /// Per-class patch prototypes, [num_classes × patch_dim].
     prototypes: Vec<f32>,
@@ -44,6 +47,8 @@ pub struct CorpusGenerator {
 }
 
 impl CorpusGenerator {
+    /// Deterministic generator over `vocab` tokens and `patch_dim`
+    /// features.
     pub fn new(vocab: usize, patch_dim: usize, seed: u64) -> Self {
         let num_classes = 2;
         let active_vocab = vocab.min(256);

@@ -24,12 +24,16 @@ use crate::util::rng::Rng;
 /// Which corpus to emulate.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DatasetKind {
+    /// MSRVTT: 10–30 s clips, relatively uniform durations.
     Msrvtt,
+    /// InternVid: mean ≈ 13 s with a moderate long tail.
     InternVid,
+    /// OpenVid: long-tailed and highly diverse (the paper's hard case).
     OpenVid,
 }
 
 impl DatasetKind {
+    /// Display name used in reports.
     pub fn name(&self) -> &'static str {
         match self {
             DatasetKind::Msrvtt => "MSRVTT",
@@ -38,6 +42,7 @@ impl DatasetKind {
         }
     }
 
+    /// Parse a CLI dataset name (case-insensitive).
     pub fn by_name(name: &str) -> Result<DatasetKind> {
         match name.to_lowercase().as_str() {
             "msrvtt" | "msr-vtt" => Ok(DatasetKind::Msrvtt),
@@ -47,6 +52,7 @@ impl DatasetKind {
         }
     }
 
+    /// All three corpora, in paper order.
     pub fn all() -> [DatasetKind; 3] {
         [
             DatasetKind::Msrvtt,
@@ -110,8 +116,9 @@ pub struct TokenizerSpec {
     pub fps: f64,
     /// Vision tokens per frame (patches after merging).
     pub tokens_per_frame: f64,
-    /// Text span bounds (tokens).
+    /// Text span lower bound (tokens).
     pub text_min: u64,
+    /// Text span upper bound (tokens).
     pub text_max: u64,
 }
 
@@ -131,7 +138,9 @@ impl Default for TokenizerSpec {
 /// Streaming sampler over one corpus.
 #[derive(Debug, Clone)]
 pub struct DatasetSampler {
+    /// Corpus being emulated.
     pub kind: DatasetKind,
+    /// Video→token conversion parameters.
     pub spec: TokenizerSpec,
     dist: Distribution,
     rng: Rng,
@@ -139,6 +148,7 @@ pub struct DatasetSampler {
 }
 
 impl DatasetSampler {
+    /// Deterministic sampler over `kind` seeded with `seed`.
     pub fn new(kind: DatasetKind, seed: u64) -> Self {
         DatasetSampler {
             kind,
@@ -149,6 +159,7 @@ impl DatasetSampler {
         }
     }
 
+    /// Override the tokenizer spec (fps, tokens/frame, text bounds).
     pub fn with_spec(mut self, spec: TokenizerSpec) -> Self {
         self.spec = spec;
         self

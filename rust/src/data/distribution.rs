@@ -12,18 +12,28 @@ use crate::util::rng::Rng;
 pub enum Distribution {
     /// exp(N(mu, sigma)), clamped to [min_s, max_s].
     LogNormal {
+        /// Mean of the underlying normal.
         mu: f64,
+        /// Std-dev of the underlying normal.
         sigma: f64,
+        /// Lower clamp (seconds).
         min_s: f64,
+        /// Upper clamp (seconds).
         max_s: f64,
     },
     /// Uniform in [lo, hi).
-    Uniform { lo: f64, hi: f64 },
+    Uniform {
+        /// Inclusive lower bound (seconds).
+        lo: f64,
+        /// Exclusive upper bound (seconds).
+        hi: f64,
+    },
     /// Weighted mixture of components.
     Mixture(Vec<(f64, Distribution)>),
 }
 
 impl Distribution {
+    /// Draw one duration (seconds).
     pub fn sample(&self, rng: &mut Rng) -> f64 {
         match self {
             Distribution::LogNormal {
@@ -52,11 +62,14 @@ impl Distribution {
 pub struct Histogram {
     /// Bucket upper edges (seconds); the last bucket is open-ended.
     pub edges: Vec<f64>,
+    /// Per-bucket sample counts (len = edges.len() + 1).
     pub counts: Vec<usize>,
+    /// Total samples added.
     pub total: usize,
 }
 
 impl Histogram {
+    /// Empty histogram over the given bucket edges.
     pub fn new(edges: Vec<f64>) -> Self {
         let n = edges.len() + 1;
         Histogram {
@@ -71,6 +84,7 @@ impl Histogram {
         Histogram::new(vec![2.0, 4.0, 8.0, 16.0, 32.0, 64.0])
     }
 
+    /// Count one sample into its bucket.
     pub fn add(&mut self, x: f64) {
         let idx = self
             .edges
@@ -81,6 +95,7 @@ impl Histogram {
         self.total += 1;
     }
 
+    /// Count a batch of samples.
     pub fn add_all(&mut self, xs: &[f64]) {
         for &x in xs {
             self.add(x);

@@ -5,6 +5,7 @@
 /// tokens (causal attention).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Sequence {
+    /// Stable sample id (sampler-assigned).
     pub id: u64,
     /// Vision tokens (video frames × patches, or image patches).
     pub vision_tokens: u64,
@@ -16,6 +17,7 @@ pub struct Sequence {
 }
 
 impl Sequence {
+    /// A sequence with the given modality token counts (duration 0).
     pub fn new(id: u64, vision_tokens: u64, text_tokens: u64) -> Self {
         Sequence {
             id,
@@ -30,6 +32,7 @@ impl Sequence {
         self.vision_tokens + self.text_tokens
     }
 
+    /// True when the sequence has no tokens at all.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

@@ -17,12 +17,16 @@ use crate::util::cli::Args;
 
 use super::harness::{ExpContext, PolicySet};
 
+/// Table 4 result for one dataset case.
 #[derive(Debug, Clone)]
 pub struct CaseResult {
+    /// Dataset display name.
     pub dataset: &'static str,
     /// Degree multiset per micro-batch, per policy.
     pub megatron: Vec<Vec<usize>>,
+    /// DeepSpeed-Ulysses degree multisets per micro-batch.
     pub deepspeed: Vec<Vec<usize>>,
+    /// DHP degree multisets per micro-batch.
     pub dhp: Vec<Vec<usize>>,
     /// DHP speedup over the best baseline on this batch.
     pub speedup: f64,
@@ -30,6 +34,8 @@ pub struct CaseResult {
     pub dhp_distinct_degrees: usize,
 }
 
+/// Run all three policies on one global batch of `dataset` and collect
+/// the Table 4 row.
 pub fn compute_case(dataset: DatasetKind, npus: usize, gbs: usize, seed: u64) -> CaseResult {
     let mut ctx = ExpContext::new(
         by_name("InternVL3-8B").unwrap(),
@@ -105,6 +111,7 @@ fn fmt_multisets(ms: &[Vec<usize>]) -> String {
     parts.join("  ")
 }
 
+/// `dhp reproduce tab4` entry point.
 pub fn run(args: &Args) -> Result<()> {
     let npus = args.usize_or("npus", 32)?;
     let gbs = args.usize_or("gbs", 128)?;

@@ -11,13 +11,19 @@ use crate::util::cli::Args;
 /// One dataset's distribution summary.
 #[derive(Debug, Clone)]
 pub struct DistRow {
+    /// Dataset display name.
     pub dataset: &'static str,
+    /// Mass fraction per Fig. 1 duration bucket.
     pub fractions: Vec<f64>,
+    /// Mean/median duration ratio (≫ 1 ⇒ long tail).
     pub tail_ratio: f64,
+    /// Mean duration (seconds).
     pub mean_s: f64,
+    /// 95th-percentile duration (seconds).
     pub p95_s: f64,
 }
 
+/// Sample each corpus and summarize its duration distribution.
 pub fn compute(samples: usize, seed: u64) -> Vec<DistRow> {
     DatasetKind::all()
         .iter()
@@ -41,6 +47,7 @@ pub fn compute(samples: usize, seed: u64) -> Vec<DistRow> {
         .collect()
 }
 
+/// `dhp reproduce fig1` entry point.
 pub fn run(args: &Args) -> Result<()> {
     let samples = args.usize_or("samples", 10_000)?;
     let seed = args.u64_or("seed", 0xF161)?;

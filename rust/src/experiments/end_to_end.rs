@@ -15,10 +15,15 @@ use super::harness::{run_policy, ExpContext, PolicySet};
 /// One configuration's results.
 #[derive(Debug, Clone)]
 pub struct E2eRow {
+    /// Model preset name.
     pub model: &'static str,
+    /// Dataset display name.
     pub dataset: &'static str,
+    /// Megatron-LM mean iteration seconds.
     pub megatron_s: f64,
+    /// DeepSpeed-Ulysses mean iteration seconds.
     pub deepspeed_s: f64,
+    /// DHP mean iteration seconds.
     pub dhp_s: f64,
 }
 
@@ -34,6 +39,7 @@ impl E2eRow {
     }
 }
 
+/// Run the full 6-model × 3-dataset sweep at `stage`.
 pub fn compute(
     stage: TrainStage,
     npus: usize,
@@ -65,6 +71,7 @@ pub fn compute(
     rows
 }
 
+/// `dhp reproduce fig4|fig6` entry point (stage selects the figure).
 pub fn run(args: &Args, stage: TrainStage) -> Result<()> {
     let npus = args.usize_or("npus", 64)?;
     let gbs = args.usize_or("gbs", 512)?;

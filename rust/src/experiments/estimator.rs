@@ -17,10 +17,14 @@ use crate::util::cli::Args;
 
 use super::harness::experiment_tokenizer;
 
+/// One Table 3 row: estimator error for one model preset.
 #[derive(Debug, Clone)]
 pub struct EstimatorRow {
+    /// Model family ("InternVL3" / "Qwen3VL").
     pub family: &'static str,
+    /// Parameter-count label ("2B"…"8B").
     pub size: &'static str,
+    /// Full preset name.
     pub model: &'static str,
     /// Mean absolute percentage error (%) — Table 3's metric.
     pub error_pct: f64,
@@ -75,6 +79,7 @@ pub fn evaluate_preset(preset: &ModelPreset, seed: u64) -> f64 {
     crate::util::stats::mean(&errs)
 }
 
+/// Evaluate estimator error for all six presets.
 pub fn compute(seed: u64) -> Vec<EstimatorRow> {
     let specs = [
         ("Qwen3VL", "2B", "Qwen3VL-2B"),
@@ -95,6 +100,7 @@ pub fn compute(seed: u64) -> Vec<EstimatorRow> {
         .collect()
 }
 
+/// `dhp reproduce tab3` entry point.
 pub fn run(args: &Args) -> Result<()> {
     let seed = args.u64_or("seed", 0x7AB3)?;
     let rows = compute(seed);

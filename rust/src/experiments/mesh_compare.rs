@@ -14,14 +14,20 @@ use crate::util::cli::Args;
 
 use super::harness::ExpContext;
 
+/// One Fig. 2 row: a policy's makespan/idle profile on one batch.
 #[derive(Debug, Clone)]
 pub struct MeshRow {
+    /// Policy display name.
     pub policy: String,
+    /// Simulated batch makespan (seconds).
     pub makespan_s: f64,
+    /// Mean idle fraction across waves.
     pub idle_fraction: f64,
+    /// Degree multiset the policy used.
     pub degrees: Vec<usize>,
 }
 
+/// Execute all policies on one sampled batch and collect Fig. 2 rows.
 pub fn compute(npus: usize, batch: usize, seed: u64) -> Vec<MeshRow> {
     let mut ctx = ExpContext::new(
         by_name("InternVL3-8B").unwrap(),
@@ -67,6 +73,7 @@ pub fn compute(npus: usize, batch: usize, seed: u64) -> Vec<MeshRow> {
     rows
 }
 
+/// `dhp reproduce fig2` entry point.
 pub fn run(args: &Args) -> Result<()> {
     let npus = args.usize_or("npus", 32)?;
     let batch = args.usize_or("batch", 24)?;

@@ -11,21 +11,27 @@ use crate::util::cli::Args;
 
 use super::harness::{run_policy, ExpContext, PolicySet};
 
+/// One Fig. 5 row: throughput at one cluster size.
 #[derive(Debug, Clone)]
 pub struct ScaleRow {
+    /// NPU count of the row.
     pub npus: usize,
     /// k tokens/s, cluster-wide (Fig. 5's y-axis).
     pub megatron_ktps: f64,
+    /// DeepSpeed-Ulysses throughput (k tokens/s).
     pub deepspeed_ktps: f64,
+    /// DHP throughput (k tokens/s).
     pub dhp_ktps: f64,
 }
 
 impl ScaleRow {
+    /// DHP's throughput ratio over DeepSpeed (the Fig. 5 annotation).
     pub fn dhp_vs_deepspeed(&self) -> f64 {
         self.dhp_ktps / self.deepspeed_ktps
     }
 }
 
+/// Sweep cluster sizes and measure all three policies' throughput.
 pub fn compute(
     npus_list: &[usize],
     gbs: usize,
@@ -60,6 +66,7 @@ pub fn compute(
         .collect()
 }
 
+/// `dhp reproduce fig5` entry point.
 pub fn run(args: &Args) -> Result<()> {
     let npus_list = args.usize_list_or("npus", &[8, 16, 32, 64])?;
     let gbs = args.usize_or("gbs", 512)?;

@@ -26,6 +26,12 @@
 //! The [`runtime`] module loads the AOT artifacts via the PJRT C API (the
 //! `xla` crate) and executes them from Rust; Python never runs on the
 //! training path.
+//!
+//! A map from every paper artifact (equations, algorithm, figures,
+//! tables) to the code and bench target that reproduces it lives in
+//! `docs/paper_map.md`.
+
+#![warn(missing_docs)]
 
 pub mod baselines;
 pub mod cluster;

@@ -7,6 +7,7 @@ use crate::util::stats;
 /// Accumulates per-step measurements with a warmup cutoff.
 #[derive(Debug, Clone)]
 pub struct StepMetrics {
+    /// Steps excluded from aggregation at the start of the run.
     pub warmup_steps: usize,
     steps_seen: usize,
     iter_times_s: Vec<f64>,
@@ -15,6 +16,7 @@ pub struct StepMetrics {
 }
 
 impl StepMetrics {
+    /// Fresh accumulator excluding the first `warmup_steps` steps.
     pub fn new(warmup_steps: usize) -> Self {
         StepMetrics {
             warmup_steps,
@@ -38,6 +40,7 @@ impl StepMetrics {
         }
     }
 
+    /// Steps recorded past the warmup cutoff.
     pub fn measured_steps(&self) -> usize {
         self.iter_times_s.len()
     }
@@ -47,6 +50,7 @@ impl StepMetrics {
         stats::mean(&self.iter_times_s)
     }
 
+    /// Median iteration time over measured steps.
     pub fn p50_iter_time_s(&self) -> f64 {
         stats::median(&self.iter_times_s)
     }
@@ -65,10 +69,12 @@ impl StepMetrics {
         self.throughput_tokens_per_s() / devices.max(1) as f64
     }
 
+    /// Losses recorded past the warmup cutoff.
     pub fn losses(&self) -> &[f64] {
         &self.losses
     }
 
+    /// Most recent measured loss, if any.
     pub fn last_loss(&self) -> Option<f64> {
         self.losses.last().copied()
     }

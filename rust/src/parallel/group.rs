@@ -23,6 +23,7 @@ pub enum GroupKind {
 /// An established communication group over a set of ranks.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct CommGroup {
+    /// What this group is used for.
     pub kind: GroupKind,
     /// Member ranks, sorted (identity of the group).
     pub ranks: Vec<RankId>,
@@ -38,8 +39,15 @@ impl CommGroup {
         (kind, ranks)
     }
 
+    /// Number of member ranks.
     pub fn degree(&self) -> usize {
         self.ranks.len()
+    }
+
+    /// Modeled device-buffer bytes this group pins while established
+    /// (see [`group_buffer_bytes`]).
+    pub fn buffer_bytes(&self) -> u64 {
+        group_buffer_bytes(self.degree())
     }
 
     /// Ring neighbours of `rank` inside this group: (prev, next).
@@ -52,6 +60,7 @@ impl CommGroup {
         ))
     }
 
+    /// Is `rank` a member of this group?
     pub fn contains(&self, rank: RankId) -> bool {
         self.ranks.binary_search(&rank).is_ok()
     }
@@ -60,6 +69,19 @@ impl CommGroup {
 /// Simulated HCCL group-creation cost in seconds (buffer registration +
 /// rendezvous). Charged once per unique group; the pool amortizes it.
 pub const GROUP_CREATE_COST_S: f64 = 0.030;
+
+/// Modeled per-member device-buffer footprint of an established group, in
+/// bytes. Real HCCL communicators pin a per-device staging buffer
+/// (`HCCL_BUFFSIZE`-style, tens of MB) for as long as the group lives —
+/// this is the memory the paper's "buffer overhead" remark refers to, and
+/// the unit the [`super::pool::PoolCapacity::BufferBytes`] budget counts.
+pub const GROUP_BUFFER_BYTES_PER_RANK: u64 = 64 * 1024 * 1024;
+
+/// Modeled device-buffer bytes a group of `degree` members pins while it
+/// stays established: every member rank holds one staging buffer.
+pub const fn group_buffer_bytes(degree: usize) -> u64 {
+    degree as u64 * GROUP_BUFFER_BYTES_PER_RANK
+}
 
 #[cfg(test)]
 mod tests {

@@ -54,29 +54,52 @@ impl WaveHint {
 /// step `t` reuses slot `w` of step `t-1`.
 #[derive(Debug, Clone, Default)]
 pub struct PlacementHint {
+    /// Per-wave-slot hints, indexed like the previous schedule's waves.
     pub waves: Vec<WaveHint>,
 }
 
 impl PlacementHint {
+    /// The hint recorded for wave slot `idx`, if any.
     pub fn wave(&self, idx: usize) -> Option<&WaveHint> {
         self.waves.get(idx)
     }
 
+    /// Forget all recorded placements.
     pub fn clear(&mut self) {
         self.waves.clear();
     }
 }
 
+/// Outcome of one tracked wave placement ([`DeviceMesh::place_tracked`]):
+/// the per-group rank blocks plus hint-quality telemetry — how many
+/// groups landed on a block replayed from the [`WaveHint`]. Replayed
+/// groups key into already-pooled communication groups, so the replay
+/// count separates placement churn from genuine workload drift when the
+/// pool's hit-rate drops.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Placement {
+    /// Per-group rank vectors in the input (plan) order, each sorted.
+    pub blocks: Vec<Vec<RankId>>,
+    /// Number of groups whose block was replayed from the hint (0 when
+    /// placing without a hint).
+    pub replayed: usize,
+}
+
 /// Physical placement of replica ranks.
 #[derive(Debug, Clone)]
 pub struct DeviceMesh {
+    /// Total model replicas (one replica = one full TP×PP grid).
     pub replicas: usize,
+    /// Replicas hosted per physical node.
     pub replicas_per_node: usize,
+    /// Intra-node fabric bandwidth (HCCS), bytes/s.
     pub intra_bw: f64,
+    /// Inter-node fabric bandwidth (IB), bytes/s.
     pub inter_bw: f64,
 }
 
 impl DeviceMesh {
+    /// Mesh over the cluster's replica topology.
     pub fn new(cluster: &ClusterConfig) -> Self {
         DeviceMesh {
             replicas: cluster.replicas(),
@@ -141,6 +164,18 @@ impl DeviceMesh {
     /// of its degree (in recorded order, first fully-free block wins).
     /// With `hint = None` this IS the historical `allocate` behavior.
     pub fn place(&self, degrees: &[usize], hint: Option<&WaveHint>) -> Vec<Vec<RankId>> {
+        self.place_tracked(degrees, hint).blocks
+    }
+
+    /// [`DeviceMesh::place`] with hint-quality telemetry: additionally
+    /// reports how many groups were placed by replaying a hinted block
+    /// (see [`Placement`]). The blocks are identical to what
+    /// [`DeviceMesh::place`] returns for the same inputs.
+    pub fn place_tracked(
+        &self,
+        degrees: &[usize],
+        hint: Option<&WaveHint>,
+    ) -> Placement {
         let total: usize = degrees.iter().sum();
         assert!(
             total <= self.replicas,
@@ -163,6 +198,7 @@ impl DeviceMesh {
         let mut order: Vec<usize> = (0..degrees.len()).collect();
         order.sort_by_key(|&i| std::cmp::Reverse(degrees[i]));
         let mut out = vec![Vec::new(); degrees.len()];
+        let mut replayed = 0usize;
         'groups: for &i in &order {
             let d = degrees[i];
             // Reuse preference: the first still-free block this degree
@@ -198,6 +234,7 @@ impl DeviceMesh {
                         free[self.node_of(r)].retain(|&x| x != r);
                     }
                     out[i] = block.clone();
+                    replayed += 1;
                     continue 'groups;
                 }
             }
@@ -240,7 +277,10 @@ impl DeviceMesh {
             ranks.sort_unstable();
             out[i] = ranks;
         }
-        out
+        Placement {
+            blocks: out,
+            replayed,
+        }
     }
 }
 
@@ -322,6 +362,24 @@ mod tests {
         }
         let replay = m.place(&degrees, Some(&hint));
         assert_eq!(first, replay, "unchanged degree vector must replay");
+    }
+
+    #[test]
+    fn tracked_placement_counts_replayed_groups() {
+        let m = mesh();
+        let degrees = [6usize, 4, 2, 1];
+        let first = m.place_tracked(&degrees, None);
+        assert_eq!(first.replayed, 0, "no hint, nothing replayed");
+        let mut hint = WaveHint::default();
+        for block in &first.blocks {
+            hint.remember(block);
+        }
+        let replay = m.place_tracked(&degrees, Some(&hint));
+        assert_eq!(replay.blocks, first.blocks);
+        assert_eq!(replay.replayed, degrees.len(), "full replay");
+        // One degree changes: only the surviving degrees replay.
+        let partial = m.place_tracked(&[6usize, 4, 3], Some(&hint));
+        assert_eq!(partial.replayed, 2);
     }
 
     #[test]

@@ -1,7 +1,8 @@
 //! Parallel state management: communication groups, the group POOL
-//! (paper §5 implementation detail 1), the MPU-style parallel-state
-//! object DHP reconfigures per micro-batch, and the device mesh mapping
-//! replica ranks to physical nodes.
+//! (paper §5 implementation detail 1, now capacity-bounded with LRU
+//! eviction), the MPU-style parallel-state object DHP reconfigures per
+//! micro-batch, and the device mesh mapping replica ranks to physical
+//! nodes.
 
 pub mod group;
 pub mod mesh;
@@ -11,4 +12,4 @@ pub mod pool;
 pub use group::{CommGroup, GroupKind, RankId};
 pub use mesh::DeviceMesh;
 pub use mpu::ParallelState;
-pub use pool::GroupPool;
+pub use pool::{GroupPool, PoolCapacity, PoolStats};

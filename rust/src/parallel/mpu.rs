@@ -6,15 +6,17 @@ use anyhow::{bail, Result};
 
 use super::group::{CommGroup, GroupKind, RankId};
 use super::mesh::DeviceMesh;
-use super::pool::{GroupPool, PoolStats};
+use super::pool::{GroupPool, PoolCapacity, PoolStats};
 use crate::scheduler::{PlacedPlan, Schedule};
 
 /// The live parallel state of the training job.
 #[derive(Debug)]
 pub struct ParallelState {
+    /// The physical replica topology groups are placed on.
     pub mesh: DeviceMesh,
-    /// Static degrees (validated, never reconfigured).
+    /// Static tensor-parallel degree (validated, never reconfigured).
     pub tp: usize,
+    /// Static pipeline-parallel degree (validated, never reconfigured).
     pub pp: usize,
     pool: GroupPool,
     /// CP groups of the current micro-batch, in plan order.
@@ -24,6 +26,7 @@ pub struct ParallelState {
 }
 
 impl ParallelState {
+    /// Fresh parallel state with an unbounded group pool.
     pub fn new(mesh: DeviceMesh, tp: usize, pp: usize) -> Self {
         ParallelState {
             mesh,
@@ -35,18 +38,25 @@ impl ParallelState {
         }
     }
 
+    /// Bound the group pool's communicator-buffer budget (LRU eviction on
+    /// overflow — see [`PoolCapacity`]).
+    pub fn with_pool_capacity(mut self, capacity: PoolCapacity) -> Self {
+        self.pool.set_capacity(capacity);
+        self
+    }
+
     /// Reconfigure the CP layout from a PLACED plan: the scheduler
     /// already bound ranks, so this validates the placement invariants
     /// and acquires pooled groups directly — no mesh re-allocation
-    /// happens on the execution path.
+    /// happens on the execution path. The wave's groups are acquired
+    /// atomically ([`GroupPool::acquire_wave_groups`]): they are co-live
+    /// on the device, so a capacity-capped pool may evict only groups
+    /// OUTSIDE this wave to make room.
     pub fn reconfigure_cp_placed(&mut self, plan: &PlacedPlan) -> Result<&[CommGroup]> {
         plan.validate_placement(self.mesh.replicas)?;
-        self.current_cp.clear();
-        for g in &plan.groups {
-            let (kind, ranks) = g.pool_key();
-            let cg = self.pool.acquire(kind, ranks).clone();
-            self.current_cp.push(cg);
-        }
+        self.current_cp = self
+            .pool
+            .acquire_wave_groups(plan.groups.iter().map(|g| g.pool_key()));
         self.reconfigurations += 1;
         Ok(&self.current_cp)
     }
@@ -83,14 +93,13 @@ impl ParallelState {
             bail!("zero CP degree in plan");
         }
         let rank_sets = self.mesh.allocate(degrees);
-        self.current_cp.clear();
-        for ranks in rank_sets {
-            let g = self
-                .pool
-                .acquire(GroupKind::ContextParallel, ranks)
-                .clone();
-            self.current_cp.push(g);
-        }
+        // Same co-liveness rule as the placed path: one wave's groups are
+        // acquired atomically and never evict each other.
+        self.current_cp = self.pool.acquire_wave_groups(
+            rank_sets
+                .into_iter()
+                .map(|ranks| (GroupKind::ContextParallel, ranks)),
+        );
         self.reconfigurations += 1;
         Ok(&self.current_cp)
     }
@@ -110,16 +119,24 @@ impl ParallelState {
             .collect()
     }
 
+    /// The CP groups of the current micro-batch, in plan order.
     pub fn current_cp_groups(&self) -> &[CommGroup] {
         &self.current_cp
     }
 
+    /// Traffic statistics of the underlying group pool.
     pub fn pool_stats(&self) -> PoolStats {
         self.pool.stats()
     }
 
+    /// Number of groups currently established in the pool.
     pub fn pool_size(&self) -> usize {
         self.pool.len()
+    }
+
+    /// Modeled communicator-buffer bytes the pool currently pins.
+    pub fn pool_buffer_bytes(&self) -> u64 {
+        self.pool.buffer_bytes()
     }
 }
 
@@ -198,6 +215,7 @@ mod tests {
                 .collect(),
             est_makespan_s: 0.0,
             search_makespan_s: 0.0,
+            replayed_groups: 0,
         }
     }
 
@@ -213,6 +231,19 @@ mod tests {
         st.reconfigure_cp_placed(&plan).unwrap();
         assert_eq!(st.pool_stats().misses, misses);
         assert_eq!(st.reconfigurations, 2);
+    }
+
+    #[test]
+    fn placed_reconfigure_keeps_whole_wave_under_tight_capacity() {
+        // A pool cap below the wave size must not break the wave: all of
+        // its groups stay resident (co-live), over-committing the budget.
+        let cluster = ClusterConfig::default().with_npus(16);
+        let mut st = ParallelState::new(DeviceMesh::new(&cluster), 1, 1)
+            .with_pool_capacity(crate::parallel::PoolCapacity::MaxGroups(1));
+        let plan = placed(&[(2, vec![0, 1]), (2, vec![2, 3]), (1, vec![4])]);
+        let groups = st.reconfigure_cp_placed(&plan).unwrap();
+        assert_eq!(groups.len(), 3);
+        assert_eq!(st.pool_size(), 3, "wave must stay co-resident");
     }
 
     #[test]

@@ -2,22 +2,106 @@
 //! groups are created once, cached, and reused across batches. "In
 //! practice, the total number of unique groups required is limited, and
 //! the creation overhead becomes negligible over long training runs."
+//!
+//! The seed pool grew without bound, which silently assumed that claim.
+//! Real HCCL communicators pin device buffer memory for as long as they
+//! live ([`group_buffer_bytes`]), so a production system must budget the
+//! pool: [`GroupPool`] therefore takes a [`PoolCapacity`] — a group-count
+//! cap or a modeled buffer-byte budget — and evicts least-recently-used
+//! groups when [`GroupPool::acquire`]/[`GroupPool::prewarm`] would exceed
+//! it. Re-creating an evicted group is charged the full creation cost
+//! again (and counted in [`PoolStats::evicted_recreations`]), which is
+//! what makes the "near-free reconfiguration" claim falsifiable: cap the
+//! pool below the workload's working set and the cost comes back.
+//!
+//! # Acquire/evict lifecycle
+//!
+//! ```
+//! use dhp::parallel::group::GroupKind;
+//! use dhp::parallel::pool::{GroupPool, PoolCapacity};
+//!
+//! let mut pool = GroupPool::with_capacity(PoolCapacity::MaxGroups(2));
+//! pool.acquire(GroupKind::ContextParallel, vec![0, 1]); // miss: created
+//! pool.acquire(GroupKind::ContextParallel, vec![2, 3]); // miss: created
+//! pool.acquire(GroupKind::ContextParallel, vec![0, 1]); // hit: refreshes LRU order
+//! assert_eq!(pool.stats().hits, 1);
+//!
+//! // A third group exceeds the cap: the coldest group ([2,3]) is evicted.
+//! pool.acquire(GroupKind::ContextParallel, vec![4, 5]);
+//! assert_eq!(pool.len(), 2);
+//! assert_eq!(pool.stats().evictions, 1);
+//!
+//! // Re-acquiring the evicted group is an honest re-creation: a fresh
+//! // miss that pays the full creation cost again.
+//! pool.acquire(GroupKind::ContextParallel, vec![2, 3]);
+//! assert_eq!(pool.stats().misses, 4);
+//! assert_eq!(pool.stats().evicted_recreations, 1);
+//! ```
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
-use super::group::{CommGroup, GroupKind, RankId, GROUP_CREATE_COST_S};
+use super::group::{
+    group_buffer_bytes, CommGroup, GroupKind, RankId, GROUP_CREATE_COST_S,
+};
 
-/// Pool statistics (reported by Table-4-style case studies and the
-/// scalability benches).
+/// Capacity budget of a [`GroupPool`] — how much communicator state the
+/// device can afford to keep established at once.
+///
+/// The group being acquired is always admitted (it is in active use);
+/// eviction only removes *other* groups. A budget smaller than a single
+/// group therefore degrades the pool to pass-through (every acquire is a
+/// miss) rather than failing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolCapacity {
+    /// No cap: the seed behavior, kept as the default. Honest only when
+    /// the workload's unique-group working set is genuinely small.
+    Unbounded,
+    /// At most this many groups may stay established.
+    MaxGroups(usize),
+    /// Modeled device-buffer budget in bytes: the sum of
+    /// [`group_buffer_bytes`] over all established groups must stay at or
+    /// under this budget.
+    BufferBytes(u64),
+}
+
+impl Default for PoolCapacity {
+    fn default() -> Self {
+        PoolCapacity::Unbounded
+    }
+}
+
+impl PoolCapacity {
+    /// Does a pool holding `groups` groups totalling `bytes` modeled
+    /// buffer bytes fit this budget?
+    pub fn admits(&self, groups: usize, bytes: u64) -> bool {
+        match *self {
+            PoolCapacity::Unbounded => true,
+            PoolCapacity::MaxGroups(cap) => groups <= cap,
+            PoolCapacity::BufferBytes(budget) => bytes <= budget,
+        }
+    }
+}
+
+/// Pool statistics (reported by Table-4-style case studies, the Tables
+/// 1–2 overhead columns, and the scalability benches).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct PoolStats {
+    /// Acquires resolved by an already-established group.
     pub hits: u64,
+    /// Acquires that had to create (or re-create) a group.
     pub misses: u64,
     /// Total simulated seconds spent creating groups.
     pub create_time_s: f64,
+    /// Groups evicted to stay within the [`PoolCapacity`] budget.
+    pub evictions: u64,
+    /// Misses that re-created a group the pool had previously evicted —
+    /// the capacity-thrash signal: a high count means the budget is below
+    /// the workload's working set.
+    pub evicted_recreations: u64,
 }
 
 impl PoolStats {
+    /// Fraction of acquires served from the pool (0 when no traffic).
     pub fn hit_rate(&self) -> f64 {
         let total = self.hits + self.misses;
         if total == 0 {
@@ -28,28 +112,82 @@ impl PoolStats {
     }
 }
 
-/// Cache of established communication groups keyed by (kind, ranks).
+/// One established group plus its LRU bookkeeping.
+#[derive(Debug)]
+struct Entry {
+    group: CommGroup,
+    /// Logical acquire-clock timestamp of the last touch. Strictly
+    /// increasing across acquires, so LRU victim selection is
+    /// deterministic regardless of hash-map iteration order.
+    last_used: u64,
+}
+
+/// Cache of established communication groups keyed by (kind, ranks),
+/// bounded by a [`PoolCapacity`] with least-recently-used eviction.
+///
+/// See the [module docs](self) for the acquire/evict lifecycle.
 #[derive(Debug, Default)]
 pub struct GroupPool {
-    groups: HashMap<(GroupKind, Vec<RankId>), CommGroup>,
+    groups: HashMap<(GroupKind, Vec<RankId>), Entry>,
+    capacity: PoolCapacity,
     stats: PoolStats,
     next_serial: u64,
+    clock: u64,
+    /// Modeled buffer bytes currently pinned by established groups.
+    buffer_bytes: u64,
+    /// Identity of every group ever evicted, so re-creations can be
+    /// counted (stats metadata only — no buffers are modeled for it).
+    evicted: HashSet<(GroupKind, Vec<RankId>)>,
+    /// Keys protected from eviction for the duration of one
+    /// [`GroupPool::acquire_wave`] call (a wave's groups are co-live on
+    /// the device and must never evict each other). Empty outside it.
+    pinned: HashSet<(GroupKind, Vec<RankId>)>,
 }
 
 impl GroupPool {
+    /// An unbounded pool (the seed behavior).
     pub fn new() -> Self {
         Self::default()
     }
 
-    /// Fetch-or-create a group. A pool hit is free; a miss pays the
-    /// (simulated) HCCL creation cost and registers the group.
+    /// A pool bounded by `capacity` (LRU eviction on overflow).
+    pub fn with_capacity(capacity: PoolCapacity) -> Self {
+        GroupPool {
+            capacity,
+            ..Self::default()
+        }
+    }
+
+    /// The configured capacity budget.
+    pub fn capacity(&self) -> PoolCapacity {
+        self.capacity
+    }
+
+    /// Re-budget the pool, immediately evicting LRU groups until the new
+    /// capacity is satisfied (a zero budget empties the pool — nothing is
+    /// in active use during a re-budget, so no group is protected).
+    pub fn set_capacity(&mut self, capacity: PoolCapacity) {
+        self.capacity = capacity;
+        self.enforce_capacity(None);
+    }
+
+    /// Fetch-or-create a group. A pool hit is free and refreshes the
+    /// group's LRU position; a miss pays the (simulated) HCCL creation
+    /// cost, registers the group, and evicts least-recently-used groups
+    /// as needed to stay within the capacity budget. The acquired group
+    /// itself is never evicted by its own admission.
     pub fn acquire(&mut self, kind: GroupKind, ranks: Vec<RankId>) -> &CommGroup {
         let key = CommGroup::key(kind, ranks);
-        if self.groups.contains_key(&key) {
+        self.clock += 1;
+        if let Some(entry) = self.groups.get_mut(&key) {
+            entry.last_used = self.clock;
             self.stats.hits += 1;
         } else {
             self.stats.misses += 1;
             self.stats.create_time_s += GROUP_CREATE_COST_S;
+            if self.evicted.contains(&key) {
+                self.stats.evicted_recreations += 1;
+            }
             let serial = self.next_serial;
             self.next_serial += 1;
             let group = CommGroup {
@@ -57,12 +195,99 @@ impl GroupPool {
                 ranks: key.1.clone(),
                 serial,
             };
-            self.groups.insert(key.clone(), group);
+            self.buffer_bytes += group_buffer_bytes(group.degree());
+            self.groups.insert(
+                key.clone(),
+                Entry {
+                    group,
+                    last_used: self.clock,
+                },
+            );
+            self.enforce_capacity(Some(&key));
         }
-        self.groups.get(&key).unwrap()
+        &self.groups.get(&key).unwrap().group
     }
 
-    /// Pre-create groups at training start (the paper's warm pool).
+    /// Fetch-or-create every group of ONE wave, guaranteeing the wave's
+    /// groups coexist: the groups of a wave are all live on the device at
+    /// once, so none of them may evict another (only groups outside the
+    /// wave are eviction victims). If the wave alone exceeds the budget
+    /// the pool over-commits for the wave's duration — that over-commit
+    /// is exactly the signal that the budget cannot actually run this
+    /// schedule. Returns the simulated creation seconds paid.
+    pub fn acquire_wave<I>(&mut self, keys: I) -> f64
+    where
+        I: IntoIterator<Item = (GroupKind, Vec<RankId>)>,
+    {
+        let before = self.stats.create_time_s;
+        let canon: Vec<(GroupKind, Vec<RankId>)> = keys
+            .into_iter()
+            .map(|(kind, ranks)| CommGroup::key(kind, ranks))
+            .collect();
+        self.pinned = canon.iter().cloned().collect();
+        for (kind, ranks) in canon {
+            self.acquire(kind, ranks);
+        }
+        self.pinned.clear();
+        self.stats.create_time_s - before
+    }
+
+    /// [`GroupPool::acquire_wave`] returning the wave's established
+    /// groups (cloned, in key order) in the same pass — the form
+    /// executors use to install a wave as their current parallel state
+    /// without a second key-derivation round-trip.
+    pub fn acquire_wave_groups<I>(&mut self, keys: I) -> Vec<CommGroup>
+    where
+        I: IntoIterator<Item = (GroupKind, Vec<RankId>)>,
+    {
+        let canon: Vec<(GroupKind, Vec<RankId>)> = keys
+            .into_iter()
+            .map(|(kind, ranks)| CommGroup::key(kind, ranks))
+            .collect();
+        self.pinned = canon.iter().cloned().collect();
+        let mut out = Vec::with_capacity(canon.len());
+        for (kind, ranks) in canon {
+            out.push(self.acquire(kind, ranks).clone());
+        }
+        self.pinned.clear();
+        out
+    }
+
+    /// The established group for a key, if resident (wave callers use
+    /// this after [`GroupPool::acquire_wave`], whose pinning guarantees
+    /// residency for every key of the wave).
+    pub fn get(&self, kind: GroupKind, ranks: &[RankId]) -> Option<&CommGroup> {
+        let key = CommGroup::key(kind, ranks.to_vec());
+        self.groups.get(&key).map(|e| &e.group)
+    }
+
+    /// Evict LRU groups until the capacity budget holds. `protect` (the
+    /// group just acquired) and the pinned wave keys are never victims;
+    /// if they alone exceed the budget the pool transiently over-commits
+    /// rather than evicting groups in active use.
+    fn enforce_capacity(&mut self, protect: Option<&(GroupKind, Vec<RankId>)>) {
+        while !self.capacity.admits(self.groups.len(), self.buffer_bytes) {
+            let victim = self
+                .groups
+                .iter()
+                .filter(|(k, _)| Some(*k) != protect && !self.pinned.contains(*k))
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(key) => {
+                    let entry = self.groups.remove(&key).unwrap();
+                    self.buffer_bytes -= entry.group.buffer_bytes();
+                    self.stats.evictions += 1;
+                    self.evicted.insert(key);
+                }
+                None => break, // only in-use (protected/pinned) groups remain
+            }
+        }
+    }
+
+    /// Pre-create groups at training start (the paper's warm pool). The
+    /// capacity budget applies here too: prewarming more than the budget
+    /// holds establishes only the most recently warmed groups.
     pub fn prewarm<I>(&mut self, entries: I)
     where
         I: IntoIterator<Item = (GroupKind, Vec<RankId>)>,
@@ -78,18 +303,32 @@ impl GroupPool {
 
     /// Zero the traffic counters while keeping the cached groups (for
     /// windowed hit-rate measurements, e.g. "after a 10-step warmup").
+    /// The evicted-identity memory is cleared too, so a window's
+    /// `evicted_recreations` only counts re-creations of groups evicted
+    /// WITHIN that window — recreations never exceed evictions in any
+    /// windowed report.
     pub fn reset_stats(&mut self) {
         self.stats = PoolStats::default();
+        self.evicted.clear();
     }
 
+    /// Number of currently established groups (pool occupancy).
     pub fn len(&self) -> usize {
         self.groups.len()
     }
 
+    /// Is the pool empty?
     pub fn is_empty(&self) -> bool {
         self.groups.is_empty()
     }
 
+    /// Modeled device-buffer bytes currently pinned by the established
+    /// groups (Σ [`group_buffer_bytes`] over the pool).
+    pub fn buffer_bytes(&self) -> u64 {
+        self.buffer_bytes
+    }
+
+    /// Traffic counters since the last [`GroupPool::reset_stats`].
     pub fn stats(&self) -> PoolStats {
         self.stats
     }
@@ -98,6 +337,7 @@ impl GroupPool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::parallel::group::GROUP_BUFFER_BYTES_PER_RANK;
 
     #[test]
     fn second_acquire_is_a_hit() {
@@ -160,10 +400,179 @@ mod tests {
     }
 
     #[test]
+    fn reset_stats_starts_a_self_consistent_window() {
+        // A window never reports recreations of evictions it didn't see:
+        // after reset_stats, re-creating a pre-window-evicted group is a
+        // plain miss, not an evicted_recreation.
+        let mut pool = GroupPool::with_capacity(PoolCapacity::MaxGroups(1));
+        pool.acquire(GroupKind::ContextParallel, vec![0, 1]);
+        pool.acquire(GroupKind::ContextParallel, vec![2, 3]); // evicts [0,1]
+        pool.reset_stats();
+        pool.acquire(GroupKind::ContextParallel, vec![0, 1]); // re-creates
+        let s = pool.stats();
+        assert_eq!(s.evicted_recreations, 0);
+        assert_eq!(s.misses, 1);
+        assert!(
+            s.evicted_recreations <= s.evictions + s.misses,
+            "windowed thrash counters must be self-consistent"
+        );
+    }
+
+    #[test]
     fn serials_are_unique() {
         let mut pool = GroupPool::new();
         let s1 = pool.acquire(GroupKind::ContextParallel, vec![0]).serial;
         let s2 = pool.acquire(GroupKind::ContextParallel, vec![1]).serial;
         assert_ne!(s1, s2);
+    }
+
+    #[test]
+    fn unbounded_pool_never_evicts() {
+        let mut pool = GroupPool::new();
+        for i in 0..100usize {
+            pool.acquire(GroupKind::ContextParallel, vec![i, i + 100]);
+        }
+        assert_eq!(pool.len(), 100);
+        assert_eq!(pool.stats().evictions, 0);
+        assert_eq!(pool.stats().evicted_recreations, 0);
+    }
+
+    #[test]
+    fn lru_evicts_coldest_group_first() {
+        let mut pool = GroupPool::with_capacity(PoolCapacity::MaxGroups(2));
+        pool.acquire(GroupKind::ContextParallel, vec![0, 1]);
+        pool.acquire(GroupKind::ContextParallel, vec![2, 3]);
+        // Touch [0,1]: [2,3] becomes the LRU victim.
+        pool.acquire(GroupKind::ContextParallel, vec![0, 1]);
+        pool.acquire(GroupKind::ContextParallel, vec![4, 5]);
+        assert_eq!(pool.len(), 2);
+        assert_eq!(pool.stats().evictions, 1);
+        // [0,1] survived, [2,3] did not.
+        pool.acquire(GroupKind::ContextParallel, vec![0, 1]);
+        assert_eq!(pool.stats().misses, 3);
+        pool.acquire(GroupKind::ContextParallel, vec![2, 3]);
+        assert_eq!(pool.stats().misses, 4);
+        assert_eq!(pool.stats().evicted_recreations, 1);
+    }
+
+    #[test]
+    fn recreation_of_evicted_group_pays_full_cost() {
+        let mut pool = GroupPool::with_capacity(PoolCapacity::MaxGroups(1));
+        pool.acquire(GroupKind::ContextParallel, vec![0, 1]);
+        pool.acquire(GroupKind::ContextParallel, vec![2, 3]); // evicts [0,1]
+        pool.acquire(GroupKind::ContextParallel, vec![0, 1]); // re-creates
+        assert_eq!(pool.stats().misses, 3);
+        assert_eq!(pool.stats().evictions, 2);
+        assert_eq!(pool.stats().evicted_recreations, 1);
+        assert!(
+            (pool.stats().create_time_s - 3.0 * GROUP_CREATE_COST_S).abs() < 1e-12,
+            "every re-creation must be charged honestly"
+        );
+    }
+
+    #[test]
+    fn buffer_budget_counts_modeled_bytes() {
+        // Budget fits exactly two degree-2 groups.
+        let budget = 4 * GROUP_BUFFER_BYTES_PER_RANK;
+        let mut pool = GroupPool::with_capacity(PoolCapacity::BufferBytes(budget));
+        pool.acquire(GroupKind::ContextParallel, vec![0, 1]);
+        pool.acquire(GroupKind::ContextParallel, vec![2, 3]);
+        assert_eq!(pool.buffer_bytes(), budget);
+        assert_eq!(pool.stats().evictions, 0);
+        // A degree-4 group alone fills the budget: both residents evicted.
+        pool.acquire(GroupKind::ContextParallel, vec![4, 5, 6, 7]);
+        assert_eq!(pool.len(), 1);
+        assert_eq!(pool.buffer_bytes(), budget);
+        assert_eq!(pool.stats().evictions, 2);
+    }
+
+    #[test]
+    fn acquired_group_is_never_its_own_victim() {
+        // A single group larger than the whole budget is still admitted
+        // (it is in active use); the pool transiently over-commits.
+        let mut pool = GroupPool::with_capacity(PoolCapacity::BufferBytes(
+            GROUP_BUFFER_BYTES_PER_RANK,
+        ));
+        let g = pool.acquire(GroupKind::ContextParallel, vec![0, 1, 2]);
+        assert_eq!(g.ranks, vec![0, 1, 2]);
+        assert_eq!(pool.len(), 1);
+        assert!(pool.buffer_bytes() > GROUP_BUFFER_BYTES_PER_RANK);
+    }
+
+    #[test]
+    fn set_capacity_evicts_down() {
+        let mut pool = GroupPool::new();
+        for i in 0..6usize {
+            pool.acquire(GroupKind::ContextParallel, vec![2 * i, 2 * i + 1]);
+        }
+        pool.set_capacity(PoolCapacity::MaxGroups(2));
+        assert_eq!(pool.len(), 2);
+        assert_eq!(pool.stats().evictions, 4);
+        // The two most recently used groups survive.
+        pool.acquire(GroupKind::ContextParallel, vec![8, 9]);
+        pool.acquire(GroupKind::ContextParallel, vec![10, 11]);
+        assert_eq!(pool.stats().hits, 2);
+    }
+
+    #[test]
+    fn wave_acquire_never_evicts_co_live_groups() {
+        // Groups of one wave are simultaneously live on the device: under
+        // a cap smaller than the wave, the wave's groups must evict only
+        // OUTSIDE groups and over-commit for the rest — never each other.
+        let mut pool = GroupPool::with_capacity(PoolCapacity::MaxGroups(2));
+        pool.acquire(GroupKind::ContextParallel, vec![0, 1]);
+        pool.acquire(GroupKind::ContextParallel, vec![2, 3]);
+        let paid = pool.acquire_wave([
+            (GroupKind::ContextParallel, vec![4, 5]),
+            (GroupKind::ContextParallel, vec![6, 7]),
+            (GroupKind::ContextParallel, vec![8, 9]),
+        ]);
+        assert!((paid - 3.0 * GROUP_CREATE_COST_S).abs() < 1e-12);
+        // Both outside residents were evicted; the wave over-commits.
+        assert_eq!(pool.stats().evictions, 2);
+        assert_eq!(pool.len(), 3, "the whole wave must stay resident");
+        for ranks in [vec![4, 5], vec![6, 7], vec![8, 9]] {
+            assert!(
+                pool.get(GroupKind::ContextParallel, &ranks).is_some(),
+                "wave group {ranks:?} was evicted by its own wave"
+            );
+        }
+        // The next non-wave acquire shrinks the pool back under the cap.
+        pool.acquire(GroupKind::ContextParallel, vec![10, 11]);
+        assert_eq!(pool.len(), 2);
+    }
+
+    #[test]
+    fn wave_acquire_hits_warm_groups_for_free() {
+        let mut pool = GroupPool::new();
+        pool.prewarm([
+            (GroupKind::ContextParallel, vec![0, 1]),
+            (GroupKind::ContextParallel, vec![2, 3]),
+        ]);
+        let paid = pool.acquire_wave([
+            (GroupKind::ContextParallel, vec![1, 0]), // same set, warm
+            (GroupKind::ContextParallel, vec![2, 3]),
+        ]);
+        assert_eq!(paid, 0.0);
+        assert_eq!(pool.stats().hits, 2);
+    }
+
+    #[test]
+    fn prewarm_respects_capacity() {
+        let mut pool = GroupPool::with_capacity(PoolCapacity::MaxGroups(2));
+        pool.prewarm([
+            (GroupKind::ContextParallel, vec![0, 1]),
+            (GroupKind::ContextParallel, vec![2, 3]),
+            (GroupKind::ContextParallel, vec![4, 5]),
+        ]);
+        assert_eq!(pool.len(), 2);
+        // Stats (including prewarm evictions) are reset: not runtime
+        // traffic.
+        assert_eq!(pool.stats(), PoolStats::default());
+        // The most recently warmed groups are the residents.
+        pool.acquire(GroupKind::ContextParallel, vec![2, 3]);
+        pool.acquire(GroupKind::ContextParallel, vec![4, 5]);
+        assert_eq!(pool.stats().hits, 2);
+        assert_eq!(pool.stats().misses, 0);
     }
 }

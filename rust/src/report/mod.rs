@@ -6,12 +6,16 @@ use crate::util::cli::Args;
 
 /// Fixed-width table printer for paper-style console reports.
 pub struct Table {
+    /// Title printed above the table.
     pub title: String,
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Row cells (each row's arity must match the headers).
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// Empty table with the given title and column headers.
     pub fn new(title: &str, headers: &[&str]) -> Self {
         Table {
             title: title.to_string(),
@@ -20,11 +24,13 @@ impl Table {
         }
     }
 
+    /// Append one row (panics if the arity differs from the headers).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.headers.len(), "row arity");
         self.rows.push(cells);
     }
 
+    /// Render to an aligned fixed-width string.
     pub fn render(&self) -> String {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for row in &self.rows {
@@ -53,6 +59,7 @@ impl Table {
         out
     }
 
+    /// Render and print to stdout.
     pub fn print(&self) {
         print!("{}", self.render());
     }

@@ -23,14 +23,23 @@ pub enum ArtifactKind {
 /// Metadata of one artifact (one manifest entry).
 #[derive(Debug, Clone)]
 pub struct ArtifactMeta {
+    /// What the artifact computes.
     pub kind: ArtifactKind,
+    /// Flat parameter count.
     pub param_count: usize,
+    /// Batch dimension the artifact was lowered at.
     pub batch: usize,
+    /// Total sequence length (vision + text).
     pub seq_total: usize,
+    /// Vision token count per sample.
     pub seq_vision: usize,
+    /// Text token count per sample.
     pub seq_text: usize,
+    /// Vision patch feature dimension.
     pub patch_dim: usize,
+    /// Token-id vocabulary size.
     pub vocab: usize,
+    /// Whether the vision tower was frozen at lowering time.
     pub freeze_vision: bool,
 }
 
@@ -73,11 +82,13 @@ impl ArtifactMeta {
 /// The parsed artifacts manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Directory the manifest (and its artifacts) live in.
     pub dir: PathBuf,
     entries: BTreeMap<String, ArtifactMeta>,
 }
 
 impl Manifest {
+    /// Read and parse `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -85,6 +96,7 @@ impl Manifest {
         Self::parse(dir, &text)
     }
 
+    /// Parse manifest JSON text (split out for tests).
     pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
         let j = Json::parse(text)?;
         let mut entries = BTreeMap::new();
@@ -97,10 +109,12 @@ impl Manifest {
         })
     }
 
+    /// Metadata of one artifact file, if present.
     pub fn get(&self, file: &str) -> Option<&ArtifactMeta> {
         self.entries.get(file)
     }
 
+    /// All artifact file names in the manifest.
     pub fn names(&self) -> impl Iterator<Item = &str> {
         self.entries.keys().map(|s| s.as_str())
     }

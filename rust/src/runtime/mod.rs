@@ -43,6 +43,7 @@ impl Runtime {
         Ok(Runtime { client })
     }
 
+    /// The PJRT platform name (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -85,12 +86,15 @@ impl Runtime {
 /// A compiled model artifact ready for execution.
 pub struct LoadedModel {
     exe: xla::PjRtLoadedExecutable,
+    /// Shape/kind metadata from the artifact manifest.
     pub meta: ArtifactMeta,
 }
 
 /// Outputs of a gradient step.
 pub struct GradOut {
+    /// Scalar training loss.
     pub loss: f32,
+    /// Flat gradient vector (same layout as the params blob).
     pub grads: Vec<f32>,
 }
 

@@ -23,18 +23,22 @@ const UNAVAILABLE: &str =
 pub struct PjRtClient;
 
 impl PjRtClient {
+    /// Mirrors `xla::PjRtClient::cpu`; always errors in the stub.
     pub fn cpu() -> Result<PjRtClient, Error> {
         Err(Error(UNAVAILABLE))
     }
 
+    /// Mirrors `xla::PjRtClient::platform_name`.
     pub fn platform_name(&self) -> String {
         "pjrt-stub".to_string()
     }
 
+    /// Mirrors `xla::PjRtClient::compile`; unreachable (cpu() fails).
     pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
         Err(Error(UNAVAILABLE))
     }
 
+    /// Mirrors `xla::PjRtClient::buffer_from_host_buffer`; unreachable.
     pub fn buffer_from_host_buffer<T: Copy>(
         &self,
         _data: &[T],
@@ -49,6 +53,7 @@ impl PjRtClient {
 pub struct HloModuleProto;
 
 impl HloModuleProto {
+    /// Mirrors `xla::HloModuleProto::from_text_file`; unreachable.
     pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto, Error> {
         Err(Error(UNAVAILABLE))
     }
@@ -58,6 +63,7 @@ impl HloModuleProto {
 pub struct XlaComputation;
 
 impl XlaComputation {
+    /// Mirrors `xla::XlaComputation::from_proto`.
     pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
         XlaComputation
     }
@@ -67,6 +73,7 @@ impl XlaComputation {
 pub struct PjRtBuffer;
 
 impl PjRtBuffer {
+    /// Mirrors `xla::PjRtBuffer::to_literal_sync`; unreachable.
     pub fn to_literal_sync(&self) -> Result<Literal, Error> {
         Err(Error(UNAVAILABLE))
     }
@@ -76,10 +83,12 @@ impl PjRtBuffer {
 pub struct PjRtLoadedExecutable;
 
 impl PjRtLoadedExecutable {
+    /// Mirrors `xla::PjRtLoadedExecutable::client`.
     pub fn client(&self) -> PjRtClient {
         PjRtClient
     }
 
+    /// Mirrors `xla::PjRtLoadedExecutable::execute_b`; unreachable.
     pub fn execute_b<B>(&self, _inputs: &[B]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
         Err(Error(UNAVAILABLE))
     }
@@ -89,18 +98,22 @@ impl PjRtLoadedExecutable {
 pub struct Literal;
 
 impl Literal {
+    /// Mirrors `xla::Literal::to_tuple1`; unreachable.
     pub fn to_tuple1(&self) -> Result<Literal, Error> {
         Err(Error(UNAVAILABLE))
     }
 
+    /// Mirrors `xla::Literal::to_tuple2`; unreachable.
     pub fn to_tuple2(&self) -> Result<(Literal, Literal), Error> {
         Err(Error(UNAVAILABLE))
     }
 
+    /// Mirrors `xla::Literal::get_first_element`; unreachable.
     pub fn get_first_element<T: Default>(&self) -> Result<T, Error> {
         Err(Error(UNAVAILABLE))
     }
 
+    /// Mirrors `xla::Literal::to_vec`; unreachable.
     pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
         Err(Error(UNAVAILABLE))
     }

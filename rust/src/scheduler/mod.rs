@@ -86,6 +86,7 @@ pub enum DegreePolicy {
 }
 
 impl DegreePolicy {
+    /// Is degree `d` admissible under this policy?
     pub fn admits(&self, d: usize) -> bool {
         match self {
             DegreePolicy::AnyInteger => true,
@@ -110,6 +111,7 @@ impl DegreePolicy {
 /// placement off the schedule instead of re-deriving it.
 #[derive(Debug, Clone, Default)]
 pub struct Schedule {
+    /// The placed waves, executed serially over the full cluster.
     pub waves: Vec<PlacedPlan>,
     /// Pure solver wall-clock (packing + DP + placement) — Tables 1–2
     /// "Solver Time".
@@ -124,6 +126,23 @@ pub struct Schedule {
 }
 
 impl Schedule {
+    /// Hint-quality telemetry: the fraction of this schedule's placed
+    /// groups whose rank block was replayed from the previous step's
+    /// placement ([`crate::parallel::mesh::WaveHint`]). Replayed groups
+    /// key into already-pooled communication groups, so a drop in replay
+    /// rate attributes pool misses to placement churn rather than genuine
+    /// workload drift. 0 for an empty schedule (and for the first step,
+    /// which has no previous placement to replay).
+    pub fn replay_rate(&self) -> f64 {
+        let total: usize = self.waves.iter().map(|w| w.groups.len()).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let replayed: usize =
+            self.waves.iter().map(|w| w.replayed_groups).sum();
+        replayed as f64 / total as f64
+    }
+
     /// Degrees across all waves, descending (Table 4 presentation).
     pub fn degree_multiset(&self) -> Vec<usize> {
         let mut out: Vec<usize> = self
@@ -194,8 +213,11 @@ enum Candidate {
 /// same pooled communication groups).
 #[derive(Debug)]
 pub struct Scheduler {
+    /// The Eq. 8–10 cost model candidate plans are scored against.
     pub cost: CostModel,
+    /// Physical replica topology plans are placed on.
     pub mesh: DeviceMesh,
+    /// Degree admissibility (any-integer for DHP, pow2 for FlexSP-style).
     pub policy: DegreePolicy,
     /// Rank blocks of the previously realized schedule, per wave slot.
     /// Shared across clones so a policy wrapper keeps reuse continuity.
@@ -214,6 +236,8 @@ impl Clone for Scheduler {
 }
 
 impl Scheduler {
+    /// DHP scheduler (any-integer degrees) over `mesh`, scoring with
+    /// `cost`.
     pub fn new(cost: CostModel, mesh: DeviceMesh) -> Self {
         Scheduler {
             cost,
@@ -223,6 +247,8 @@ impl Scheduler {
         }
     }
 
+    /// Restrict the degree search space (e.g. to powers of two for the
+    /// FlexSP-style ablation).
     pub fn with_policy(mut self, policy: DegreePolicy) -> Self {
         self.policy = policy;
         self
@@ -249,6 +275,51 @@ impl Scheduler {
     /// and keep the best estimated schedule. Candidates are solved in
     /// parallel with incumbent pruning; see the module docs for why the
     /// result is nevertheless deterministic.
+    ///
+    /// # Examples
+    ///
+    /// Schedule a toy micro-batch on an 8-replica cluster:
+    ///
+    /// ```
+    /// use dhp::config::presets::by_name;
+    /// use dhp::config::{ClusterConfig, TrainStage};
+    /// use dhp::cost::{CostCoeffs, CostModel, HardwareSpec, MemoryModel};
+    /// use dhp::data::sequence::Sequence;
+    /// use dhp::parallel::DeviceMesh;
+    /// use dhp::scheduler::Scheduler;
+    ///
+    /// let cluster = ClusterConfig::default().with_npus(8);
+    /// let preset = by_name("InternVL3-2B").unwrap();
+    /// let cost = CostModel {
+    ///     coeffs: CostCoeffs::analytic(
+    ///         &preset,
+    ///         TrainStage::Full,
+    ///         &HardwareSpec::default(),
+    ///     ),
+    ///     memory: MemoryModel {
+    ///         e_bytes: 8192.0 * preset.act_bytes_per_token() + 1e9,
+    ///         m_states: 1e9,
+    ///         m_token: preset.act_bytes_per_token(),
+    ///     },
+    /// };
+    /// let scheduler = Scheduler::new(cost, DeviceMesh::new(&cluster));
+    ///
+    /// // Four sequences of mixed vision/text token counts.
+    /// let batch: Vec<Sequence> = (0..4)
+    ///     .map(|i| Sequence::new(i, 2048 * (i + 1), 256))
+    ///     .collect();
+    /// let schedule = scheduler.schedule(&batch);
+    ///
+    /// // Every sequence is covered exactly once and every group carries
+    /// // a concrete, disjoint, in-budget rank set.
+    /// schedule.validate(&batch, 8).unwrap();
+    /// assert!(!schedule.waves.is_empty());
+    /// for wave in &schedule.waves {
+    ///     for group in &wave.groups {
+    ///         assert_eq!(group.ranks.len(), group.degree);
+    ///     }
+    /// }
+    /// ```
     pub fn schedule(&self, seqs: &[Sequence]) -> Schedule {
         let t0 = Instant::now();
         let draft = self.plan_search(seqs);

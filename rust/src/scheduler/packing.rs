@@ -30,10 +30,12 @@ pub struct AtomicGroup {
 }
 
 impl AtomicGroup {
+    /// Remaining memory capacity at the current minimum degree (bytes).
     pub fn headroom(&self) -> f64 {
         self.capacity_bytes - self.mem_bytes
     }
 
+    /// Remaining capacity in quadratic-work units (BFD's balance key).
     pub fn work_headroom(&self) -> f64 {
         self.work_cap - self.agg.quad
     }

@@ -11,8 +11,10 @@
 //! [`ParallelState::prepare_schedule`] — one step ahead of execution, so
 //! pool-miss creation cost is paid on this CPU thread while the
 //! accelerator is busy with the previous batch, exactly the paper's
-//! CPU-side overlap. [`ScheduledBatch`] reports what that prepare cost
-//! and the pool's cumulative hit statistics.
+//! CPU-side overlap. [`ScheduledBatch`] reports that prepare cost as the
+//! FULLY-SERIAL `reconfig_serial_s` (the consumer charges only the
+//! non-hidden remainder after overlap), plus the schedule's hint-replay
+//! rate and the pool's cumulative statistics.
 //!
 //! Built on std threads + mpsc channels (tokio is unavailable offline;
 //! a single scheduling thread matches the paper's design anyway). Solver
@@ -40,14 +42,24 @@ struct Job {
 
 /// A finished schedule with latency + group-preparation accounting.
 pub struct ScheduledBatch {
+    /// Step id this schedule belongs to (matches the submit order).
     pub step: u64,
+    /// The placed schedule, groups already prewarmed through the pool.
     pub schedule: Schedule,
     /// End-to-end scheduling-phase latency (queueing + packing + DP +
     /// placement + group prewarm) — Tables 1–2 "Schedule Time".
     pub schedule_latency_s: f64,
-    /// Simulated group-creation seconds paid preparing this schedule's
-    /// pool misses (incurred one step ahead, hidden behind compute).
-    pub reconfig_time_s: f64,
+    /// FULLY-SERIAL simulated group-creation seconds paid preparing this
+    /// schedule's pool misses. The prepare runs one step ahead on this
+    /// CPU thread, so the consumer charges only the non-hidden remainder
+    /// `max(0, reconfig_serial_s − prev_step_compute)` — see the trainer's
+    /// `reconfig_charged_s` column; this field retains the serial number
+    /// for the overlap ablation.
+    pub reconfig_serial_s: f64,
+    /// Hint-quality telemetry: fraction of this schedule's groups that
+    /// replayed the previous step's rank blocks
+    /// ([`Schedule::replay_rate`]).
+    pub replay_rate: f64,
     /// Cumulative pool statistics after preparing this batch.
     pub pool: PoolStats,
 }
@@ -78,14 +90,16 @@ impl SchedulePipeline {
                     // overlap). A schedule the scheduler just validated
                     // cannot fail placement checks; a failure here would
                     // be a scheduler bug, so surface it loudly.
-                    let reconfig_time_s = mpu
+                    let reconfig_serial_s = mpu
                         .prepare_schedule(&schedule)
                         .expect("scheduler emitted an invalid placement");
+                    let replay_rate = schedule.replay_rate();
                     let out = ScheduledBatch {
                         step: job.step,
                         schedule,
                         schedule_latency_s: job.submitted_at.elapsed().as_secs_f64(),
-                        reconfig_time_s,
+                        reconfig_serial_s,
+                        replay_rate,
                         pool: mpu.pool_stats(),
                     };
                     if done_tx.send(out).is_err() {
@@ -224,13 +238,18 @@ mod tests {
             assert_eq!(done.step, i);
             if i == 0 {
                 assert!(
-                    done.reconfig_time_s > 0.0,
+                    done.reconfig_serial_s > 0.0,
                     "first step must create its groups"
                 );
             } else {
                 assert_eq!(
-                    done.reconfig_time_s, 0.0,
+                    done.reconfig_serial_s, 0.0,
                     "step {i} re-created groups for an identical batch"
+                );
+                assert!(
+                    done.replay_rate > 0.99,
+                    "step {i}: identical batch must fully replay, got {}",
+                    done.replay_rate
                 );
             }
             last = Some(done);

@@ -38,6 +38,7 @@ pub struct PlannedGroup {
 /// (A, C)) — degrees only, not yet bound to ranks.
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct Plan {
+    /// The planned CP groups (degrees + sequence assignments).
     pub groups: Vec<PlannedGroup>,
     /// Estimated makespan = max over groups of est_time_s.
     pub est_makespan_s: f64,
@@ -95,9 +96,11 @@ impl Plan {
 /// the mesh assigned it and the placement-aware cost estimate.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PlacedGroup {
+    /// CP degree d_p (equals `ranks.len()`).
     pub degree: usize,
     /// Indices into the micro-batch's sequence list.
     pub seq_idxs: Vec<usize>,
+    /// Cached workload aggregates of the assigned sequences.
     pub agg: WorkloadAgg,
     /// Placement-aware estimate: `T(agg, degree, ring_bw)` of the ACTUAL
     /// rank set (empty groups — a static mesh's idle slots — cost 0).
@@ -119,6 +122,7 @@ impl PlacedGroup {
 /// pipeline prewarm) consumes directly — no re-allocation downstream.
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct PlacedPlan {
+    /// The wave's placed groups, in plan order.
     pub groups: Vec<PlacedGroup>,
     /// Placement-aware makespan = max over groups of est_time_s.
     pub est_makespan_s: f64,
@@ -126,13 +130,21 @@ pub struct PlacedPlan {
     /// heuristic) — retained so candidate-search behavior stays
     /// comparable against the reference solver.
     pub search_makespan_s: f64,
+    /// Hint-quality telemetry: how many of this wave's groups were placed
+    /// by replaying the previous step's rank block (see
+    /// [`crate::parallel::mesh::Placement`]). Replayed groups key into
+    /// already-pooled communication groups, so a low replay rate flags
+    /// placement churn as distinct from workload drift.
+    pub replayed_groups: usize,
 }
 
 impl PlacedPlan {
+    /// Total ranks consumed by the wave (must satisfy Eq. 6: ≤ N).
     pub fn total_degree(&self) -> usize {
         self.groups.iter().map(|g| g.degree).sum()
     }
 
+    /// Degrees in descending order (Table 4 presentation).
     pub fn degree_multiset(&self) -> Vec<usize> {
         let mut d: Vec<usize> = self.groups.iter().map(|g| g.degree).collect();
         d.sort_unstable_by(|a, b| b.cmp(a));
@@ -188,10 +200,10 @@ pub fn place_plan(
     cost: &CostModel,
 ) -> PlacedPlan {
     let degrees: Vec<usize> = plan.groups.iter().map(|g| g.degree).collect();
-    let rank_sets = mesh.place(&degrees, hint);
+    let placement = mesh.place_tracked(&degrees, hint);
     let mut groups = Vec::with_capacity(plan.groups.len());
     let mut makespan = 0.0f64;
-    for (g, ranks) in plan.groups.iter().zip(rank_sets) {
+    for (g, ranks) in plan.groups.iter().zip(placement.blocks) {
         let ring_bw = mesh.ring_bandwidth(&ranks);
         let est = if g.seq_idxs.is_empty() {
             0.0
@@ -212,6 +224,7 @@ pub fn place_plan(
         groups,
         est_makespan_s: makespan,
         search_makespan_s: plan.est_makespan_s,
+        replayed_groups: placement.replayed,
     }
 }
 
@@ -346,24 +359,28 @@ mod tests {
             groups: vec![g(2, vec![0, 1]), g(2, vec![1, 2])],
             est_makespan_s: 0.0,
             search_makespan_s: 0.0,
+            replayed_groups: 0,
         };
         assert!(overlap.validate_placement(8).is_err());
         let arity = PlacedPlan {
             groups: vec![g(3, vec![0, 1])],
             est_makespan_s: 0.0,
             search_makespan_s: 0.0,
+            replayed_groups: 0,
         };
         assert!(arity.validate_placement(8).is_err());
         let range = PlacedPlan {
             groups: vec![g(1, vec![9])],
             est_makespan_s: 0.0,
             search_makespan_s: 0.0,
+            replayed_groups: 0,
         };
         assert!(range.validate_placement(8).is_err());
         let ok = PlacedPlan {
             groups: vec![g(2, vec![0, 1]), g(1, vec![7])],
             est_makespan_s: 0.0,
             search_makespan_s: 0.0,
+            replayed_groups: 0,
         };
         ok.validate_placement(8).unwrap();
     }

@@ -201,6 +201,7 @@ impl CostCache {
         self.map.borrow().len()
     }
 
+    /// True when no entries are resident.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

@@ -7,10 +7,15 @@
 /// Adam hyper-parameters.
 #[derive(Debug, Clone, Copy)]
 pub struct AdamConfig {
+    /// Learning rate.
     pub lr: f32,
+    /// First-moment decay.
     pub beta1: f32,
+    /// Second-moment decay.
     pub beta2: f32,
+    /// Denominator epsilon.
     pub eps: f32,
+    /// Decoupled weight decay (AdamW-style; 0 = off).
     pub weight_decay: f32,
     /// Global-norm gradient clipping (0 = off).
     pub grad_clip: f32,
@@ -32,6 +37,7 @@ impl Default for AdamConfig {
 /// Optimizer state (first/second moments + step count).
 #[derive(Debug, Clone)]
 pub struct Adam {
+    /// Hyper-parameters the optimizer was built with.
     pub cfg: AdamConfig,
     m: Vec<f32>,
     v: Vec<f32>,
@@ -39,6 +45,7 @@ pub struct Adam {
 }
 
 impl Adam {
+    /// Fresh optimizer state over `param_count` parameters.
     pub fn new(param_count: usize, cfg: AdamConfig) -> Self {
         Adam {
             cfg,
@@ -48,6 +55,7 @@ impl Adam {
         }
     }
 
+    /// Optimizer steps applied so far.
     pub fn steps_taken(&self) -> u64 {
         self.t
     }

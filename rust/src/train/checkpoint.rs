@@ -15,9 +15,13 @@ const MAGIC: &[u8; 8] = b"DHPCKPT1";
 /// A complete resumable training state.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Checkpoint {
+    /// Optimizer step the state was captured at.
     pub step: u64,
+    /// Flat parameter vector.
     pub params: Vec<f32>,
+    /// Adam first moments.
     pub adam_m: Vec<f32>,
+    /// Adam second moments.
     pub adam_v: Vec<f32>,
 }
 
@@ -63,6 +67,7 @@ impl Checkpoint {
         h
     }
 
+    /// Write the versioned binary container (with checksum) to `path`.
     pub fn save(&self, path: &Path) -> Result<()> {
         let n = self.params.len();
         anyhow::ensure!(
@@ -86,6 +91,7 @@ impl Checkpoint {
         Ok(())
     }
 
+    /// Read and integrity-check a checkpoint from `path`.
     pub fn load(path: &Path) -> Result<Checkpoint> {
         let mut f = std::io::BufReader::new(
             std::fs::File::open(path)

@@ -15,15 +15,22 @@ use super::stats;
 /// Result of timing one benchmark case.
 #[derive(Debug, Clone)]
 pub struct Timing {
+    /// Case name.
     pub name: String,
+    /// Measured repetitions.
     pub reps: usize,
+    /// Mean seconds per repetition.
     pub mean_s: f64,
+    /// Median seconds per repetition.
     pub p50_s: f64,
+    /// Fastest repetition (seconds).
     pub min_s: f64,
+    /// Standard deviation (seconds).
     pub std_s: f64,
 }
 
 impl Timing {
+    /// One-line human-readable summary (milliseconds).
     pub fn summary(&self) -> String {
         format!(
             "{:<44} {:>10.3} ms/iter (p50 {:>10.3}, min {:>10.3}, sd {:>8.3}, n={})",
@@ -72,11 +79,13 @@ pub fn time<F: FnMut()>(name: &str, warmup: usize, reps: usize, mut f: F) -> Tim
 /// Collects timings for a bench binary and prints the final block.
 #[derive(Debug, Default)]
 pub struct BenchReport {
+    /// Report title (the bench binary's name).
     pub title: String,
     timings: Vec<Timing>,
 }
 
 impl BenchReport {
+    /// Empty report with the given title.
     pub fn new(title: &str) -> Self {
         BenchReport {
             title: title.to_string(),
@@ -84,6 +93,7 @@ impl BenchReport {
         }
     }
 
+    /// Time one case and collect + print its summary line.
     pub fn bench<F: FnMut()>(&mut self, name: &str, warmup: usize, reps: usize, f: F) {
         let t = time(name, warmup, reps, f);
         println!("  {}", t.summary());
@@ -114,6 +124,7 @@ impl BenchReport {
         std::fs::write(path, doc.to_string_pretty() + "\n")
     }
 
+    /// Print the closing case-count line.
     pub fn finish(self) {
         println!(
             "[bench] {}: {} cases complete",

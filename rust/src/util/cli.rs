@@ -62,18 +62,22 @@ impl Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Raw value of `--key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.options.get(key).map(|s| s.as_str())
     }
 
+    /// String value of `--key`, or `default`.
     pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
 
+    /// Is the boolean switch `--key` set (true/1/yes)?
     pub fn flag(&self, key: &str) -> bool {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
 
+    /// `usize` value of `--key`, or `default` (error on non-integer).
     pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
         match self.get(key) {
             None => Ok(default),
@@ -83,6 +87,7 @@ impl Args {
         }
     }
 
+    /// `u64` value of `--key`, or `default` (error on non-integer).
     pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
         match self.get(key) {
             None => Ok(default),
@@ -92,6 +97,7 @@ impl Args {
         }
     }
 
+    /// `f64` value of `--key`, or `default` (error on non-number).
     pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
         match self.get(key) {
             None => Ok(default),

@@ -13,15 +13,22 @@ use anyhow::{anyhow, bail, Result};
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (f64 storage, integer accessors).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (stable key order via BTreeMap).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document (trailing characters rejected).
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser {
             bytes: text.as_bytes(),
@@ -36,6 +43,7 @@ impl Json {
         Ok(v)
     }
 
+    /// Object accessor (errors on any other variant).
     pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Ok(m),
@@ -43,6 +51,7 @@ impl Json {
         }
     }
 
+    /// Array accessor (errors on any other variant).
     pub fn as_arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(v) => Ok(v),
@@ -50,6 +59,7 @@ impl Json {
         }
     }
 
+    /// String accessor (errors on any other variant).
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -57,6 +67,7 @@ impl Json {
         }
     }
 
+    /// Number accessor (errors on any other variant).
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(x) => Ok(*x),
@@ -64,6 +75,7 @@ impl Json {
         }
     }
 
+    /// Non-negative integer accessor (errors on fractional values).
     pub fn as_usize(&self) -> Result<usize> {
         let x = self.as_f64()?;
         if x < 0.0 || x.fract() != 0.0 {
@@ -72,6 +84,7 @@ impl Json {
         Ok(x as usize)
     }
 
+    /// Boolean accessor (errors on any other variant).
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Json::Bool(b) => Ok(*b),
@@ -86,6 +99,7 @@ impl Json {
             .ok_or_else(|| anyhow!("missing key {key:?}"))
     }
 
+    /// Optional object field access (None on missing key/non-object).
     pub fn get_opt(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -176,14 +190,17 @@ pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// Number literal.
 pub fn num(x: f64) -> Json {
     Json::Num(x)
 }
 
+/// String literal.
 pub fn s(text: &str) -> Json {
     Json::Str(text.to_string())
 }
 
+/// Array literal.
 pub fn arr(items: Vec<Json>) -> Json {
     Json::Arr(items)
 }

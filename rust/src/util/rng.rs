@@ -12,6 +12,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Generator seeded deterministically from `seed`.
     pub fn new(seed: u64) -> Self {
         Rng {
             state: seed.wrapping_add(0x9E3779B97F4A7C15),
@@ -23,6 +24,7 @@ impl Rng {
         Rng::new(self.next_u64())
     }
 
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
         let mut z = self.state;
@@ -49,6 +51,7 @@ impl Rng {
         lo + (self.next_u64() % (hi - lo))
     }
 
+    /// Uniform integer in [lo, hi) (hi exclusive, lo < hi).
     pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
         self.range_u64(lo as u64, hi as u64) as usize
     }

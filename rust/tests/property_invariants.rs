@@ -279,6 +279,68 @@ fn group_pool_is_idempotent_under_any_acquire_sequence() {
 }
 
 #[test]
+fn pool_never_evicts_while_capacity_remains() {
+    // ISSUE-3 acceptance property: under ANY acquire sequence against a
+    // group-count cap, eviction happens only when the pool is genuinely
+    // full of distinct groups — never while unbounded capacity remains —
+    // and the occupancy respects the cap throughout. Conservation: every
+    // miss is either a first-time creation or a re-creation of a
+    // previously evicted group.
+    use dhp::parallel::PoolCapacity;
+    forall(150, 0xA11B, |rng| {
+        let cap = rng.range_usize(1, 10);
+        let mut pool = GroupPool::with_capacity(PoolCapacity::MaxGroups(cap));
+        let mut unique: std::collections::HashSet<Vec<usize>> = Default::default();
+        for _ in 0..rng.range_usize(1, 60) {
+            let len = rng.range_usize(1, 6);
+            let mut ranks: Vec<usize> =
+                (0..len).map(|_| rng.range_usize(0, 12)).collect();
+            pool.acquire(GroupKind::ContextParallel, ranks.clone());
+            ranks.sort_unstable();
+            ranks.dedup();
+            unique.insert(ranks);
+            let s = pool.stats();
+            if unique.len() <= cap && s.evictions != 0 {
+                return Err(format!(
+                    "evicted {} groups while only {} of {cap} slots were ever \
+                     needed",
+                    s.evictions,
+                    unique.len()
+                ));
+            }
+            if pool.len() > cap {
+                return Err(format!("occupancy {} exceeds cap {cap}", pool.len()));
+            }
+            if s.misses != unique.len() as u64 + s.evicted_recreations {
+                return Err(format!(
+                    "miss conservation broken: {} misses, {} unique, {} \
+                     re-creations",
+                    s.misses,
+                    unique.len(),
+                    s.evicted_recreations
+                ));
+            }
+        }
+        Ok(())
+    });
+    // And the unbounded pool never evicts at all, under the same traffic.
+    forall(50, 0xA11C, |rng| {
+        let mut pool = GroupPool::new();
+        for _ in 0..rng.range_usize(1, 60) {
+            let len = rng.range_usize(1, 6);
+            let ranks: Vec<usize> =
+                (0..len).map(|_| rng.range_usize(0, 12)).collect();
+            pool.acquire(GroupKind::ContextParallel, ranks);
+        }
+        let s = pool.stats();
+        if s.evictions != 0 || s.evicted_recreations != 0 {
+            return Err(format!("unbounded pool evicted: {s:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn micro_batch_planner_partitions_any_stream() {
     forall(100, 0xA113, |rng| {
         let preset = rng.choose(&PRESETS).clone();

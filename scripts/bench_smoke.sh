@@ -26,6 +26,12 @@ if [[ "${1:-}" == "--compare" ]]; then
     [[ -n "${2:-}" ]] && BASELINE="$2"
 fi
 
+# Doc gate: the crate carries #![warn(missing_docs)] and a documented
+# public API (ISSUE-3); rustdoc warnings (missing docs on new public
+# items, broken intra-doc links) are doc rot and fail the smoke gate.
+echo "=== cargo doc (deny warnings) ==="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
 cargo bench --bench solver_micro -- --quick
 
 echo
