@@ -34,6 +34,10 @@ fn main() -> anyhow::Result<()> {
         seed: args.u64_or("seed", 0xE2E)?,
         log_path: Some(PathBuf::from(args.str_or("log", "e2e_loss.csv"))),
         sim_npus: args.usize_or("sim-npus", 8)?,
+        pool_capacity: match args.usize_or("pool-cap", 0)? {
+            0 => dhp::parallel::PoolCapacity::Unbounded,
+            n => dhp::parallel::PoolCapacity::MaxGroups(n),
+        },
     };
     let report = run(&cfg)?;
 

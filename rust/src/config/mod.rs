@@ -28,6 +28,12 @@ pub struct ClusterConfig {
     pub tp: usize,
     /// Static pipeline-parallel degree (never reconfigured at runtime).
     pub pp: usize,
+    /// Modeled per-member-rank communicator buffer footprint in bytes
+    /// (`HCCL_BUFFSIZE`-class; default 64 MiB). Threaded to every
+    /// budgeted [`crate::parallel::GroupPool`] so
+    /// [`crate::parallel::PoolCapacity::BufferBytes`] budgets count the
+    /// cluster's actual buffer size, not a hard-coded constant.
+    pub group_buffer_bytes: u64,
 }
 
 impl Default for ClusterConfig {
@@ -40,6 +46,8 @@ impl Default for ClusterConfig {
             inter_bw: 12.5e9,
             tp: 1,
             pp: 1,
+            group_buffer_bytes:
+                crate::parallel::group::GROUP_BUFFER_BYTES_PER_RANK,
         }
     }
 }
@@ -91,6 +99,12 @@ impl ClusterConfig {
         }
         if self.intra_bw <= 0.0 || self.inter_bw <= 0.0 {
             bail!("bandwidths must be positive");
+        }
+        if self.group_buffer_bytes == 0 {
+            bail!(
+                "group_buffer_bytes must be positive (a zero footprint \
+                 makes every BufferBytes pool budget vacuous)"
+            );
         }
         Ok(())
     }
@@ -214,6 +228,10 @@ impl TrainConfig {
             if let Some(v) = c.get("pp") {
                 cfg.cluster.pp = v.as_int()? as usize;
             }
+            if let Some(v) = c.get("group_buffer_mb") {
+                cfg.cluster.group_buffer_bytes =
+                    (v.as_float()? * (1u64 << 20) as f64) as u64;
+            }
         }
         cfg.validate()?;
         Ok(cfg)
@@ -289,5 +307,24 @@ mod tests {
     #[test]
     fn unknown_model_is_error() {
         assert!(TrainConfig::from_toml("[train]\nmodel = \"GPT-9\"\n").is_err());
+    }
+
+    #[test]
+    fn group_buffer_bytes_defaults_and_parses() {
+        let c = ClusterConfig::default();
+        assert_eq!(
+            c.group_buffer_bytes,
+            crate::parallel::group::GROUP_BUFFER_BYTES_PER_RANK
+        );
+        let cfg = TrainConfig::from_toml(
+            "[cluster]\ngroup_buffer_mb = 16\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.group_buffer_bytes, 16 << 20);
+        let zero = ClusterConfig {
+            group_buffer_bytes: 0,
+            ..Default::default()
+        };
+        assert!(zero.validate().is_err());
     }
 }

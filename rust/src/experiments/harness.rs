@@ -280,7 +280,8 @@ pub fn run_policy(ctx: &ExpContext, policy: &dyn SchedulePolicy) -> PolicyResult
     let mut sampler = ctx.sampler();
     let total_steps = ctx.warmup_steps + ctx.measure_steps;
 
-    let mut pool = crate::parallel::GroupPool::with_capacity(ctx.pool_capacity);
+    let mut pool = crate::parallel::GroupPool::with_capacity(ctx.pool_capacity)
+        .with_buffer_bytes_per_rank(ctx.cluster.group_buffer_bytes);
     let mut iter_times = Vec::new();
     let mut tokens_list = Vec::new();
     let mut sched_times = Vec::new();

@@ -44,8 +44,12 @@ impl CommGroup {
         self.ranks.len()
     }
 
-    /// Modeled device-buffer bytes this group pins while established
-    /// (see [`group_buffer_bytes`]).
+    /// Modeled device-buffer bytes this group pins while established,
+    /// under the DEFAULT per-rank footprint (see [`group_buffer_bytes`]).
+    /// The pool's byte accounting uses its own configured footprint
+    /// ([`super::pool::GroupPool::buffer_bytes_per_rank`], threaded from
+    /// [`crate::config::ClusterConfig::group_buffer_bytes`]), which may
+    /// differ from this default.
     pub fn buffer_bytes(&self) -> u64 {
         group_buffer_bytes(self.degree())
     }
@@ -70,15 +74,21 @@ impl CommGroup {
 /// rendezvous). Charged once per unique group; the pool amortizes it.
 pub const GROUP_CREATE_COST_S: f64 = 0.030;
 
-/// Modeled per-member device-buffer footprint of an established group, in
-/// bytes. Real HCCL communicators pin a per-device staging buffer
-/// (`HCCL_BUFFSIZE`-style, tens of MB) for as long as the group lives —
-/// this is the memory the paper's "buffer overhead" remark refers to, and
-/// the unit the [`super::pool::PoolCapacity::BufferBytes`] budget counts.
+/// DEFAULT modeled per-member device-buffer footprint of an established
+/// group, in bytes. Real HCCL communicators pin a per-device staging
+/// buffer (`HCCL_BUFFSIZE`-style, tens of MB) for as long as the group
+/// lives — this is the memory the paper's "buffer overhead" remark refers
+/// to, and the unit the [`super::pool::PoolCapacity::BufferBytes`] budget
+/// counts. It is a default, not a law of nature: clusters with a
+/// different `HCCL_BUFFSIZE` override it per run via
+/// [`crate::config::ClusterConfig::group_buffer_bytes`], which is
+/// threaded to every budgeted pool
+/// ([`super::pool::GroupPool::with_buffer_bytes_per_rank`]).
 pub const GROUP_BUFFER_BYTES_PER_RANK: u64 = 64 * 1024 * 1024;
 
 /// Modeled device-buffer bytes a group of `degree` members pins while it
-/// stays established: every member rank holds one staging buffer.
+/// stays established, under the default per-rank footprint: every member
+/// rank holds one staging buffer.
 pub const fn group_buffer_bytes(degree: usize) -> u64 {
     degree as u64 * GROUP_BUFFER_BYTES_PER_RANK
 }

@@ -46,6 +46,30 @@ impl WaveHint {
     fn candidates(&self, degree: usize) -> Option<&[Vec<RankId>]> {
         self.blocks.get(&degree).map(|v| v.as_slice())
     }
+
+    /// Degrees for which this hint holds at least one intra-node block
+    /// whose ranks are all still free on `mesh`, with the count of such
+    /// blocks per degree. These are the blocks a replay-preferring
+    /// placement can land on at full intra bandwidth — the fabric
+    /// oracle's "hint-replayable" census
+    /// ([`crate::scheduler::FabricModel`]).
+    pub fn free_intra_degrees(&self, mesh: &DeviceMesh) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for (&d, blocks) in &self.blocks {
+            let count = blocks
+                .iter()
+                .filter(|b| {
+                    b.iter()
+                        .all(|&r| r < mesh.replicas && mesh.is_rank_free(r))
+                        && mesh.is_intra_node(b)
+                })
+                .count();
+            if count > 0 {
+                out.push((d, count));
+            }
+        }
+        out
+    }
 }
 
 /// Placement memory across scheduling steps: one [`WaveHint`] per wave
@@ -86,6 +110,12 @@ pub struct Placement {
 }
 
 /// Physical placement of replica ranks.
+///
+/// A mesh also tracks *occupancy*: replica slots pre-claimed by
+/// concurrent jobs (or held back by an external resource manager) are
+/// marked via [`DeviceMesh::occupy`] and excluded from every placement
+/// and from the fabric oracle's free-slot census — the fragmented-mesh
+/// regime where the uniform-bandwidth heuristic and reality diverge.
 #[derive(Debug, Clone)]
 pub struct DeviceMesh {
     /// Total model replicas (one replica = one full TP×PP grid).
@@ -96,16 +126,20 @@ pub struct DeviceMesh {
     pub intra_bw: f64,
     /// Inter-node fabric bandwidth (IB), bytes/s.
     pub inter_bw: f64,
+    /// Per-rank occupancy: `true` marks a slot unavailable to this job.
+    occupied: Vec<bool>,
 }
 
 impl DeviceMesh {
     /// Mesh over the cluster's replica topology.
     pub fn new(cluster: &ClusterConfig) -> Self {
+        let replicas = cluster.replicas();
         DeviceMesh {
-            replicas: cluster.replicas(),
+            replicas,
             replicas_per_node: cluster.replicas_per_node().max(1),
             intra_bw: cluster.intra_bw,
             inter_bw: cluster.inter_bw,
+            occupied: vec![false; replicas],
         }
     }
 
@@ -118,7 +152,68 @@ impl DeviceMesh {
             replicas_per_node: replicas.max(1),
             intra_bw: bw,
             inter_bw: bw,
+            occupied: vec![false; replicas],
         }
+    }
+
+    /// Mark `ranks` as held by someone else (a concurrent job, an
+    /// external reservation): they become invisible to every subsequent
+    /// placement and to the fabric oracle's free-slot census. Panics on
+    /// an out-of-range or already-occupied rank — double-claiming a slot
+    /// is an accounting bug, not a state to paper over.
+    pub fn occupy(&mut self, ranks: &[RankId]) {
+        for &r in ranks {
+            assert!(r < self.replicas, "occupy: rank {r} out of range");
+            assert!(!self.occupied[r], "occupy: rank {r} already occupied");
+            self.occupied[r] = true;
+        }
+    }
+
+    /// Return previously [`DeviceMesh::occupy`]-ed ranks to the free
+    /// pool. Panics if a rank is not currently occupied.
+    pub fn release(&mut self, ranks: &[RankId]) {
+        for &r in ranks {
+            assert!(r < self.replicas, "release: rank {r} out of range");
+            assert!(self.occupied[r], "release: rank {r} is not occupied");
+            self.occupied[r] = false;
+        }
+    }
+
+    /// Builder form of [`DeviceMesh::occupy`] for test/experiment setup.
+    pub fn with_occupied(mut self, ranks: &[RankId]) -> Self {
+        self.occupy(ranks);
+        self
+    }
+
+    /// Is `rank` free for this job's placements? (Out-of-range ranks are
+    /// not free.)
+    pub fn is_rank_free(&self, rank: RankId) -> bool {
+        rank < self.replicas && !self.occupied[rank]
+    }
+
+    /// Replica slots currently available to this job.
+    pub fn free_replicas(&self) -> usize {
+        self.occupied.iter().filter(|&&o| !o).count()
+    }
+
+    /// Replica slots currently held by others.
+    pub fn occupied_replicas(&self) -> usize {
+        self.replicas - self.free_replicas()
+    }
+
+    /// Free-slot count per physical node (the fabric oracle's census: a
+    /// degree can ride the intra-node fabric iff some node's entry here
+    /// is at least that large).
+    pub fn free_per_node(&self) -> Vec<usize> {
+        let rpn = self.replicas_per_node;
+        let n_nodes = self.replicas.div_ceil(rpn);
+        (0..n_nodes)
+            .map(|node| {
+                (node * rpn..((node + 1) * rpn).min(self.replicas))
+                    .filter(|&r| !self.occupied[r])
+                    .count()
+            })
+            .collect()
     }
 
     /// Node hosting a replica rank.
@@ -177,21 +272,26 @@ impl DeviceMesh {
         hint: Option<&WaveHint>,
     ) -> Placement {
         let total: usize = degrees.iter().sum();
+        let available = self.free_replicas();
         assert!(
-            total <= self.replicas,
-            "allocate: need {total} ranks, have {}",
+            total <= available,
+            "allocate: need {total} ranks, have {available} free of {}",
             self.replicas
         );
         let rpn = self.replicas_per_node;
         let n_nodes = self.replicas.div_ceil(rpn);
-        // Free slots per node (kept sorted), plus a flat freeness map so
-        // hinted blocks can be membership-tested in O(d).
+        // Free slots per node (kept sorted, pre-occupied ranks excluded),
+        // plus a flat freeness map so hinted blocks can be
+        // membership-tested in O(d).
         let mut free: Vec<Vec<RankId>> = (0..n_nodes)
             .map(|node| {
-                (node * rpn..((node + 1) * rpn).min(self.replicas)).collect()
+                (node * rpn..((node + 1) * rpn).min(self.replicas))
+                    .filter(|&r| !self.occupied[r])
+                    .collect()
             })
             .collect();
-        let mut is_free = vec![true; self.replicas];
+        let mut is_free: Vec<bool> =
+            (0..self.replicas).map(|r| !self.occupied[r]).collect();
         // Hinted blocks are consumed at most once per wave placement.
         let mut hint_used: HashMap<usize, Vec<bool>> = HashMap::new();
         // Place largest first (stable order for determinism).
@@ -413,6 +513,65 @@ mod tests {
         assert_eq!(out[0], (0..8).collect::<Vec<_>>());
         assert_eq!(out[1].len(), 2);
         assert!(out[1].iter().all(|&r| r < 64));
+    }
+
+    #[test]
+    fn occupancy_excludes_ranks_from_placement() {
+        let mut m = mesh();
+        m.occupy(&[0, 1, 2, 3, 8, 9]);
+        assert_eq!(m.free_replicas(), 58);
+        assert_eq!(m.occupied_replicas(), 6);
+        assert!(!m.is_rank_free(0));
+        assert!(m.is_rank_free(4));
+        assert_eq!(m.free_per_node()[0], 4);
+        assert_eq!(m.free_per_node()[1], 6);
+        let groups = m.allocate(&[8, 6, 4, 1, 1]);
+        for g in &groups {
+            for &r in g {
+                assert!(m.is_rank_free(r), "rank {r} placed while occupied");
+            }
+        }
+        // Release restores the full mesh.
+        m.release(&[0, 1, 2, 3, 8, 9]);
+        assert_eq!(m.free_replicas(), 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "allocate")]
+    fn occupancy_shrinks_the_rank_budget() {
+        // 60 ranks requested, but only 56 are free.
+        mesh().with_occupied(&[0, 1, 2, 3, 4, 5, 6, 7]).allocate(&[60]);
+    }
+
+    #[test]
+    #[should_panic(expected = "already occupied")]
+    fn double_occupy_panics() {
+        let mut m = mesh();
+        m.occupy(&[5]);
+        m.occupy(&[5]);
+    }
+
+    #[test]
+    fn occupied_hint_blocks_are_not_replayed() {
+        let mut m = mesh();
+        let first = m.allocate(&[4usize, 4]);
+        let mut hint = WaveHint::default();
+        for block in &first {
+            hint.remember(block);
+        }
+        assert_eq!(hint.free_intra_degrees(&m), vec![(4, 2)]);
+        // Occupy one rank of the first block: that block must neither be
+        // replayed nor counted replayable; placement stays disjoint from
+        // the occupied rank.
+        m.occupy(&[first[0][0]]);
+        assert_eq!(hint.free_intra_degrees(&m), vec![(4, 1)]);
+        let placement = m.place_tracked(&[4usize, 4], Some(&hint));
+        assert_eq!(placement.replayed, 1, "only the free block replays");
+        for block in &placement.blocks {
+            for &r in block {
+                assert!(m.is_rank_free(r));
+            }
+        }
     }
 
     #[test]

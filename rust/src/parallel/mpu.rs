@@ -45,6 +45,14 @@ impl ParallelState {
         self
     }
 
+    /// Model the cluster's per-member-rank communicator buffer footprint
+    /// (threaded from [`crate::config::ClusterConfig::group_buffer_bytes`];
+    /// defaults to the 64 MiB constant).
+    pub fn with_group_buffer_bytes(mut self, bytes: u64) -> Self {
+        self.pool.set_buffer_bytes_per_rank(bytes);
+        self
+    }
+
     /// Reconfigure the CP layout from a PLACED plan: the scheduler
     /// already bound ranks, so this validates the placement invariants
     /// and acquires pooled groups directly — no mesh re-allocation
@@ -65,12 +73,26 @@ impl ParallelState {
     /// of execution — the paper's CPU-side overlap: group creation for
     /// the next batch happens while the accelerator is busy with the
     /// current one. Returns the simulated creation seconds paid for pool
-    /// misses during this prepare. `current_cp` is left on the
-    /// schedule's last wave.
+    /// misses during this prepare.
+    ///
+    /// Prewarm order is eviction-aware: on an unbounded pool waves warm
+    /// in execution order (`current_cp` is left on the last wave — the
+    /// historical behavior); on a capacity-capped pool they warm in
+    /// REVERSE wave order, so the groups the executor needs soonest are
+    /// the most recently touched — the warmest under LRU — and a cap
+    /// below the schedule's working set evicts the last wave's groups
+    /// (needed latest) instead of the first's (`current_cp` then ends on
+    /// wave 0, the wave about to execute).
     pub fn prepare_schedule(&mut self, schedule: &Schedule) -> Result<f64> {
         let before = self.pool.stats().create_time_s;
-        for wave in &schedule.waves {
-            self.reconfigure_cp_placed(wave)?;
+        if matches!(self.pool.capacity(), PoolCapacity::Unbounded) {
+            for wave in &schedule.waves {
+                self.reconfigure_cp_placed(wave)?;
+            }
+        } else {
+            for wave in schedule.waves.iter().rev() {
+                self.reconfigure_cp_placed(wave)?;
+            }
         }
         Ok(self.pool.stats().create_time_s - before)
     }
@@ -83,9 +105,14 @@ impl ParallelState {
     /// Validates the paper's Cond. (6): Σ d_p ≤ N.
     pub fn reconfigure_cp(&mut self, degrees: &[usize]) -> Result<&[CommGroup]> {
         let total: usize = degrees.iter().sum();
-        if total > self.mesh.replicas {
+        // Validate against the FREE budget: on a fragmented mesh the
+        // allocator's own assert would otherwise turn this Result API's
+        // error path into a panic.
+        let available = self.mesh.free_replicas();
+        if total > available {
             bail!(
-                "plan requests {total} ranks but cluster has {}",
+                "plan requests {total} ranks but only {available} of the \
+                 cluster's {} are free",
                 self.mesh.replicas
             );
         }
@@ -127,6 +154,12 @@ impl ParallelState {
     /// Traffic statistics of the underlying group pool.
     pub fn pool_stats(&self) -> PoolStats {
         self.pool.stats()
+    }
+
+    /// Read-only view of the underlying group pool (capacity, residency,
+    /// byte accounting — for telemetry and tests).
+    pub fn pool(&self) -> &GroupPool {
+        &self.pool
     }
 
     /// Number of groups currently established in the pool.
@@ -177,6 +210,25 @@ mod tests {
         let mut st = state();
         assert!(st.reconfigure_cp(&[10, 8]).is_err());
         assert!(st.reconfigure_cp(&[4, 0]).is_err());
+    }
+
+    #[test]
+    fn fragmented_mesh_over_subscription_errors_not_panics() {
+        // 16 replicas, 6 pre-occupied: a 12-rank plan fits the cluster
+        // total but not the free budget — the Result API must return Err
+        // (not trip the allocator's assert).
+        let cluster = ClusterConfig::default().with_npus(16);
+        let mesh = DeviceMesh::new(&cluster).with_occupied(&[0, 1, 2, 3, 4, 5]);
+        let mut st = ParallelState::new(mesh, 1, 1);
+        assert!(st.reconfigure_cp(&[8, 4]).is_err());
+        // A plan within the free budget still succeeds and avoids the
+        // occupied ranks.
+        let groups = st.reconfigure_cp(&[6, 4]).unwrap();
+        for g in groups {
+            for &r in &g.ranks {
+                assert!(r >= 6, "occupied rank {r} acquired");
+            }
+        }
     }
 
     #[test]
@@ -244,6 +296,45 @@ mod tests {
         let groups = st.reconfigure_cp_placed(&plan).unwrap();
         assert_eq!(groups.len(), 3);
         assert_eq!(st.pool_size(), 3, "wave must stay co-resident");
+    }
+
+    #[test]
+    fn capped_prepare_warms_first_wave_last() {
+        // Eviction-aware prewarm ordering: with a cap below the
+        // schedule's working set, the FIRST wave's groups (needed
+        // soonest) must be the LRU-warmest survivors; the last wave's
+        // groups are the ones sacrificed.
+        use crate::scheduler::Schedule;
+        let cluster = ClusterConfig::default().with_npus(16);
+        let mut st = ParallelState::new(DeviceMesh::new(&cluster), 1, 1)
+            .with_pool_capacity(crate::parallel::PoolCapacity::MaxGroups(2));
+        let schedule = Schedule {
+            waves: vec![
+                placed(&[(2, vec![0, 1]), (2, vec![2, 3])]),
+                placed(&[(2, vec![4, 5]), (2, vec![6, 7])]),
+            ],
+            ..Default::default()
+        };
+        let paid = st.prepare_schedule(&schedule).unwrap();
+        assert!(paid > 0.0, "cold pool must create groups");
+        assert_eq!(st.pool_size(), 2);
+        for ranks in [vec![0usize, 1], vec![2, 3]] {
+            assert!(
+                st.pool()
+                    .get(crate::parallel::GroupKind::ContextParallel, &ranks)
+                    .is_some(),
+                "first wave's group {ranks:?} was evicted by the prewarm"
+            );
+        }
+        // current_cp ends on the wave about to execute (wave 0).
+        assert_eq!(st.current_cp_groups()[0].ranks, vec![0, 1]);
+        // An unbounded pool keeps the historical execution-order warm:
+        // current_cp ends on the LAST wave.
+        let mut unbounded =
+            ParallelState::new(DeviceMesh::new(&cluster), 1, 1);
+        unbounded.prepare_schedule(&schedule).unwrap();
+        assert_eq!(unbounded.pool_size(), 4);
+        assert_eq!(unbounded.current_cp_groups()[0].ranks, vec![4, 5]);
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //!
 //! The seed pool grew without bound, which silently assumed that claim.
 //! Real HCCL communicators pin device buffer memory for as long as they
-//! live ([`group_buffer_bytes`]), so a production system must budget the
+//! live ([`super::group::group_buffer_bytes`]), so a production system must budget the
 //! pool: [`GroupPool`] therefore takes a [`PoolCapacity`] — a group-count
 //! cap or a modeled buffer-byte budget — and evicts least-recently-used
 //! groups when [`GroupPool::acquire`]/[`GroupPool::prewarm`] would exceed
@@ -40,9 +40,7 @@
 
 use std::collections::{HashMap, HashSet};
 
-use super::group::{
-    group_buffer_bytes, CommGroup, GroupKind, RankId, GROUP_CREATE_COST_S,
-};
+use super::group::{CommGroup, GroupKind, RankId, GROUP_CREATE_COST_S};
 
 /// Capacity budget of a [`GroupPool`] — how much communicator state the
 /// device can afford to keep established at once.
@@ -59,8 +57,9 @@ pub enum PoolCapacity {
     /// At most this many groups may stay established.
     MaxGroups(usize),
     /// Modeled device-buffer budget in bytes: the sum of
-    /// [`group_buffer_bytes`] over all established groups must stay at or
-    /// under this budget.
+    /// [`super::group::group_buffer_bytes`]-modeled bytes (at the pool's
+    /// configured per-rank footprint) over all established groups must
+    /// stay at or under this budget.
     BufferBytes(u64),
 }
 
@@ -126,7 +125,7 @@ struct Entry {
 /// bounded by a [`PoolCapacity`] with least-recently-used eviction.
 ///
 /// See the [module docs](self) for the acquire/evict lifecycle.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct GroupPool {
     groups: HashMap<(GroupKind, Vec<RankId>), Entry>,
     capacity: PoolCapacity,
@@ -135,6 +134,11 @@ pub struct GroupPool {
     clock: u64,
     /// Modeled buffer bytes currently pinned by established groups.
     buffer_bytes: u64,
+    /// Modeled per-member-rank communicator buffer footprint used by the
+    /// byte accounting (defaults to
+    /// [`super::group::GROUP_BUFFER_BYTES_PER_RANK`]; clusters override
+    /// it via [`crate::config::ClusterConfig::group_buffer_bytes`]).
+    bytes_per_rank: u64,
     /// Identity of every group ever evicted, so re-creations can be
     /// counted (stats metadata only — no buffers are modeled for it).
     evicted: HashSet<(GroupKind, Vec<RankId>)>,
@@ -142,6 +146,22 @@ pub struct GroupPool {
     /// [`GroupPool::acquire_wave`] call (a wave's groups are co-live on
     /// the device and must never evict each other). Empty outside it.
     pinned: HashSet<(GroupKind, Vec<RankId>)>,
+}
+
+impl Default for GroupPool {
+    fn default() -> Self {
+        GroupPool {
+            groups: HashMap::new(),
+            capacity: PoolCapacity::Unbounded,
+            stats: PoolStats::default(),
+            next_serial: 0,
+            clock: 0,
+            buffer_bytes: 0,
+            bytes_per_rank: super::group::GROUP_BUFFER_BYTES_PER_RANK,
+            evicted: HashSet::new(),
+            pinned: HashSet::new(),
+        }
+    }
 }
 
 impl GroupPool {
@@ -161,6 +181,39 @@ impl GroupPool {
     /// The configured capacity budget.
     pub fn capacity(&self) -> PoolCapacity {
         self.capacity
+    }
+
+    /// Override the modeled per-member-rank communicator buffer size the
+    /// byte accounting charges (builder form of
+    /// [`GroupPool::set_buffer_bytes_per_rank`]).
+    pub fn with_buffer_bytes_per_rank(mut self, bytes: u64) -> Self {
+        self.set_buffer_bytes_per_rank(bytes);
+        self
+    }
+
+    /// Re-model the per-member-rank buffer footprint: resident groups are
+    /// re-accounted under the new size and the capacity budget is
+    /// re-enforced immediately (a larger footprint can push a
+    /// [`PoolCapacity::BufferBytes`] pool over budget).
+    pub fn set_buffer_bytes_per_rank(&mut self, bytes: u64) {
+        self.bytes_per_rank = bytes;
+        self.buffer_bytes = self
+            .groups
+            .values()
+            .map(|e| e.group.degree() as u64 * bytes)
+            .sum();
+        self.enforce_capacity(None);
+    }
+
+    /// The modeled per-member-rank buffer footprint in effect.
+    pub fn buffer_bytes_per_rank(&self) -> u64 {
+        self.bytes_per_rank
+    }
+
+    /// Modeled buffer bytes a group of `degree` members pins under this
+    /// pool's per-rank footprint.
+    fn group_bytes(&self, degree: usize) -> u64 {
+        degree as u64 * self.bytes_per_rank
     }
 
     /// Re-budget the pool, immediately evicting LRU groups until the new
@@ -195,7 +248,7 @@ impl GroupPool {
                 ranks: key.1.clone(),
                 serial,
             };
-            self.buffer_bytes += group_buffer_bytes(group.degree());
+            self.buffer_bytes += self.group_bytes(group.degree());
             self.groups.insert(
                 key.clone(),
                 Entry {
@@ -276,7 +329,7 @@ impl GroupPool {
             match victim {
                 Some(key) => {
                     let entry = self.groups.remove(&key).unwrap();
-                    self.buffer_bytes -= entry.group.buffer_bytes();
+                    self.buffer_bytes -= self.group_bytes(entry.group.degree());
                     self.stats.evictions += 1;
                     self.evicted.insert(key);
                 }
@@ -323,7 +376,7 @@ impl GroupPool {
     }
 
     /// Modeled device-buffer bytes currently pinned by the established
-    /// groups (Σ [`group_buffer_bytes`] over the pool).
+    /// groups (degree × per-rank footprint, summed over the pool).
     pub fn buffer_bytes(&self) -> u64 {
         self.buffer_bytes
     }
@@ -484,6 +537,28 @@ mod tests {
         assert_eq!(pool.len(), 1);
         assert_eq!(pool.buffer_bytes(), budget);
         assert_eq!(pool.stats().evictions, 2);
+    }
+
+    #[test]
+    fn configurable_buffer_footprint_drives_byte_accounting() {
+        // A cluster-configured per-rank footprint replaces the 64 MB
+        // constant in every byte computation: occupancy accounting AND
+        // BufferBytes budget enforcement.
+        let per_rank = 8 * 1024 * 1024u64; // 8 MB ranks
+        let mut pool = GroupPool::with_capacity(PoolCapacity::BufferBytes(
+            4 * per_rank,
+        ))
+        .with_buffer_bytes_per_rank(per_rank);
+        assert_eq!(pool.buffer_bytes_per_rank(), per_rank);
+        pool.acquire(GroupKind::ContextParallel, vec![0, 1]);
+        pool.acquire(GroupKind::ContextParallel, vec![2, 3]);
+        assert_eq!(pool.buffer_bytes(), 4 * per_rank);
+        assert_eq!(pool.stats().evictions, 0, "fits under the 8 MB model");
+        // Under the default 64 MB model the same budget holds nothing:
+        // re-modeling the footprint re-enforces the budget immediately.
+        pool.set_buffer_bytes_per_rank(GROUP_BUFFER_BYTES_PER_RANK);
+        assert!(pool.len() < 2, "re-modeled footprint must evict down");
+        assert!(pool.stats().evictions >= 1);
     }
 
     #[test]

@@ -56,10 +56,14 @@ pub struct DpSolution {
 
 /// Solve the degree-allocation problem for one wave of atomic groups.
 ///
-/// * `n` — available ranks (paper's N).
+/// * `n` — available ranks (paper's N; the scheduler passes its fabric
+///   snapshot's capacity — free replicas — so a fragmented mesh shrinks
+///   the budget).
 /// * `time` — T(G_i, d): estimated execution time of group `i` at degree
-///   `d` (the cost model closure; kept abstract so baselines and tests can
-///   inject their own).
+///   `d` (the cost model closure; the scheduler evaluates it at the
+///   fabric oracle's bandwidth for `d`,
+///   [`crate::scheduler::FabricModel::bw_for_degree`] — kept abstract so
+///   baselines and tests can inject their own).
 /// * `allowed` — degree admissibility filter (DHP: any integer → always
 ///   true; FlexSP-style baselines: powers of two only).
 ///

@@ -52,10 +52,13 @@ impl AtomicGroup {
 /// work and re-introduce exactly the "communication redundancy caused by
 /// packing massive short sequences" the paper avoids.
 ///
-/// `max_degree` caps d_min at the cluster's replica count N (a sequence
-/// whose memory exceeds N·E′ is infeasible; we clamp and let the memory
-/// constraint surface in validation — mirroring what a real system would
-/// OOM on).
+/// `max_degree` caps d_min at the rank budget N — the scheduler passes
+/// its fabric snapshot's capacity ([`crate::scheduler::FabricModel::capacity`]:
+/// the *free* replicas, which on a fragmented mesh is less than the mesh
+/// total), so bins are never sized against ranks concurrent jobs hold. A
+/// sequence whose memory exceeds N·E′ is infeasible; we clamp and let
+/// the memory constraint surface in validation — mirroring what a real
+/// system would OOM on.
 pub fn pack(
     seqs: &[Sequence],
     memory: &MemoryModel,
@@ -207,9 +210,10 @@ pub fn fingerprint(groups: &[AtomicGroup]) -> u64 {
     h
 }
 
-/// Split atomic groups into feasibility waves (Σ d_min ≤ N per wave),
-/// balancing estimated WORK across waves LPT-style so one wave doesn't
-/// hoard all the long groups while later waves run nearly empty.
+/// Split atomic groups into feasibility waves (Σ d_min ≤ N per wave,
+/// where N is the fabric capacity — free replicas — on the scheduling
+/// path), balancing estimated WORK across waves LPT-style so one wave
+/// doesn't hoard all the long groups while later waves run nearly empty.
 pub fn waves(groups: Vec<AtomicGroup>, replicas: usize) -> Vec<Vec<AtomicGroup>> {
     let mut groups = groups;
     waves_in(&mut groups, replicas, &mut PackScratch::default())

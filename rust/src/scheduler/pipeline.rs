@@ -28,7 +28,8 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::data::sequence::Sequence;
-use crate::parallel::pool::PoolStats;
+use crate::parallel::group::GROUP_BUFFER_BYTES_PER_RANK;
+use crate::parallel::pool::{PoolCapacity, PoolStats};
 use crate::parallel::ParallelState;
 
 use super::{Schedule, Scheduler};
@@ -60,6 +61,11 @@ pub struct ScheduledBatch {
     /// replayed the previous step's rank blocks
     /// ([`Schedule::replay_rate`]).
     pub replay_rate: f64,
+    /// Groups evicted from the pipeline's capacity-capped pool while
+    /// preparing THIS batch (0 on an unbounded pool). A persistent
+    /// non-zero stream here means the configured [`PoolCapacity`] is
+    /// below the workload's working set — the prewarm is thrashing.
+    pub evictions: u64,
     /// Cumulative pool statistics after preparing this batch.
     pub pool: PoolStats,
 }
@@ -72,9 +78,33 @@ pub struct SchedulePipeline {
 }
 
 impl SchedulePipeline {
-    /// Spawn the scheduling thread. `depth` bounds how many batches may be
-    /// in flight (the paper schedules exactly one step ahead ⇒ depth 1).
+    /// Spawn the scheduling thread with an UNBOUNDED pipeline pool (the
+    /// seed behavior). `depth` bounds how many batches may be in flight
+    /// (the paper schedules exactly one step ahead ⇒ depth 1).
     pub fn spawn(scheduler: Scheduler, depth: usize) -> Self {
+        Self::spawn_with_pool(
+            scheduler,
+            depth,
+            PoolCapacity::Unbounded,
+            GROUP_BUFFER_BYTES_PER_RANK,
+        )
+    }
+
+    /// [`SchedulePipeline::spawn`] with the pipeline-side pool budgeted
+    /// like the harness path: `capacity` bounds the pipeline's
+    /// `ParallelState` pool (LRU eviction on overflow — prewarm then runs
+    /// in reverse-wave order so the groups needed soonest stay warmest),
+    /// and `group_buffer_bytes` is the cluster's per-member-rank
+    /// communicator footprint
+    /// ([`crate::config::ClusterConfig::group_buffer_bytes`]) the byte
+    /// accounting charges. Per-batch eviction counts surface in
+    /// [`ScheduledBatch::evictions`].
+    pub fn spawn_with_pool(
+        scheduler: Scheduler,
+        depth: usize,
+        capacity: PoolCapacity,
+        group_buffer_bytes: u64,
+    ) -> Self {
         let (tx, job_rx) = mpsc::sync_channel::<Job>(depth.max(1));
         let (done_tx, rx) = mpsc::sync_channel::<ScheduledBatch>(depth.max(1));
         let handle = std::thread::Builder::new()
@@ -82,14 +112,16 @@ impl SchedulePipeline {
             .spawn(move || {
                 // The pipeline's MPU: communication groups are pooled
                 // here, across every batch this thread schedules.
-                let mut mpu =
-                    ParallelState::new(scheduler.mesh.clone(), 1, 1);
+                let mut mpu = ParallelState::new(scheduler.mesh.clone(), 1, 1)
+                    .with_pool_capacity(capacity)
+                    .with_group_buffer_bytes(group_buffer_bytes);
                 while let Ok(job) = job_rx.recv() {
                     let schedule = scheduler.schedule(&job.seqs);
                     // Prepare the groups one step ahead (CPU-side
                     // overlap). A schedule the scheduler just validated
                     // cannot fail placement checks; a failure here would
                     // be a scheduler bug, so surface it loudly.
+                    let evictions_before = mpu.pool_stats().evictions;
                     let reconfig_serial_s = mpu
                         .prepare_schedule(&schedule)
                         .expect("scheduler emitted an invalid placement");
@@ -100,6 +132,7 @@ impl SchedulePipeline {
                         schedule_latency_s: job.submitted_at.elapsed().as_secs_f64(),
                         reconfig_serial_s,
                         replay_rate,
+                        evictions: mpu.pool_stats().evictions - evictions_before,
                         pool: mpu.pool_stats(),
                     };
                     if done_tx.send(out).is_err() {
@@ -225,10 +258,14 @@ mod tests {
         // geometry every step): after the first step establishes the
         // groups, every later prepare must hit the pool — creation cost
         // is paid once, up front, on the scheduler thread.
-        let pipe = SchedulePipeline::spawn(scheduler(), 2);
+        // Depth covers every in-flight batch: this test submits the whole
+        // stream before receiving, which with a shallow depth would block
+        // the submitter against a scheduler blocked on the full result
+        // channel (mutual sync-channel deadlock).
+        let steps = 12u64;
+        let pipe = SchedulePipeline::spawn(scheduler(), steps as usize);
         let mut sampler = DatasetSampler::new(DatasetKind::Msrvtt, 57);
         let batch = sampler.sample_batch(16);
-        let steps = 12u64;
         for i in 0..steps {
             pipe.submit(i, batch.clone());
         }
@@ -261,6 +298,56 @@ mod tests {
             pool.hit_rate()
         );
         pipe.shutdown();
+    }
+
+    #[test]
+    fn capped_pipeline_pool_surfaces_evictions() {
+        // A capacity far below the workload's working set must thrash —
+        // and the thrash must be visible per batch via
+        // `ScheduledBatch::evictions`, not silently absorbed.
+        use crate::parallel::PoolCapacity;
+        let run = |capacity: PoolCapacity,
+                   batches: &[Vec<crate::data::sequence::Sequence>]|
+         -> Vec<ScheduledBatch> {
+            // Depth covers the whole stream (see the prewarm test's note
+            // on submit-ahead deadlock with shallow sync channels).
+            let pipe = SchedulePipeline::spawn_with_pool(
+                scheduler(),
+                batches.len(),
+                capacity,
+                64 << 20,
+            );
+            for (i, b) in batches.iter().enumerate() {
+                pipe.submit(i as u64, b.clone());
+            }
+            let out: Vec<ScheduledBatch> = (0..batches.len())
+                .map(|_| pipe.recv().expect("schedule"))
+                .collect();
+            pipe.shutdown();
+            out
+        };
+        // Drifting workload (batch geometry changes every step) under a
+        // 1-group cap: leftover groups from the previous step's prepare
+        // are evicted as soon as the next step's misses arrive.
+        let mut sampler = DatasetSampler::new(DatasetKind::OpenVid, 59);
+        let drifting: Vec<_> =
+            [8usize, 16, 24, 32].iter().map(|&k| sampler.sample_batch(k)).collect();
+        let tight = run(PoolCapacity::MaxGroups(1), &drifting);
+        assert!(
+            tight.iter().map(|b| b.evictions).sum::<u64>() > 0,
+            "a 1-group cap on a drifting workload must evict"
+        );
+        // Per-batch deltas reconcile with the cumulative pool stats.
+        assert_eq!(
+            tight.last().unwrap().pool.evictions,
+            tight.iter().map(|b| b.evictions).sum::<u64>(),
+        );
+        // A stationary workload under a generous cap never evicts and
+        // stays hot.
+        let stationary: Vec<_> = (0..8).map(|_| drifting[2].clone()).collect();
+        let roomy = run(PoolCapacity::MaxGroups(1024), &stationary);
+        assert!(roomy.iter().all(|b| b.evictions == 0));
+        assert!(roomy.last().unwrap().pool.hit_rate() > 0.8);
     }
 
     #[test]

@@ -4,8 +4,10 @@
 //!
 //! * [`Plan`]/[`PlannedGroup`] — the *logical* draft the solver's DP
 //!   emits: degrees and sequence assignments, costed against the
-//!   uniform-fabric heuristic (a degree that fits in one node is assumed
-//!   intra-node). This is what the outer search compares candidates on.
+//!   scheduler's fabric oracle ([`crate::scheduler::FabricModel`] —
+//!   free-slot-aware by default, the seed's uniform heuristic on the
+//!   reference path). This is what the outer search compares candidates
+//!   on.
 //! * [`PlacedPlan`]/[`PlacedGroup`] — the *physical* realization: every
 //!   group carries its concrete rank set, the ring bandwidth of that
 //!   exact set, and the `(GroupKind, ranks)` key the communication-group
@@ -126,9 +128,10 @@ pub struct PlacedPlan {
     pub groups: Vec<PlacedGroup>,
     /// Placement-aware makespan = max over groups of est_time_s.
     pub est_makespan_s: f64,
-    /// The DP's pre-placement objective for this wave (uniform-fabric
-    /// heuristic) — retained so candidate-search behavior stays
-    /// comparable against the reference solver.
+    /// The DP's pre-placement objective for this wave, costed against
+    /// the solve's fabric snapshot — retained so candidate-search
+    /// behavior stays comparable against the (uniform-oracle) reference
+    /// solver.
     pub search_makespan_s: f64,
     /// Hint-quality telemetry: how many of this wave's groups were placed
     /// by replaying the previous step's rank block (see

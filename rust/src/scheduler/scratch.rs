@@ -14,14 +14,17 @@
 //!   candidate's plan is assembled.
 //! * [`CostCache`] — memoized `T(agg, d, bw)` evaluations keyed on the
 //!   *content* of the workload aggregate plus a cost-model fingerprint
-//!   ([`crate::cost::CostCoeffs::fingerprint`]). The same atomic groups
-//!   recur across the balance-target outer search (singleton bins in
-//!   particular are shared by most targets), so candidate solves after the
-//!   first hit the cache for the bulk of their cost-model queries. Because
-//!   keys are content-addressed, entries stay valid across micro-batches
-//!   and across schedulers (the model fingerprint isolates different
-//!   coefficient sets); the map is bounded and cleared wholesale at
-//!   capacity.
+//!   ([`crate::cost::CostCoeffs::fingerprint`]) plus a fabric-state
+//!   fingerprint ([`super::FabricModel::fingerprint`]). The same atomic
+//!   groups recur across the balance-target outer search (singleton bins
+//!   in particular are shared by most targets), so candidate solves after
+//!   the first hit the cache for the bulk of their cost-model queries.
+//!   Because keys are content-addressed, entries stay valid across
+//!   micro-batches and across schedulers (the model fingerprint isolates
+//!   different coefficient sets; the fabric fingerprint keeps entries
+//!   memoized under one mesh occupancy state from ever being served
+//!   under a state whose bandwidth oracle answers differ); the map is
+//!   bounded and cleared wholesale at capacity.
 //!
 //! A process-wide pool ([`SolverScratch::acquire`]/[`SolverScratch::release`])
 //! hands scratches to the outer-search worker threads; after the first few
@@ -148,8 +151,9 @@ impl Hasher for KeyHasher {
     }
 }
 
-/// SplitMix64 finalizer — used to build content keys.
-fn mix(mut x: u64) -> u64 {
+/// SplitMix64 finalizer — used to build content keys here and the
+/// fabric-oracle fingerprint in [`super::fabric`].
+pub(crate) fn mix(mut x: u64) -> u64 {
     x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
     x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
     x ^ (x >> 31)
@@ -164,26 +168,41 @@ pub struct CostCache {
 }
 
 impl CostCache {
-    fn key(model_fp: u64, agg: &WorkloadAgg, d: usize, bw: f64) -> (u64, u64) {
+    fn key(
+        model_fp: u64,
+        fabric_fp: u64,
+        agg: &WorkloadAgg,
+        d: usize,
+        bw: f64,
+    ) -> (u64, u64) {
         let a = mix(model_fp ^ agg.quad.to_bits())
-            .wrapping_add(mix(agg.tokens.to_bits() ^ (d as u64).rotate_left(32)));
+            .wrapping_add(mix(agg.tokens.to_bits() ^ (d as u64).rotate_left(32)))
+            .wrapping_add(mix(fabric_fp ^ 0xA5A5_5A5A_C3C3_3C3C));
         let b = mix(agg.quad_base.to_bits() ^ bw.to_bits())
-            .wrapping_add(mix((agg.count as u64) ^ (d as u64) ^ model_fp.rotate_left(17)));
+            .wrapping_add(mix((agg.count as u64) ^ (d as u64) ^ model_fp.rotate_left(17)))
+            .wrapping_add(mix(fabric_fp.rotate_left(29)));
         (a, b)
     }
 
     /// `T(agg, d, bw)` through the memo table. `model_fp` must be
     /// [`crate::cost::CostCoeffs::fingerprint`] of `cost.coeffs` — it keeps
     /// entries from different cost models apart in the shared pool.
+    /// `fabric_fp` must be the [`super::FabricModel::fingerprint`] of the
+    /// fabric snapshot the query is costed against — entries memoized
+    /// under one fabric state are never served under a state whose
+    /// oracle answers differ (scratches are pooled process-wide and
+    /// outlive any single mesh state; the fingerprint is semantic, so
+    /// states with identical answers deliberately share entries).
     pub fn t_total(
         &self,
         model_fp: u64,
+        fabric_fp: u64,
         cost: &CostModel,
         agg: &WorkloadAgg,
         d: usize,
         bw: f64,
     ) -> f64 {
-        let key = Self::key(model_fp, agg, d, bw);
+        let key = Self::key(model_fp, fabric_fp, agg, d, bw);
         if let Some(&t) = self.map.borrow().get(&key) {
             return t;
         }
@@ -282,8 +301,8 @@ mod tests {
         for d in 1..=16usize {
             let want = cost.t_total(&agg, d, 12.5e9);
             // First call computes, second must hit and return the bit-same value.
-            assert_eq!(cache.t_total(fp, &cost, &agg, d, 12.5e9).to_bits(), want.to_bits());
-            assert_eq!(cache.t_total(fp, &cost, &agg, d, 12.5e9).to_bits(), want.to_bits());
+            assert_eq!(cache.t_total(fp, 7, &cost, &agg, d, 12.5e9).to_bits(), want.to_bits());
+            assert_eq!(cache.t_total(fp, 7, &cost, &agg, d, 12.5e9).to_bits(), want.to_bits());
         }
         assert_eq!(cache.len(), 16);
     }
@@ -297,9 +316,45 @@ mod tests {
         let cache = CostCache::default();
         let mut agg = WorkloadAgg::default();
         agg.add(&crate::data::sequence::Sequence::new(0, 512, 512));
-        let ta = cache.t_total(cost_a.coeffs.fingerprint(), &cost_a, &agg, 4, 12.5e9);
-        let tb = cache.t_total(cost_b.coeffs.fingerprint(), &cost_b, &agg, 4, 12.5e9);
+        let ta = cache.t_total(cost_a.coeffs.fingerprint(), 7, &cost_a, &agg, 4, 12.5e9);
+        let tb = cache.t_total(cost_b.coeffs.fingerprint(), 7, &cost_b, &agg, 4, 12.5e9);
         assert!(ta != tb, "fingerprints failed to separate models");
+    }
+
+    #[test]
+    fn cache_isolates_fabric_states() {
+        // The ISSUE-4 isolation gate: an entry memoized under one fabric
+        // fingerprint must never be served under another. Probe it the
+        // adversarial way — same model fingerprint, same (agg, d, bw)
+        // key ingredients, but genuinely different cost models: only the
+        // fabric fingerprint separates them, so a cross-serve would
+        // return the wrong model's value.
+        let cost_a = cost_model();
+        let mut cost_b = cost_model();
+        cost_b.coeffs.alpha2 *= 3.0;
+        let shared_model_fp = cost_a.coeffs.fingerprint();
+        let cache = CostCache::default();
+        let mut agg = WorkloadAgg::default();
+        agg.add(&crate::data::sequence::Sequence::new(0, 1024, 256));
+        let fab_a = 0xAAAA_0001u64;
+        let fab_b = 0xBBBB_0002u64;
+        let ta = cache.t_total(shared_model_fp, fab_a, &cost_a, &agg, 4, 12.5e9);
+        let tb = cache.t_total(shared_model_fp, fab_b, &cost_b, &agg, 4, 12.5e9);
+        assert_eq!(cache.len(), 2, "fabric states must key separate entries");
+        assert_ne!(
+            ta.to_bits(),
+            tb.to_bits(),
+            "entry from fabric A was served under fabric B"
+        );
+        // And each fabric keeps returning its own memoized value.
+        assert_eq!(
+            cache.t_total(shared_model_fp, fab_a, &cost_b, &agg, 4, 12.5e9).to_bits(),
+            ta.to_bits()
+        );
+        assert_eq!(
+            cache.t_total(shared_model_fp, fab_b, &cost_a, &agg, 4, 12.5e9).to_bits(),
+            tb.to_bits()
+        );
     }
 
     #[test]

@@ -48,6 +48,11 @@ pub struct TrainerConfig {
     pub log_path: Option<PathBuf>,
     /// Simulated cluster size the async scheduler plans for.
     pub sim_npus: usize,
+    /// Budget for the scheduling pipeline's communication-group pool
+    /// (unbounded by default — cap it to model a device that cannot keep
+    /// every communicator established; evictions then show up in the
+    /// per-step CSV).
+    pub pool_capacity: crate::parallel::PoolCapacity,
 }
 
 impl Default for TrainerConfig {
@@ -64,6 +69,7 @@ impl Default for TrainerConfig {
             seed: 0xE2E,
             log_path: None,
             sim_npus: 8,
+            pool_capacity: crate::parallel::PoolCapacity::Unbounded,
         }
     }
 }
@@ -95,6 +101,9 @@ pub struct StepRecord {
     /// Fraction of this step's groups that replayed the previous step's
     /// rank blocks (hint-quality telemetry).
     pub replay_rate: f64,
+    /// Groups evicted from the (capacity-capped) pipeline pool while
+    /// preparing this step — 0 on the default unbounded pool.
+    pub pool_evictions: u64,
     /// Cumulative communication-group pool hit-rate after this step.
     pub pool_hit_rate: f64,
 }
@@ -169,7 +178,12 @@ pub fn run(cfg: &TrainerConfig) -> Result<TrainReport> {
     };
     let sim = ClusterSim::new(preset, TrainStage::Full, cluster.clone());
     let scheduler = Scheduler::new(cost, DeviceMesh::new(&cluster));
-    let pipe = SchedulePipeline::spawn(scheduler, 2);
+    let pipe = SchedulePipeline::spawn_with_pool(
+        scheduler,
+        2,
+        cfg.pool_capacity,
+        cluster.group_buffer_bytes,
+    );
 
     // Scheduling view of a batch: B sequences of (Lv vision + Lt text).
     let batch_seqs = |step: usize| -> Vec<Sequence> {
@@ -192,7 +206,7 @@ pub fn run(cfg: &TrainerConfig) -> Result<TrainReport> {
                 f,
                 "step,loss,grad_norm,step_s,sim_makespan_s,sched_latency_s,\
                  reconfig_serial_s,reconfig_charged_s,replay_rate,\
-                 pool_hit_rate"
+                 pool_evictions,pool_hit_rate"
             )?;
             Some(f)
         }
@@ -247,13 +261,14 @@ pub fn run(cfg: &TrainerConfig) -> Result<TrainReport> {
             reconfig_charged_s: (scheduled.reconfig_serial_s - prev_compute_s)
                 .max(0.0),
             replay_rate: scheduled.replay_rate,
+            pool_evictions: scheduled.evictions,
             pool_hit_rate: scheduled.pool.hit_rate(),
         };
         prev_compute_s = compute_s;
         if let Some(f) = log_file.as_mut() {
             writeln!(
                 f,
-                "{},{:.6},{:.4},{:.4},{:.6},{:.6},{:.6},{:.6},{:.4},{:.4}",
+                "{},{:.6},{:.4},{:.4},{:.6},{:.6},{:.6},{:.6},{:.4},{},{:.4}",
                 rec.step,
                 rec.loss,
                 rec.grad_norm,
@@ -263,6 +278,7 @@ pub fn run(cfg: &TrainerConfig) -> Result<TrainReport> {
                 rec.reconfig_serial_s,
                 rec.reconfig_charged_s,
                 rec.replay_rate,
+                rec.pool_evictions,
                 rec.pool_hit_rate
             )?;
         }

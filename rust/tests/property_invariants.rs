@@ -156,6 +156,65 @@ fn placed_schedules_have_disjoint_in_budget_rank_sets() {
 }
 
 #[test]
+fn fragmented_mesh_schedules_avoid_occupied_ranks() {
+    // Fabric-aware scheduling end to end on randomly fragmented meshes:
+    // whatever fraction of the mesh concurrent jobs hold, every schedule
+    // stays valid, never touches an occupied rank, and never plans more
+    // ranks than are actually free.
+    forall(15, 0xF4A8, |rng| {
+        let cluster = rand_cluster(rng);
+        let mut mesh = DeviceMesh::new(&cluster);
+        let n = mesh.replicas;
+        // Occupy a random subset (up to ~60%), leaving at least 2 free.
+        let mut occupied = Vec::new();
+        for r in 0..n {
+            if occupied.len() + 2 < n && rng.bool(0.4) {
+                occupied.push(r);
+            }
+        }
+        mesh.occupy(&occupied);
+        let free = mesh.free_replicas();
+        let preset = by_name("InternVL3-8B").unwrap();
+        let hw = HardwareSpec {
+            peak_flops: 376e12 * (cluster.tp * cluster.pp) as f64,
+            ..HardwareSpec::default()
+        };
+        let cost = CostModel {
+            coeffs: CostCoeffs::analytic(&preset, TrainStage::Full, &hw),
+            memory: MemoryModel {
+                e_bytes: 8192.0 * preset.act_bytes_per_token() + 2e9,
+                m_states: 2e9,
+                m_token: preset.act_bytes_per_token(),
+            },
+        };
+        let sch = dhp::scheduler::Scheduler::new(cost, mesh.clone());
+        let kind = *rng.choose(&DatasetKind::all());
+        let mut sampler = DatasetSampler::new(kind, rng.next_u64());
+        let seqs = sampler.sample_batch(rng.range_usize(1, 48));
+        let schedule = sch.schedule(&seqs);
+        schedule
+            .validate(&seqs, n)
+            .map_err(|e| format!("{e} (occupied {}/{n})", occupied.len()))?;
+        for wave in &schedule.waves {
+            if wave.total_degree() > free {
+                return Err(format!(
+                    "wave spends {} ranks but only {free} are free",
+                    wave.total_degree()
+                ));
+            }
+            for g in &wave.groups {
+                for &r in &g.ranks {
+                    if !mesh.is_rank_free(r) {
+                        return Err(format!("occupied rank {r} placed"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn group_pool_hit_rate_rises_across_scheduled_steps() {
     // Regression for the reuse-aware placement policy: on a stationary
     // workload, consecutive scheduled steps must key into an increasingly
