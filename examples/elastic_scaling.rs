@@ -3,8 +3,10 @@
 //! parallelism automatically while static baselines would need manual
 //! re-tuning at every size (we re-tune them anyway — DHP still wins).
 //!
-//! Also demonstrates the asynchronous scheduling pipeline: plans for step
-//! t+1 are produced on a CPU thread while step t "executes".
+//! Also demonstrates elastic co-tenancy through the `DhpSession` façade:
+//! a concurrent job claims ranks mid-run via live `MeshEvent`s, the
+//! session re-snapshots the fabric, and the very next solve adapts to
+//! the fragmented mesh — no rebuild, no retuning.
 //!
 //! ```bash
 //! cargo run --release --example elastic_scaling
@@ -15,7 +17,7 @@ use dhp::config::TrainStage;
 use dhp::data::datasets::DatasetKind;
 use dhp::experiments::harness::{run_policy, ExpContext, PolicySet};
 use dhp::report::Table;
-use dhp::scheduler::pipeline::SchedulePipeline;
+use dhp::session::MeshEvent;
 use dhp::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
@@ -69,35 +71,49 @@ fn main() -> anyhow::Result<()> {
     }
     table.print();
 
-    // Async pipeline demo: scheduling latency hides behind compute.
-    println!("\nasync scheduling pipeline (one step lookahead):");
+    // Elastic co-tenancy demo: a concurrent job claims one rank per node
+    // mid-run. The session's live mesh-event feed re-snapshots the
+    // fabric, so the next solve prices the fragmentation and places only
+    // on ranks this job still owns; the release restores full capacity.
+    println!("\nlive mesh events (elastic co-tenancy through DhpSession):");
     let ctx = ExpContext::new(
         by_name("Qwen3VL-8B").unwrap(),
-        DatasetKind::OpenVid,
+        DatasetKind::Msrvtt,
         32,
         TrainStage::Full,
     );
-    let pipe = SchedulePipeline::spawn(ctx.dhp(), 1);
+    let mut session = ctx.session();
     let mut sampler = ctx.sampler();
-    pipe.submit(0, sampler.sample_batch(64));
-    for step in 0..4u64 {
-        if step < 3 {
-            pipe.submit(step + 1, sampler.sample_batch(64));
-        }
-        // Simulated accelerator compute for the current step.
-        std::thread::sleep(std::time::Duration::from_millis(20));
-        let done = pipe.recv().expect("schedule");
+    let batch = sampler.sample_batch(24);
+    let print_step = |label: &str, free: usize, r: &dhp::session::StepReport| {
         println!(
-            "  step {}: plan ready (latency {:.2} ms, solver {:.2} ms, \
-             group prewarm {:.0} ms, pool hit-rate {:.2}) — hidden: {}",
-            done.step,
-            done.schedule_latency_s * 1e3,
-            done.schedule.solve_time_s * 1e3,
-            done.reconfig_serial_s * 1e3,
-            done.pool.hit_rate(),
-            done.schedule_latency_s < 0.020,
+            "  {label}: {free} free replicas, fabric fp {:016x}, \
+             iter {:.3}s (reconfig charged {:.1} ms / serial {:.1} ms, \
+             replay {:.2})",
+            r.fabric_fingerprint,
+            r.iteration.iter_time_s,
+            r.iteration.reconfig_time_s * 1e3,
+            r.iteration.reconfig_serial_s * 1e3,
+            r.replay_rate,
         );
+    };
+    let r = session.step(&batch);
+    print_step("steady state ", session.mesh().free_replicas(), &r);
+
+    let claimed: Vec<usize> = (0..ctx.replicas()).step_by(2).collect();
+    session.apply(&[MeshEvent::Occupy(claimed.clone())])?;
+    let r = session.step(&batch);
+    print_step("co-tenant in ", session.mesh().free_replicas(), &r);
+    for schedule in &r.schedules {
+        for wave in &schedule.waves {
+            for g in &wave.groups {
+                assert!(g.ranks.iter().all(|rank| !claimed.contains(rank)));
+            }
+        }
     }
-    pipe.shutdown();
+
+    session.apply(&[MeshEvent::Release(claimed)])?;
+    let r = session.step(&batch);
+    print_step("co-tenant out", session.mesh().free_replicas(), &r);
     Ok(())
 }

@@ -1,5 +1,6 @@
-//! Quickstart: schedule one heterogeneous multimodal micro-batch with DHP
-//! and inspect the plan.
+//! Quickstart: drive one DHP training step through the [`DhpSession`]
+//! façade — schedule, group prewarm, and simulated execution in a single
+//! call — then inspect the placed plan and the iteration report.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
@@ -10,6 +11,7 @@ use dhp::config::TrainStage;
 use dhp::data::datasets::DatasetKind;
 use dhp::experiments::harness::ExpContext;
 use dhp::scheduler::format_degree_multiset;
+use dhp::session::DhpSession;
 
 fn main() -> anyhow::Result<()> {
     dhp::util::logger::init();
@@ -23,10 +25,10 @@ fn main() -> anyhow::Result<()> {
         TrainStage::Full,
     );
 
-    // Sample a micro-batch of heterogeneous sequences.
+    // Sample a batch of heterogeneous sequences.
     let mut sampler = ctx.sampler();
     let seqs = sampler.sample_batch(24);
-    println!("micro-batch lengths (tokens):");
+    println!("batch lengths (tokens):");
     for s in &seqs {
         println!(
             "  seq {:>3}: {:>7} total ({} vision + {} text, {:.1}s video)",
@@ -38,40 +40,54 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // Run the two-stage DHP scheduler: BFD packing + 2D-DP allocation.
-    let scheduler = ctx.dhp();
-    let schedule = scheduler.schedule(&seqs);
-    schedule.validate(&seqs, ctx.replicas())?;
+    // The whole lifecycle — scheduler, async pipeline, group pool,
+    // cluster simulator — behind one constructor and one call.
+    let mut session: DhpSession = ctx.session();
+    let report = session.step(&seqs);
 
     println!(
-        "\nDHP plan ({} replicas, solver {:.2} ms):",
+        "\nDHP plan ({} replicas, {} micro-batch(es), solver {:.2} ms):",
         ctx.replicas(),
-        schedule.solve_time_s * 1e3
+        report.micro_batches,
+        report.solver_time_s * 1e3
     );
-    for (wi, wave) in schedule.waves.iter().enumerate() {
-        println!("  wave {wi} (est makespan {:.3}s):", wave.est_makespan_s);
-        for g in &wave.groups {
+    for (mi, schedule) in report.schedules.iter().enumerate() {
+        for (wi, wave) in schedule.waves.iter().enumerate() {
             println!(
-                "    CP degree {} on ranks {:?} ({:.0} GB/s ring) <- {} seqs, \
-                 {:.0} tokens (est {:.3}s)",
-                g.degree,
-                g.ranks,
-                g.ring_bw / 1e9,
-                g.seq_idxs.len(),
-                g.agg.tokens,
-                g.est_time_s
+                "  mb {mi} wave {wi} (est makespan {:.3}s):",
+                wave.est_makespan_s
             );
+            for g in &wave.groups {
+                println!(
+                    "    CP degree {} on ranks {:?} ({:.0} GB/s ring) <- {} seqs, \
+                     {:.0} tokens (est {:.3}s)",
+                    g.degree,
+                    g.ranks,
+                    g.ring_bw / 1e9,
+                    g.seq_idxs.len(),
+                    g.agg.tokens,
+                    g.est_time_s
+                );
+            }
         }
+        println!(
+            "  mb {mi} degrees: {}",
+            format_degree_multiset(&schedule.degree_multiset())
+        );
     }
-    println!(
-        "degrees: {}",
-        format_degree_multiset(&schedule.degree_multiset())
-    );
 
-    // Execute on the simulated cluster for ground truth.
-    let sim = ctx.sim();
-    let reports = sim.execute_schedule(&seqs, &schedule, dhp::cluster::CommKind::RingCp);
-    let total: f64 = reports.iter().map(|w| w.makespan_s).sum();
-    println!("simulated execution: {total:.3}s over {} wave(s)", reports.len());
+    // The same step already executed on the simulated cluster.
+    println!(
+        "\niteration report: exec {:.3}s + grad sync {:.3}s + reconfig \
+         {:.3}s charged (serial {:.3}s) = {:.3}s over {} wave(s); \
+         pool hit-rate {:.2}",
+        report.iteration.exec_time_s,
+        report.iteration.grad_sync_s,
+        report.iteration.reconfig_time_s,
+        report.iteration.reconfig_serial_s,
+        report.iteration.iter_time_s,
+        report.iteration.waves.len(),
+        report.pool.hit_rate(),
+    );
     Ok(())
 }

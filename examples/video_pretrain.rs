@@ -11,12 +11,10 @@
 use dhp::baselines::SchedulePolicy;
 use dhp::config::presets::by_name;
 use dhp::config::TrainStage;
-use dhp::data::batch::GlobalBatch;
 use dhp::data::datasets::DatasetKind;
-use dhp::data::sequence::Sequence;
 use dhp::experiments::harness::{ExpContext, PolicySet};
 use dhp::report::Table;
-use dhp::scheduler::Schedule;
+use dhp::session::StepReport;
 use dhp::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
@@ -47,16 +45,16 @@ fn main() -> anyhow::Result<()> {
         set.deepspeed.degree()
     );
 
-    let planner = ctx.micro_batch_planner();
-    let sim = ctx.sim();
     let mut sampler = ctx.sampler();
-    // One persistent communication-group pool per policy: reconfiguration
-    // cost (pool misses) is charged into each iteration, so group reuse
-    // across iterations is part of the measurement.
-    let mut pools = [
-        dhp::parallel::GroupPool::new(),
-        dhp::parallel::GroupPool::new(),
-        dhp::parallel::GroupPool::new(),
+    // One persistent session per policy: each owns its mesh, scheduling
+    // pipeline, and communication-group pool, so reconfiguration cost
+    // (pool misses) is charged into each iteration and group reuse across
+    // iterations is part of the measurement. The first step warm-starts
+    // the pool (paper §5's pre-training group creation).
+    let mut sessions = [
+        ctx.session_for(set.megatron.clone_policy()),
+        ctx.session_for(set.deepspeed.clone_policy()),
+        ctx.session_for(set.dhp.clone_policy()),
     ];
 
     let mut table = Table::new(
@@ -65,36 +63,19 @@ fn main() -> anyhow::Result<()> {
     );
     let mut totals = [0.0f64; 3];
     for iter in 0..iterations {
-        let batch = GlobalBatch {
-            step: iter as u64,
-            sequences: sampler.sample_batch(gbs),
-        };
-        let mbs = planner.plan(&batch);
-        let run = |policy: &dyn SchedulePolicy,
-                   pool: &mut dhp::parallel::GroupPool|
-         -> (f64, Vec<usize>) {
-            let scheduled: Vec<(Vec<Sequence>, Schedule)> = mbs
-                .iter()
-                .map(|mb| (mb.sequences.clone(), policy.schedule(&mb.sequences)))
-                .collect();
-            if iter == 0 {
-                // Warm pool at training start (paper §5).
-                dhp::experiments::harness::prewarm_from_schedules(pool, &scheduled);
-            }
-            let degrees = scheduled
-                .iter()
-                .flat_map(|(_, s)| s.degree_multiset())
-                .collect();
-            (
-                sim.execute_iteration(&scheduled, policy.comm_kind(), pool)
-                    .iter_time_s,
-                degrees,
-            )
-        };
-        let [pool_mega, pool_ds, pool_dhp] = &mut pools;
-        let (t_mega, _) = run(&set.megatron, pool_mega);
-        let (t_ds, _) = run(&set.deepspeed, pool_ds);
-        let (t_dhp, mut degrees) = run(&set.dhp, pool_dhp);
+        let seqs = sampler.sample_batch(gbs);
+        let reports: Vec<StepReport> =
+            sessions.iter_mut().map(|s| s.step(&seqs)).collect();
+        let (t_mega, t_ds, t_dhp) = (
+            reports[0].iteration.iter_time_s,
+            reports[1].iteration.iter_time_s,
+            reports[2].iteration.iter_time_s,
+        );
+        let mut degrees: Vec<usize> = reports[2]
+            .schedules
+            .iter()
+            .flat_map(|s| s.degree_multiset())
+            .collect();
         degrees.sort_unstable_by(|a, b| b.cmp(a));
         degrees.dedup();
         totals[0] += t_mega;
@@ -102,7 +83,7 @@ fn main() -> anyhow::Result<()> {
         totals[2] += t_dhp;
         table.row(vec![
             iter.to_string(),
-            batch.total_tokens().to_string(),
+            reports[2].iteration.tokens.to_string(),
             format!("{t_mega:.2}"),
             format!("{t_ds:.2}"),
             format!("{t_dhp:.2}"),

@@ -76,6 +76,14 @@ impl SchedulePolicy for DeepSpeedUlysses {
     fn schedule(&self, seqs: &[Sequence]) -> Schedule {
         self.inner.schedule(seqs)
     }
+
+    fn sync_mesh(&mut self, mesh: &crate::parallel::mesh::DeviceMesh) {
+        self.inner.sync_mesh(mesh);
+    }
+
+    fn clone_policy(&self) -> Box<dyn SchedulePolicy> {
+        Box::new(self.clone())
+    }
 }
 
 #[cfg(test)]

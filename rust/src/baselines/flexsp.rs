@@ -11,6 +11,7 @@ use crate::scheduler::{DegreePolicy, Schedule, Scheduler};
 use super::SchedulePolicy;
 
 /// Power-of-two-restricted dynamic scheduler.
+#[derive(Clone)]
 pub struct FlexSp {
     inner: Scheduler,
 }
@@ -36,6 +37,18 @@ impl SchedulePolicy for FlexSp {
 
     fn schedule(&self, seqs: &[Sequence]) -> Schedule {
         self.inner.schedule(seqs)
+    }
+
+    fn sync_mesh(&mut self, mesh: &crate::parallel::mesh::DeviceMesh) {
+        self.inner.sync_mesh(mesh);
+    }
+
+    fn clone_policy(&self) -> Box<dyn SchedulePolicy> {
+        Box::new(self.clone())
+    }
+
+    fn fabric_kind(&self) -> crate::scheduler::FabricKind {
+        self.inner.fabric
     }
 }
 

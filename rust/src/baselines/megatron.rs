@@ -84,6 +84,20 @@ impl SchedulePolicy for MegatronStaticCp {
         CommKind::RingCp
     }
 
+    fn sync_mesh(&mut self, mesh: &DeviceMesh) {
+        // A static grid cannot adapt to lost capacity: it keeps planning
+        // all N replicas, so on a mesh with occupied ranks the next
+        // schedule()'s placement panics against the FREE budget
+        // (`DeviceMesh::place_tracked`) — exactly the rigidity DHP
+        // removes. The assert here only guards topology-size mismatches.
+        assert_eq!(mesh.replicas, self.replicas, "mesh/replica mismatch");
+        self.mesh = mesh.clone();
+    }
+
+    fn clone_policy(&self) -> Box<dyn SchedulePolicy> {
+        Box::new(self.clone())
+    }
+
     fn schedule(&self, seqs: &[Sequence]) -> Schedule {
         let t0 = std::time::Instant::now();
         let n_groups = self.replicas / self.degree;

@@ -13,9 +13,17 @@ pub mod megatron;
 
 use crate::cluster::CommKind;
 use crate::data::sequence::Sequence;
-use crate::scheduler::Schedule;
+use crate::parallel::mesh::DeviceMesh;
+use crate::scheduler::{FabricKind, Schedule, Scheduler};
 
 /// A parallelism scheduling policy: micro-batch sequences → schedule.
+///
+/// Every policy — DHP and the static baselines alike — drives the
+/// training loop through [`crate::session::DhpSession`], which owns the
+/// authoritative [`DeviceMesh`] and pushes occupancy changes into the
+/// policy via [`SchedulePolicy::sync_mesh`] so the next
+/// [`SchedulePolicy::schedule`] call solves against current
+/// fragmentation.
 pub trait SchedulePolicy: Send {
     /// Display name used in tables and reports.
     fn name(&self) -> &'static str;
@@ -23,6 +31,51 @@ pub trait SchedulePolicy: Send {
     fn comm_kind(&self) -> CommKind;
     /// Plan one micro-batch into a placed schedule.
     fn schedule(&self, seqs: &[Sequence]) -> Schedule;
+    /// Install an updated physical mesh. The session calls this once at
+    /// build time (so policy and executor share one topology) and again
+    /// after every applied [`crate::session::MeshEvent`] batch, making
+    /// mid-run fragmentation flow into the next solve.
+    fn sync_mesh(&mut self, mesh: &DeviceMesh);
+    /// Clone this policy into an owned trait object (sessions own their
+    /// policy; the experiment harness clones the caller's borrow).
+    fn clone_policy(&self) -> Box<dyn SchedulePolicy>;
+    /// Which bandwidth oracle this policy costs its candidates against.
+    /// The session derives its reported fabric fingerprint from this, so
+    /// the policy is the single source of truth. Static baselines
+    /// estimate at uniform pre-placement bandwidth, so they report
+    /// [`FabricKind::Uniform`].
+    fn fabric_kind(&self) -> FabricKind {
+        FabricKind::Uniform
+    }
+}
+
+impl SchedulePolicy for Scheduler {
+    fn name(&self) -> &'static str {
+        "DHP"
+    }
+
+    fn comm_kind(&self) -> CommKind {
+        CommKind::RingCp
+    }
+
+    fn schedule(&self, seqs: &[Sequence]) -> Schedule {
+        Scheduler::schedule(self, seqs)
+    }
+
+    fn sync_mesh(&mut self, mesh: &DeviceMesh) {
+        // The cross-step placement hint survives: stale blocks (now
+        // occupied or out of range) are skipped by the placer, while
+        // still-free blocks keep replaying into pooled groups.
+        self.mesh = mesh.clone();
+    }
+
+    fn clone_policy(&self) -> Box<dyn SchedulePolicy> {
+        Box::new(self.clone())
+    }
+
+    fn fabric_kind(&self) -> FabricKind {
+        self.fabric
+    }
 }
 
 pub use deepspeed::DeepSpeedUlysses;

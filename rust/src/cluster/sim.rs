@@ -166,7 +166,10 @@ impl ClusterSim {
         }
         let makespan = group_times.iter().fold(0.0f64, |a, &b| a.max(b));
         // Rank·seconds busy vs available (idle ranks: whole wave idle).
-        let total_ranks = self.mesh.replicas as f64;
+        // "Available" means ranks this job can actually use: slots held
+        // by concurrent jobs ([`DeviceMesh::occupy`]) are not idle
+        // capacity, so a fragmented mesh is not charged for them.
+        let total_ranks = self.mesh.free_replicas().max(1) as f64;
         let busy: f64 = group_times
             .iter()
             .zip(plan.groups.iter())

@@ -9,6 +9,7 @@ pub use presets::{ModelPreset, PRESETS};
 use anyhow::{bail, Context, Result};
 
 use crate::data::datasets::DatasetKind;
+use crate::parallel::PoolCapacity;
 
 /// Cluster hardware description (paper §6.1: 8 nodes × 8 Ascend 910B,
 /// HCCS intra-node, 100 Gbps InfiniBand inter-node).
@@ -138,6 +139,12 @@ pub struct TrainConfig {
     pub warmup_steps: usize,
     /// Measured steps (paper: 10).
     pub measure_steps: usize,
+    /// Communication-group pool budget of the run's session (TOML
+    /// `[train] pool_cap_groups = <n>` or `pool_cap_buffer_mb = <mb>`,
+    /// mutually exclusive; default unbounded — the seed behavior).
+    /// Flows into every session built from this config via
+    /// [`crate::experiments::ExpContext::from_train_config`].
+    pub pool_capacity: PoolCapacity,
 }
 
 impl Default for TrainConfig {
@@ -151,16 +158,32 @@ impl Default for TrainConfig {
             seed: 0xD4B,
             warmup_steps: 5,
             measure_steps: 10,
+            pool_capacity: PoolCapacity::Unbounded,
         }
     }
 }
 
 impl TrainConfig {
-    /// Validate the cluster topology and batch settings.
+    /// Validate the cluster topology, batch, and pool-budget settings.
     pub fn validate(&self) -> Result<()> {
         self.cluster.validate()?;
         if self.gbs == 0 {
             bail!("gbs must be positive");
+        }
+        match self.pool_capacity {
+            PoolCapacity::MaxGroups(0) => {
+                bail!(
+                    "pool_cap_groups must be >= 1 (a zero-group budget \
+                     cannot establish any communicator)"
+                )
+            }
+            PoolCapacity::BufferBytes(0) => {
+                bail!(
+                    "pool_cap_buffer_mb must be positive (a zero-byte \
+                     budget cannot establish any communicator)"
+                )
+            }
+            _ => {}
         }
         Ok(())
     }
@@ -204,6 +227,29 @@ impl TrainConfig {
             }
             if let Some(v) = t.get("measure_steps") {
                 cfg.measure_steps = v.as_int()? as usize;
+            }
+            let cap_groups = t.get("pool_cap_groups");
+            let cap_bytes = t.get("pool_cap_buffer_mb");
+            if cap_groups.is_some() && cap_bytes.is_some() {
+                bail!(
+                    "set at most one of pool_cap_groups / pool_cap_buffer_mb \
+                     (one pool, one budget)"
+                );
+            }
+            if let Some(v) = cap_groups {
+                let n = v.as_int()?;
+                if n < 0 {
+                    bail!("pool_cap_groups must be >= 1, got {n}");
+                }
+                cfg.pool_capacity = PoolCapacity::MaxGroups(n as usize);
+            }
+            if let Some(v) = cap_bytes {
+                let mb = v.as_float()?;
+                if mb < 0.0 {
+                    bail!("pool_cap_buffer_mb must be positive, got {mb}");
+                }
+                cfg.pool_capacity =
+                    PoolCapacity::BufferBytes((mb * (1u64 << 20) as f64) as u64);
             }
         }
         if let Some(c) = doc.section("cluster") {
@@ -307,6 +353,52 @@ mod tests {
     #[test]
     fn unknown_model_is_error() {
         assert!(TrainConfig::from_toml("[train]\nmodel = \"GPT-9\"\n").is_err());
+    }
+
+    #[test]
+    fn pool_capacity_round_trips_and_rejects_zero() {
+        // Group-count form.
+        let cfg =
+            TrainConfig::from_toml("[train]\npool_cap_groups = 12\n").unwrap();
+        assert_eq!(cfg.pool_capacity, PoolCapacity::MaxGroups(12));
+        // Buffer-byte form (MB → bytes).
+        let cfg = TrainConfig::from_toml("[train]\npool_cap_buffer_mb = 256\n")
+            .unwrap();
+        assert_eq!(cfg.pool_capacity, PoolCapacity::BufferBytes(256 << 20));
+        // Fractional MB budgets survive the conversion.
+        let cfg = TrainConfig::from_toml("[train]\npool_cap_buffer_mb = 0.5\n")
+            .unwrap();
+        assert_eq!(cfg.pool_capacity, PoolCapacity::BufferBytes(512 << 10));
+        // Unset ⇒ the seed's unbounded default.
+        assert_eq!(
+            TrainConfig::from_toml("[train]\ngbs = 8\n").unwrap().pool_capacity,
+            PoolCapacity::Unbounded
+        );
+        // The validate reject-0 paths — and negatives must not wrap
+        // through the integer cast into an accidental unbounded budget.
+        assert!(TrainConfig::from_toml("[train]\npool_cap_groups = 0\n").is_err());
+        assert!(
+            TrainConfig::from_toml("[train]\npool_cap_buffer_mb = 0\n").is_err()
+        );
+        assert!(TrainConfig::from_toml("[train]\npool_cap_groups = -1\n").is_err());
+        assert!(
+            TrainConfig::from_toml("[train]\npool_cap_buffer_mb = -4\n").is_err()
+        );
+        // Mutually exclusive budgets.
+        assert!(TrainConfig::from_toml(
+            "[train]\npool_cap_groups = 2\npool_cap_buffer_mb = 64\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn group_buffer_zero_rejected_through_toml() {
+        // The validate reject-0 path exercised end-to-end through the
+        // parser, not just on a hand-built struct.
+        assert!(TrainConfig::from_toml("[cluster]\ngroup_buffer_mb = 0\n").is_err());
+        let cfg =
+            TrainConfig::from_toml("[cluster]\ngroup_buffer_mb = 128\n").unwrap();
+        assert_eq!(cfg.cluster.group_buffer_bytes, 128 << 20);
     }
 
     #[test]

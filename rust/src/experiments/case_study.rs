@@ -69,7 +69,7 @@ pub fn compute_case(dataset: DatasetKind, npus: usize, gbs: usize, seed: u64) ->
         // execute against a warm pool (startup creation is not the
         // phenomenon Table 4 isolates).
         let mut pool = crate::parallel::GroupPool::new();
-        super::harness::prewarm_from_schedules(&mut pool, &scheduled);
+        pool.prewarm(scheduled.iter().flat_map(|(_, s)| s.pool_keys()));
         let t = sim
             .execute_iteration(&scheduled, policy.comm_kind(), &mut pool)
             .iter_time_s;

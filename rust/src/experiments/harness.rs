@@ -1,12 +1,15 @@
 //! Shared experiment harness: constructs the cost model / scheduler /
 //! baselines for a (model, dataset, cluster, stage) context and runs
-//! measured training iterations over the simulated cluster, following the
-//! paper's protocol (tune baselines, warm up 5 steps, average 10).
+//! measured training iterations through the [`crate::session::DhpSession`]
+//! façade, following the paper's protocol (tune baselines, warm up 5
+//! steps, average 10). Every policy — DHP and the static baselines —
+//! executes through the SAME session machinery, so results differ only
+//! in scheduling decisions.
 
 use crate::baselines::{
     DeepSpeedUlysses, FlexSp, MegatronStaticCp, SchedulePolicy,
 };
-use crate::cluster::{ClusterSim, CommKind, IterationReport};
+use crate::cluster::ClusterSim;
 use crate::config::presets::ModelPreset;
 use crate::config::{ClusterConfig, TrainStage};
 use crate::cost::{CostCoeffs, CostModel, HardwareSpec, MemoryModel};
@@ -15,7 +18,10 @@ use crate::data::datasets::{DatasetKind, DatasetSampler, TokenizerSpec};
 use crate::data::sequence::Sequence;
 use crate::parallel::mesh::DeviceMesh;
 use crate::scheduler::{Schedule, Scheduler};
+use crate::session::DhpSession;
 use crate::util::stats;
+
+pub use crate::session::{dispatch, DispatchEntry};
 
 /// High-resolution video tokenization used by the cluster experiments
 /// (the paper targets high-res long-context MLLM training): 2 fps ×
@@ -81,6 +87,25 @@ impl ExpContext {
             warmup_steps: 5,
             measure_steps: 10,
             pool_capacity: crate::parallel::PoolCapacity::Unbounded,
+        }
+    }
+
+    /// Context from a parsed run configuration (the TOML
+    /// `[train]`/`[cluster]` file format): model, dataset, cluster
+    /// topology, stage, batch size, protocol steps, and the session's
+    /// pool budget (`pool_cap_groups` / `pool_cap_buffer_mb`) all flow
+    /// through to the sessions this context builds.
+    pub fn from_train_config(cfg: &crate::config::TrainConfig) -> Self {
+        ExpContext {
+            preset: cfg.model.clone(),
+            dataset: cfg.dataset,
+            cluster: cfg.cluster.clone(),
+            stage: cfg.stage,
+            gbs: cfg.gbs,
+            seed: cfg.seed,
+            warmup_steps: cfg.warmup_steps,
+            measure_steps: cfg.measure_steps,
+            pool_capacity: cfg.pool_capacity,
         }
     }
 
@@ -173,11 +198,18 @@ impl ExpContext {
     }
 
     /// Physical replica topology of the context's cluster.
+    ///
+    /// NOTE: builds a FRESH mesh each call — occupancy marked on one
+    /// returned copy is invisible to the next. Cross-step state (mesh
+    /// occupancy, placement hints, the group pool) has exactly one owner:
+    /// the session returned by [`ExpContext::session`].
     pub fn mesh(&self) -> DeviceMesh {
         DeviceMesh::new(&self.cluster)
     }
 
-    /// A fresh cluster simulator for this context.
+    /// A fresh cluster simulator for this context (stateless; see the
+    /// [`ExpContext::mesh`] note — training runs go through
+    /// [`ExpContext::session`]).
     pub fn sim(&self) -> ClusterSim {
         ClusterSim::new(self.preset.clone(), self.stage, self.cluster.clone())
     }
@@ -188,7 +220,10 @@ impl ExpContext {
             .with_spec(experiment_tokenizer())
     }
 
-    /// A fresh DHP scheduler with a calibrated cost model.
+    /// A fresh DHP scheduler with a calibrated cost model. One-shot
+    /// diagnostics only: each call starts with empty placement memory,
+    /// so cross-step `PlacementHint` continuity needs the ONE scheduler
+    /// a [`ExpContext::session`] owns.
     pub fn dhp(&self) -> Scheduler {
         Scheduler::new(self.cost_model(), self.mesh())
     }
@@ -197,6 +232,24 @@ impl ExpContext {
     pub fn micro_batch_planner(&self) -> MicroBatchPlanner {
         let mem = self.memory();
         MicroBatchPlanner::new(self.replicas(), mem.rank_budget(), mem.m_token)
+    }
+
+    /// The one-owner façade for this context: a [`DhpSession`] wrapping
+    /// `policy` with the context's mesh, simulator, micro-batch planner,
+    /// and pool budget. All cross-step state — mesh occupancy, placement
+    /// hints, the communication-group pool — lives inside the returned
+    /// session (the accessors above hand out fresh, stateless builders).
+    pub fn session_for(&self, policy: Box<dyn SchedulePolicy>) -> DhpSession {
+        DhpSession::builder(policy, self.sim())
+            .pool_capacity(self.pool_capacity)
+            .group_buffer_bytes(self.cluster.group_buffer_bytes)
+            .micro_batch_planner(self.micro_batch_planner())
+            .build()
+    }
+
+    /// [`ExpContext::session_for`] with the context's DHP scheduler.
+    pub fn session(&self) -> DhpSession {
+        self.session_for(Box::new(self.dhp()))
     }
 }
 
@@ -249,39 +302,20 @@ pub struct PolicyResult {
     pub pool_buffer_bytes: u64,
 }
 
-/// Prewarm `pool` with every group a set of placed schedules needs (the
-/// paper's warm pool at training start — creation happens before the
-/// measured stream, so it is not runtime traffic).
-pub fn prewarm_from_schedules(
-    pool: &mut crate::parallel::GroupPool,
-    scheduled: &[(Vec<Sequence>, Schedule)],
-) {
-    pool.prewarm(scheduled.iter().flat_map(|(_, s)| {
-        s.waves
-            .iter()
-            .flat_map(|p| p.groups.iter().map(|g| g.pool_key()))
-    }));
-}
-
-/// Run `policy` through the full protocol in `ctx`. One communication-
-/// group pool persists across the whole run (bounded by
-/// `ctx.pool_capacity`); it is prewarmed from the first step's schedule
-/// (the warm pool a real launch establishes before training), so the
-/// measured iterations charge reconfiguration time only for groups the
-/// workload's drift — or capacity eviction — genuinely introduces.
-///
-/// Reconfiguration charging is overlap-aware: the pipeline prepares step
-/// `t`'s groups while step `t−1` computes, so each iteration is charged
-/// only `max(0, serial − prev_compute)` (the serial cost is retained in
-/// [`PolicyResult::mean_reconfig_serial_s`] for the ablation).
+/// Run `policy` through the full protocol in `ctx`, entirely through the
+/// [`DhpSession`] façade: the session owns the run's single
+/// communication-group pool (bounded by `ctx.pool_capacity`), warm-starts
+/// it from the first step's schedules (the warm pool a real launch
+/// establishes before training), and prepares each step's groups with
+/// the previous step's compute as the prewarm-overlap budget, so each
+/// iteration is charged only `max(0, serial − prev_compute)` (the serial
+/// cost is retained in [`PolicyResult::mean_reconfig_serial_s`] for the
+/// ablation).
 pub fn run_policy(ctx: &ExpContext, policy: &dyn SchedulePolicy) -> PolicyResult {
-    let sim = ctx.sim();
-    let planner = ctx.micro_batch_planner();
+    let mut session = ctx.session_for(policy.clone_policy());
     let mut sampler = ctx.sampler();
     let total_steps = ctx.warmup_steps + ctx.measure_steps;
 
-    let mut pool = crate::parallel::GroupPool::with_capacity(ctx.pool_capacity)
-        .with_buffer_bytes_per_rank(ctx.cluster.group_buffer_bytes);
     let mut iter_times = Vec::new();
     let mut tokens_list = Vec::new();
     let mut sched_times = Vec::new();
@@ -291,73 +325,31 @@ pub fn run_policy(ctx: &ExpContext, policy: &dyn SchedulePolicy) -> PolicyResult
     let mut degree_multisets = Vec::new();
     let mut groups_replayed = 0usize;
     let mut groups_placed = 0usize;
-    // The prewarm-overlap budget for step t: step t−1's compute (exec +
-    // grad sync). Step 0 has nothing to hide behind.
-    let mut prev_compute_s = 0.0;
 
     for step in 0..total_steps {
-        let batch = GlobalBatch {
-            step: step as u64,
-            sequences: sampler.sample_batch(ctx.gbs),
-        };
-        let mbs = planner.plan(&batch);
-        let t_sched = std::time::Instant::now();
-        let scheduled: Vec<(Vec<Sequence>, Schedule)> = mbs
-            .iter()
-            .map(|mb| (mb.sequences.clone(), policy.schedule(&mb.sequences)))
-            .collect();
-        // Executor preparation is part of the scheduling phase: per-rank
-        // data dispatch lists (see dispatch()).
-        let mut dispatch_items = 0usize;
-        for (seqs, schedule) in &scheduled {
-            for plan in &schedule.waves {
-                dispatch_items += dispatch(seqs, plan).len();
-            }
-        }
-        let schedule_time = t_sched.elapsed().as_secs_f64();
-        let solver_time: f64 = scheduled
-            .iter()
-            .map(|(_, s)| s.solve_time_s)
-            .sum();
-
-        if step == 0 {
-            prewarm_from_schedules(&mut pool, &scheduled);
-        }
+        let seqs = sampler.sample_batch(ctx.gbs);
         if step == ctx.warmup_steps {
             // Measured window starts here: report hit-rates for the
             // steady state, not the warmup churn.
-            pool.reset_stats();
+            session.reset_pool_stats();
         }
-        let report: IterationReport = sim.execute_iteration_overlapped(
-            &scheduled,
-            policy.comm_kind(),
-            &mut pool,
-            prev_compute_s,
-        );
-        prev_compute_s = report.exec_time_s + report.grad_sync_s;
+        let report = session.step(&seqs);
         if step >= ctx.warmup_steps {
-            iter_times.push(report.iter_time_s);
-            tokens_list.push(report.tokens as f64);
-            sched_times.push(schedule_time);
-            solver_times.push(solver_time);
-            reconfig_per_iter
-                .push((report.reconfig_time_s, report.reconfig_serial_s));
-            idle_fracs.push(stats::mean(
-                &report
-                    .waves
-                    .iter()
-                    .map(|w| w.idle_fraction)
-                    .collect::<Vec<_>>(),
+            iter_times.push(report.iteration.iter_time_s);
+            tokens_list.push(report.iteration.tokens as f64);
+            sched_times.push(report.schedule_time_s);
+            solver_times.push(report.solver_time_s);
+            reconfig_per_iter.push((
+                report.iteration.reconfig_time_s,
+                report.iteration.reconfig_serial_s,
             ));
-            for (_, s) in &scheduled {
+            idle_fracs.push(report.idle_fraction);
+            for s in &report.schedules {
                 degree_multisets.push(s.degree_multiset());
-                for wave in &s.waves {
-                    groups_replayed += wave.replayed_groups;
-                    groups_placed += wave.groups.len();
-                }
             }
+            groups_replayed += report.groups_replayed;
+            groups_placed += report.groups_placed;
         }
-        let _ = dispatch_items;
     }
 
     let total_time: f64 = iter_times.iter().sum();
@@ -366,7 +358,7 @@ pub fn run_policy(ctx: &ExpContext, policy: &dyn SchedulePolicy) -> PolicyResult
     let charged: Vec<f64> = reconfig_per_iter.iter().map(|p| p.0).collect();
     let serial: Vec<f64> = reconfig_per_iter.iter().map(|p| p.1).collect();
     PolicyResult {
-        name: policy.name().to_string(),
+        name: session.policy_name().to_string(),
         mean_iter_s: stats::mean(&iter_times),
         tokens_per_s: total_tokens / total_time,
         tokens_per_s_per_device: total_tokens / total_time / npus as f64,
@@ -382,59 +374,10 @@ pub fn run_policy(ctx: &ExpContext, policy: &dyn SchedulePolicy) -> PolicyResult
         },
         degree_multisets,
         mean_idle_fraction: stats::mean(&idle_fracs),
-        pool: pool.stats(),
-        pool_groups: pool.len(),
-        pool_buffer_bytes: pool.buffer_bytes(),
+        pool: session.pool_stats(),
+        pool_groups: session.pool_groups(),
+        pool_buffer_bytes: session.pool_buffer_bytes(),
     }
-}
-
-/// Per-rank data-dispatch entry: which contiguous token range of which
-/// sequence a rank receives under ring CP (the executor's reallocation
-/// step in Fig. 3; its construction cost is real scheduling-phase work).
-#[derive(Debug, Clone, PartialEq)]
-pub struct DispatchEntry {
-    /// Index of the group within its placed plan.
-    pub group_idx: usize,
-    /// Slot within the group's placed rank set.
-    pub rank_slot: usize,
-    /// Index into the micro-batch's sequence list.
-    pub seq_idx: usize,
-    /// First token (inclusive) of this rank's contiguous chunk.
-    pub token_start: u64,
-    /// One past the last token of this rank's chunk.
-    pub token_end: u64,
-}
-
-/// Build the per-rank dispatch list for one placed plan: each sequence is
-/// split into `degree` contiguous chunks (CP's even sequence
-/// partitioning). `rank_slot` indexes into the group's placed rank set.
-pub fn dispatch(
-    seqs: &[Sequence],
-    plan: &crate::scheduler::PlacedPlan,
-) -> Vec<DispatchEntry> {
-    let mut out = Vec::new();
-    for (gi, g) in plan.groups.iter().enumerate() {
-        let d = g.degree as u64;
-        for &si in &g.seq_idxs {
-            let len = seqs[si].len();
-            let chunk = len.div_ceil(d);
-            for slot in 0..g.degree {
-                let start = slot as u64 * chunk;
-                if start >= len {
-                    break;
-                }
-                let end = (start + chunk).min(len);
-                out.push(DispatchEntry {
-                    group_idx: gi,
-                    rank_slot: slot,
-                    seq_idx: si,
-                    token_start: start,
-                    token_end: end,
-                });
-            }
-        }
-    }
-    out
 }
 
 /// Build the three paper policies for a context, with static degrees
@@ -481,7 +424,7 @@ impl PolicySet {
                 // pool (one-time creation is amortized over a long run,
                 // not attributable to a single trial iteration).
                 let mut pool = crate::parallel::GroupPool::new();
-                prewarm_from_schedules(&mut pool, &scheduled);
+                pool.prewarm(scheduled.iter().flat_map(|(_, s)| s.pool_keys()));
                 let t = sim
                     .execute_iteration(&scheduled, policy.comm_kind(), &mut pool)
                     .iter_time_s;
@@ -554,20 +497,6 @@ impl PolicySet {
 /// FlexSP ablation policy for a context.
 pub fn flexsp(ctx: &ExpContext) -> FlexSp {
     FlexSp::new(ctx.dhp())
-}
-
-impl SchedulePolicy for Scheduler {
-    fn name(&self) -> &'static str {
-        "DHP"
-    }
-
-    fn comm_kind(&self) -> CommKind {
-        CommKind::RingCp
-    }
-
-    fn schedule(&self, seqs: &[Sequence]) -> Schedule {
-        Scheduler::schedule(self, seqs)
-    }
 }
 
 #[cfg(test)]

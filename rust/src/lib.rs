@@ -16,7 +16,10 @@
 //!   communication-group pooling and MPU parallel state ([`parallel`]), a
 //!   discrete-event cluster simulator ([`cluster`]), static-parallelism
 //!   baselines ([`baselines`]), and an asynchronous scheduling pipeline
-//!   ([`scheduler::pipeline`]).
+//!   ([`scheduler::pipeline`]) — all owned end to end by the
+//!   [`session::DhpSession`] façade, which turns Algorithm 1's per-batch
+//!   loop into `session.step(batch)` and feeds live mesh-occupancy
+//!   events ([`session::MeshEvent`]) into the next solve.
 //! * **Layer 2** — a JAX MLLM (vision encoder with full attention →
 //!   connector → causal LM) lowered once, ahead of time, to HLO text
 //!   (`python/compile/`).
@@ -44,6 +47,7 @@ pub mod parallel;
 pub mod report;
 pub mod runtime;
 pub mod scheduler;
+pub mod session;
 pub mod train;
 pub mod util;
 

@@ -162,6 +162,13 @@ impl ParallelState {
         &self.pool
     }
 
+    /// Mutable access to the underlying group pool — the handle
+    /// [`crate::session::DhpSession`] passes to the cluster simulator so
+    /// the prewarm and the execution path charge ONE pool.
+    pub fn pool_mut(&mut self) -> &mut GroupPool {
+        &mut self.pool
+    }
+
     /// Number of groups currently established in the pool.
     pub fn pool_size(&self) -> usize {
         self.pool.len()

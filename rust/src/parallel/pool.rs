@@ -146,6 +146,10 @@ pub struct GroupPool {
     /// [`GroupPool::acquire_wave`] call (a wave's groups are co-live on
     /// the device and must never evict each other). Empty outside it.
     pinned: HashSet<(GroupKind, Vec<RankId>)>,
+    /// While set, an acquire that finds its group resident refreshes the
+    /// LRU position WITHOUT counting a hit (see
+    /// [`GroupPool::set_passive_hits`]). Misses always count.
+    passive_hits: bool,
 }
 
 impl Default for GroupPool {
@@ -160,6 +164,7 @@ impl Default for GroupPool {
             bytes_per_rank: super::group::GROUP_BUFFER_BYTES_PER_RANK,
             evicted: HashSet::new(),
             pinned: HashSet::new(),
+            passive_hits: false,
         }
     }
 }
@@ -234,7 +239,9 @@ impl GroupPool {
         self.clock += 1;
         if let Some(entry) = self.groups.get_mut(&key) {
             entry.last_used = self.clock;
-            self.stats.hits += 1;
+            if !self.passive_hits {
+                self.stats.hits += 1;
+            }
         } else {
             self.stats.misses += 1;
             self.stats.create_time_s += GROUP_CREATE_COST_S;
@@ -352,6 +359,41 @@ impl GroupPool {
         // hit/miss counters nor the creation-time charge (prewarmed pools
         // report zero runtime creation cost).
         self.reset_stats();
+    }
+
+    /// Toggle passive-hit mode, for an EXECUTION phase that re-touches
+    /// groups its prepare phase already acquired: while set, an acquire
+    /// that finds the group resident refreshes its LRU position without
+    /// counting a hit, so pool traffic reflects ONE acquisition per
+    /// group per step (the prepare) and hit-rates stay comparable with a
+    /// prepare-less system. Misses still count fully — a group evicted
+    /// between prepare and execution is an honest, charged re-creation.
+    /// Used by [`crate::session::DhpSession`] around simulator execution.
+    pub fn set_passive_hits(&mut self, passive: bool) {
+        self.passive_hits = passive;
+    }
+
+    /// Tear down every established group whose rank set intersects
+    /// `ranks`. The session calls this when a mesh event surrenders
+    /// ranks to a concurrent job: a communicator spanning a rank this
+    /// job no longer owns is invalid, so its modeled buffers are
+    /// released immediately instead of lingering as phantom footprint.
+    /// Deliberately NOT counted as capacity evictions (and not
+    /// remembered for `evicted_recreations`): re-establishing such a
+    /// group later is a plain miss, not capacity thrash. Returns the
+    /// number of groups torn down.
+    pub fn invalidate_ranks(&mut self, ranks: &[RankId]) -> usize {
+        let doomed: Vec<(GroupKind, Vec<RankId>)> = self
+            .groups
+            .keys()
+            .filter(|(_, members)| members.iter().any(|m| ranks.contains(m)))
+            .cloned()
+            .collect();
+        for key in &doomed {
+            let entry = self.groups.remove(key).unwrap();
+            self.buffer_bytes -= self.group_bytes(entry.group.degree());
+        }
+        doomed.len()
     }
 
     /// Zero the traffic counters while keeping the cached groups (for
@@ -630,6 +672,47 @@ mod tests {
         ]);
         assert_eq!(paid, 0.0);
         assert_eq!(pool.stats().hits, 2);
+    }
+
+    #[test]
+    fn passive_hits_refresh_lru_without_counting() {
+        let mut pool = GroupPool::with_capacity(PoolCapacity::MaxGroups(2));
+        pool.acquire(GroupKind::ContextParallel, vec![0, 1]);
+        pool.acquire(GroupKind::ContextParallel, vec![2, 3]);
+        pool.set_passive_hits(true);
+        pool.acquire(GroupKind::ContextParallel, vec![0, 1]); // silent re-touch
+        assert_eq!(pool.stats().hits, 0, "passive re-touch must not count");
+        assert_eq!(pool.stats().misses, 2);
+        pool.set_passive_hits(false);
+        // …but the LRU refresh was real: [2,3] is now the victim.
+        pool.acquire(GroupKind::ContextParallel, vec![4, 5]);
+        assert!(pool.get(GroupKind::ContextParallel, &[0, 1]).is_some());
+        assert!(pool.get(GroupKind::ContextParallel, &[2, 3]).is_none());
+        // A passive-mode MISS still counts and still pays creation.
+        let mut p2 = GroupPool::new();
+        p2.set_passive_hits(true);
+        p2.acquire(GroupKind::ContextParallel, vec![7, 8]);
+        assert_eq!(p2.stats().misses, 1);
+        assert!(p2.stats().create_time_s > 0.0);
+    }
+
+    #[test]
+    fn invalidate_ranks_tears_down_intersecting_groups_only() {
+        let mut pool = GroupPool::new();
+        pool.acquire(GroupKind::ContextParallel, vec![0, 1]);
+        pool.acquire(GroupKind::ContextParallel, vec![2, 3]);
+        pool.acquire(GroupKind::DataParallel, vec![1, 2]);
+        let bytes_before = pool.buffer_bytes();
+        let torn = pool.invalidate_ranks(&[1]);
+        assert_eq!(torn, 2, "[0,1] and [1,2] span the surrendered rank");
+        assert_eq!(pool.len(), 1);
+        assert!(pool.get(GroupKind::ContextParallel, &[2, 3]).is_some());
+        assert!(pool.buffer_bytes() < bytes_before);
+        // Invalidation is not capacity thrash: no evictions recorded,
+        // and re-establishing the group later is a plain miss.
+        assert_eq!(pool.stats().evictions, 0);
+        pool.acquire(GroupKind::ContextParallel, vec![0, 1]);
+        assert_eq!(pool.stats().evicted_recreations, 0);
     }
 
     #[test]

@@ -78,7 +78,8 @@ COMMANDS:
     schedule          Run the scheduler once on a sampled batch and print
                       the plan (options: --dataset --npus --gbs --seed)
     train             Real e2e training via PJRT artifacts
-                      (options: --steps --artifacts <dir> --log <file>)
+                      (options: --steps --artifacts <dir> --log <file>
+                       --pool-cap <groups, 0 = unbounded>)
     help              Show this help
 
 OPTIONS (common):

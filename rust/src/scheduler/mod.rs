@@ -168,6 +168,22 @@ impl Schedule {
         replayed as f64 / total as f64
     }
 
+    /// Pool keys of every placed group across all waves — the set a
+    /// warm start establishes before the measured stream
+    /// ([`crate::parallel::GroupPool::prewarm`]).
+    pub fn pool_keys(
+        &self,
+    ) -> impl Iterator<
+        Item = (
+            crate::parallel::group::GroupKind,
+            Vec<crate::parallel::group::RankId>,
+        ),
+    > + '_ {
+        self.waves
+            .iter()
+            .flat_map(|p| p.groups.iter().map(|g| g.pool_key()))
+    }
+
     /// Degrees across all waves, descending (Table 4 presentation).
     pub fn degree_multiset(&self) -> Vec<usize> {
         let mut out: Vec<usize> = self

@@ -5,16 +5,25 @@
 //! communication groups" — a producer–consumer pattern that hides the
 //! scheduling latency behind accelerator compute.
 //!
-//! The pipeline owns the MPU-style parallel state: after solving a
-//! batch's PLACED schedule it immediately prepares (prewarms) every
-//! communication group the schedule needs through
-//! [`ParallelState::prepare_schedule`] — one step ahead of execution, so
-//! pool-miss creation cost is paid on this CPU thread while the
-//! accelerator is busy with the previous batch, exactly the paper's
-//! CPU-side overlap. [`ScheduledBatch`] reports that prepare cost as the
-//! FULLY-SERIAL `reconfig_serial_s` (the consumer charges only the
-//! non-hidden remainder after overlap), plus the schedule's hint-replay
-//! rate and the pool's cumulative statistics.
+//! The pipeline drives any [`SchedulePolicy`] (DHP or a baseline) on its
+//! background thread and, in its historical owned-pool mode
+//! ([`SchedulePipeline::spawn_with_pool`]), also owns an MPU-style
+//! parallel state: after solving a batch's PLACED schedule it
+//! immediately prepares (prewarms) every communication group the
+//! schedule needs through [`ParallelState::prepare_schedule`] — one step
+//! ahead of execution, so pool-miss creation cost is paid on this CPU
+//! thread while the accelerator is busy with the previous batch, exactly
+//! the paper's CPU-side overlap. [`ScheduledBatch`] reports that prepare
+//! cost as the FULLY-SERIAL `reconfig_serial_s` (the consumer charges
+//! only the non-hidden remainder after overlap), plus the schedule's
+//! hint-replay rate and the pool's cumulative statistics.
+//!
+//! [`crate::session::DhpSession`] instead spawns the pipeline WITHOUT a
+//! pool ([`SchedulePipeline::spawn_policy`] with `prewarm_pool = None`):
+//! the session owns the run's single communication-group pool, so group
+//! creation is accounted exactly once, and mesh-occupancy changes reach
+//! the policy through the ordered [`SchedulePipeline::sync_mesh`]
+//! control message.
 //!
 //! Built on std threads + mpsc channels (tokio is unavailable offline;
 //! a single scheduling thread matches the paper's design anyway). Solver
@@ -23,22 +32,32 @@
 //! micro-batch onward every solve on this thread reuses warm buffers
 //! instead of allocating (see `scheduler::scratch`).
 
-use std::sync::mpsc::{self, Receiver, SyncSender};
+use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
+use crate::baselines::SchedulePolicy;
 use crate::data::sequence::Sequence;
 use crate::parallel::group::GROUP_BUFFER_BYTES_PER_RANK;
+use crate::parallel::mesh::DeviceMesh;
 use crate::parallel::pool::{PoolCapacity, PoolStats};
 use crate::parallel::ParallelState;
 
 use super::{Schedule, Scheduler};
 
-/// A scheduling request: step id + the micro-batch sequence lengths.
-struct Job {
-    step: u64,
-    seqs: Vec<Sequence>,
-    submitted_at: Instant,
+/// A message to the scheduling thread: either a batch to plan, or a
+/// control update applied in submission order.
+enum Job {
+    /// Plan one micro-batch (step id + the sequence lengths).
+    Schedule {
+        step: u64,
+        seqs: Vec<Sequence>,
+        submitted_at: Instant,
+    },
+    /// Install an updated mesh (occupancy changed mid-run) into the
+    /// policy — and the prewarm MPU, when the pipeline owns one — before
+    /// any subsequently submitted batch is solved.
+    SyncMesh(DeviceMesh),
 }
 
 /// A finished schedule with latency + group-preparation accounting.
@@ -55,7 +74,9 @@ pub struct ScheduledBatch {
     /// CPU thread, so the consumer charges only the non-hidden remainder
     /// `max(0, reconfig_serial_s − prev_step_compute)` — see the trainer's
     /// `reconfig_charged_s` column; this field retains the serial number
-    /// for the overlap ablation.
+    /// for the overlap ablation. Always 0 when the pipeline was spawned
+    /// without a pool (`spawn_policy(.., None)`): the session then owns
+    /// the pool and accounts creation itself.
     pub reconfig_serial_s: f64,
     /// Hint-quality telemetry: fraction of this schedule's groups that
     /// replayed the previous step's rank blocks
@@ -105,35 +126,105 @@ impl SchedulePipeline {
         capacity: PoolCapacity,
         group_buffer_bytes: u64,
     ) -> Self {
+        let mesh = scheduler.mesh.clone();
+        Self::spawn_policy(
+            Box::new(scheduler),
+            mesh,
+            depth,
+            Some((capacity, group_buffer_bytes)),
+        )
+    }
+
+    /// Spawn the scheduling thread around ANY [`SchedulePolicy`] — the
+    /// form [`crate::session::DhpSession`] uses, so DHP and the static
+    /// baselines all flow through the same producer–consumer pipeline.
+    ///
+    /// `mesh` is the physical topology the pipeline-side prewarm
+    /// validates placements against (and the initial mesh the
+    /// [`SchedulePipeline::sync_mesh`] control path updates). With
+    /// `prewarm_pool = Some((capacity, group_buffer_bytes))` the thread
+    /// owns a [`ParallelState`] and prewarms every schedule one step
+    /// ahead (the historical [`SchedulePipeline::spawn_with_pool`]
+    /// behavior); with `None` the thread only solves — the caller (the
+    /// session) owns the single communication-group pool, so creation
+    /// cost is accounted exactly once.
+    pub fn spawn_policy(
+        policy: Box<dyn SchedulePolicy>,
+        mesh: DeviceMesh,
+        depth: usize,
+        prewarm_pool: Option<(PoolCapacity, u64)>,
+    ) -> Self {
         let (tx, job_rx) = mpsc::sync_channel::<Job>(depth.max(1));
         let (done_tx, rx) = mpsc::sync_channel::<ScheduledBatch>(depth.max(1));
         let handle = std::thread::Builder::new()
             .name("dhp-scheduler".into())
             .spawn(move || {
-                // The pipeline's MPU: communication groups are pooled
-                // here, across every batch this thread schedules.
-                let mut mpu = ParallelState::new(scheduler.mesh.clone(), 1, 1)
-                    .with_pool_capacity(capacity)
-                    .with_group_buffer_bytes(group_buffer_bytes);
+                let mut policy = policy;
+                // The pipeline's optional MPU: communication groups are
+                // pooled here, across every batch this thread schedules.
+                let mut mpu = prewarm_pool.map(|(capacity, bytes)| {
+                    ParallelState::new(mesh, 1, 1)
+                        .with_pool_capacity(capacity)
+                        .with_group_buffer_bytes(bytes)
+                });
                 while let Ok(job) = job_rx.recv() {
-                    let schedule = scheduler.schedule(&job.seqs);
+                    let (step, seqs, submitted_at) = match job {
+                        Job::SyncMesh(m) => {
+                            if let Some(mpu) = mpu.as_mut() {
+                                // Ranks newly surrendered to a co-tenant
+                                // invalidate any pooled communicator that
+                                // spans them — same rule as the session
+                                // path, so an owned-pool pipeline never
+                                // carries phantom buffer footprint.
+                                let surrendered: Vec<_> = (0..m.replicas)
+                                    .filter(|&r| {
+                                        !m.is_rank_free(r)
+                                            && mpu.mesh.is_rank_free(r)
+                                    })
+                                    .collect();
+                                if !surrendered.is_empty() {
+                                    mpu.pool_mut()
+                                        .invalidate_ranks(&surrendered);
+                                }
+                                mpu.mesh = m.clone();
+                            }
+                            policy.sync_mesh(&m);
+                            continue;
+                        }
+                        Job::Schedule {
+                            step,
+                            seqs,
+                            submitted_at,
+                        } => (step, seqs, submitted_at),
+                    };
+                    let schedule = policy.schedule(&seqs);
                     // Prepare the groups one step ahead (CPU-side
-                    // overlap). A schedule the scheduler just validated
+                    // overlap). A schedule the policy just validated
                     // cannot fail placement checks; a failure here would
-                    // be a scheduler bug, so surface it loudly.
-                    let evictions_before = mpu.pool_stats().evictions;
-                    let reconfig_serial_s = mpu
-                        .prepare_schedule(&schedule)
-                        .expect("scheduler emitted an invalid placement");
+                    // be a policy bug, so surface it loudly.
+                    let (reconfig_serial_s, evictions, pool) = match mpu.as_mut() {
+                        Some(mpu) => {
+                            let evictions_before = mpu.pool_stats().evictions;
+                            let paid = mpu
+                                .prepare_schedule(&schedule)
+                                .expect("policy emitted an invalid placement");
+                            (
+                                paid,
+                                mpu.pool_stats().evictions - evictions_before,
+                                mpu.pool_stats(),
+                            )
+                        }
+                        None => (0.0, 0, PoolStats::default()),
+                    };
                     let replay_rate = schedule.replay_rate();
                     let out = ScheduledBatch {
-                        step: job.step,
+                        step,
                         schedule,
-                        schedule_latency_s: job.submitted_at.elapsed().as_secs_f64(),
+                        schedule_latency_s: submitted_at.elapsed().as_secs_f64(),
                         reconfig_serial_s,
                         replay_rate,
-                        evictions: mpu.pool_stats().evictions - evictions_before,
-                        pool: mpu.pool_stats(),
+                        evictions,
+                        pool,
                     };
                     if done_tx.send(out).is_err() {
                         break; // consumer gone
@@ -154,11 +245,48 @@ impl SchedulePipeline {
         self.tx
             .as_ref()
             .expect("pipeline closed")
-            .send(Job {
+            .send(Job::Schedule {
                 step,
                 seqs,
                 submitted_at: Instant::now(),
             })
+            .expect("scheduler thread died");
+    }
+
+    /// Non-blocking [`SchedulePipeline::submit`]: returns the sequences
+    /// back when the job channel is full so the caller can retry later
+    /// (the session's deadlock-free submission pump). Panics, like
+    /// `submit`, if the scheduling thread died.
+    pub fn try_submit(
+        &self,
+        step: u64,
+        seqs: Vec<Sequence>,
+    ) -> Result<(), Vec<Sequence>> {
+        let job = Job::Schedule {
+            step,
+            seqs,
+            submitted_at: Instant::now(),
+        };
+        match self.tx.as_ref().expect("pipeline closed").try_send(job) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(Job::Schedule { seqs, .. })) => Err(seqs),
+            Err(TrySendError::Full(Job::SyncMesh(_))) => {
+                unreachable!("try_submit only enqueues Schedule jobs")
+            }
+            Err(TrySendError::Disconnected(_)) => panic!("scheduler thread died"),
+        }
+    }
+
+    /// Install an updated mesh into the scheduling thread. Ordered with
+    /// submissions: batches submitted after this call are solved against
+    /// the new occupancy, batches already in flight keep the old view —
+    /// which is why [`crate::session::DhpSession::apply`] requires the
+    /// pipeline to be drained first.
+    pub fn sync_mesh(&self, mesh: DeviceMesh) {
+        self.tx
+            .as_ref()
+            .expect("pipeline closed")
+            .send(Job::SyncMesh(mesh))
             .expect("scheduler thread died");
     }
 

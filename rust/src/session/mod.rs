@@ -1,0 +1,1009 @@
+//! `DhpSession` — ONE façade from batch to iteration report.
+//!
+//! DHP's core claim is that the *whole* parallelism lifecycle — strategy
+//! search, group reconfiguration, execution — adapts per batch (paper
+//! §4–§5, Algorithm 1's per-batch loop). Before this module existed that
+//! lifecycle was hand-wired at every call site: a [`Scheduler`] (or
+//! baseline policy), a [`SchedulePipeline`], a budgeted
+//! [`GroupPool`]/[`ParallelState`], a [`ClusterSim`], and the
+//! prewarm-slack bookkeeping that makes reconfiguration charging
+//! overlap-aware. [`DhpSession`] owns all of it behind two calls:
+//!
+//! * [`DhpSession::step`] — plan the batch into micro-batches, solve each
+//!   on the background scheduling thread, **prewarm** the placed groups
+//!   through the session's single communication-group pool
+//!   (eviction-aware ordering), **execute** the iteration on the cluster
+//!   simulator with overlap-aware reconfiguration charging, and return
+//!   everything in one [`StepReport`] (schedules, iteration report,
+//!   charged ≤ serial reconfiguration, replay/eviction telemetry, the
+//!   fabric fingerprint the step solved under).
+//! * [`DhpSession::apply`] — feed live [`MeshEvent`]s (`Occupy`/`Release`
+//!   from an external resource manager — elastic co-tenancy) between
+//!   steps. The session re-snapshots its authoritative mesh into the
+//!   policy, the prewarm state, and the simulator, so mid-run
+//!   fragmentation flows into the very next solve.
+//!
+//! For real trainers whose compute runs outside the simulator (the PJRT
+//! loop in [`crate::train::trainer`]), [`DhpSession::prefetch`] +
+//! [`DhpSession::step_prefetched`] split the step so the next batch's
+//! schedule is produced on the CPU thread while the current batch's
+//! gradients compute — the paper's producer–consumer overlap — with the
+//! measured compute span passed back as the prewarm-overlap budget.
+//!
+//! Every policy (DHP and the Megatron/DeepSpeed/FlexSP baselines) drives
+//! the same session machinery via the [`SchedulePolicy`] trait, so
+//! policy comparisons differ ONLY in scheduling decisions.
+//!
+//! # Example
+//!
+//! ```
+//! use dhp::cluster::ClusterSim;
+//! use dhp::config::presets::by_name;
+//! use dhp::config::{ClusterConfig, TrainStage};
+//! use dhp::cost::{CostCoeffs, CostModel, HardwareSpec, MemoryModel};
+//! use dhp::data::sequence::Sequence;
+//! use dhp::parallel::DeviceMesh;
+//! use dhp::scheduler::Scheduler;
+//! use dhp::session::DhpSession;
+//!
+//! let cluster = ClusterConfig::default().with_npus(8);
+//! let preset = by_name("InternVL3-2B").unwrap();
+//! let cost = CostModel {
+//!     coeffs: CostCoeffs::analytic(
+//!         &preset,
+//!         TrainStage::Full,
+//!         &HardwareSpec::default(),
+//!     ),
+//!     memory: MemoryModel {
+//!         e_bytes: 8192.0 * preset.act_bytes_per_token() + 1e9,
+//!         m_states: 1e9,
+//!         m_token: preset.act_bytes_per_token(),
+//!     },
+//! };
+//! let scheduler = Scheduler::new(cost, DeviceMesh::new(&cluster));
+//! let sim = ClusterSim::new(preset, TrainStage::Full, cluster);
+//!
+//! // The whole lifecycle behind one constructor...
+//! let mut session = DhpSession::builder(Box::new(scheduler), sim).build();
+//!
+//! // ...and one call per training step.
+//! let batch: Vec<Sequence> =
+//!     (0..4).map(|i| Sequence::new(i, 2048 * (i + 1), 256)).collect();
+//! let report = session.step(&batch);
+//! assert_eq!(report.step, 0);
+//! assert!(report.iteration.iter_time_s > 0.0);
+//! // The overlap-charging invariant holds through the façade.
+//! assert!(
+//!     report.iteration.reconfig_time_s
+//!         <= report.iteration.reconfig_serial_s
+//! );
+//! ```
+
+use std::collections::VecDeque;
+use std::hash::{Hash, Hasher};
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::baselines::SchedulePolicy;
+use crate::cluster::{ClusterSim, CommKind, IterationReport};
+use crate::data::batch::GlobalBatch;
+use crate::data::batch::MicroBatchPlanner;
+use crate::data::sequence::Sequence;
+use crate::parallel::mesh::DeviceMesh;
+use crate::parallel::pool::{PoolCapacity, PoolStats};
+use crate::parallel::{ParallelState, RankId};
+use crate::scheduler::pipeline::{ScheduledBatch, SchedulePipeline};
+use crate::scheduler::{FabricKind, FabricModel, Schedule};
+
+#[allow(unused_imports)] // doc links
+use crate::parallel::GroupPool;
+#[allow(unused_imports)] // doc links
+use crate::scheduler::Scheduler;
+
+/// A mid-run mesh-ownership change delivered by an external resource
+/// manager (elastic co-tenancy): apply between steps via
+/// [`DhpSession::apply`]. Occupied ranks become invisible to placement
+/// and to the fabric oracle's free-slot census from the next solve on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MeshEvent {
+    /// Ranks claimed by a concurrent job or held back by the resource
+    /// manager.
+    Occupy(Vec<RankId>),
+    /// Previously occupied ranks returned to this job.
+    Release(Vec<RankId>),
+}
+
+/// Everything one training step produced, in one struct: the placed
+/// schedules, the simulated iteration (with overlap-aware
+/// reconfiguration charging), and the session's pool/replay telemetry.
+#[derive(Debug, Clone)]
+pub struct StepReport {
+    /// Step index within the session (0-based, submission order).
+    pub step: u64,
+    /// The placed schedule of every micro-batch, in plan order.
+    pub schedules: Vec<Schedule>,
+    /// Number of micro-batches the batch was planned into.
+    pub micro_batches: usize,
+    /// Wall-clock of the full scheduling phase: micro-batch planning +
+    /// submission (inside [`DhpSession::prefetch`]) plus the solve-drain
+    /// and executor preparation (per-rank dispatch lists) in
+    /// [`DhpSession::step_prefetched`] — Tables 1–2 "Schedule Time". Any
+    /// caller compute overlapped between prefetch and execution is NOT
+    /// counted. Wall-clock: excluded from [`StepReport::digest`].
+    pub schedule_time_s: f64,
+    /// Σ pipeline-reported scheduling latency over the micro-batches
+    /// (submit → schedule ready; with [`DhpSession::prefetch`] this span
+    /// runs concurrently with the caller's compute). Wall-clock:
+    /// excluded from [`StepReport::digest`].
+    pub schedule_latency_s: f64,
+    /// Σ pure solver wall-clock over the micro-batches (packing + DP +
+    /// placement). Wall-clock: excluded from [`StepReport::digest`].
+    pub solver_time_s: f64,
+    /// Per-rank data-dispatch entries built for this step (the
+    /// executor-preparation work the scheduling phase pays for).
+    pub dispatch_items: usize,
+    /// Semantic identity of the fabric oracle this step was solved under
+    /// ([`FabricModel::fingerprint`]): changes exactly when a mesh event
+    /// (or any occupancy change) alters some bandwidth answer.
+    pub fabric_fingerprint: u64,
+    /// Groups placed across all waves of all micro-batches.
+    pub groups_placed: usize,
+    /// Of those, groups whose rank block replayed the previous step's
+    /// placement (they key into already-pooled communicators).
+    pub groups_replayed: usize,
+    /// `groups_replayed / groups_placed` (0 with no groups).
+    pub replay_rate: f64,
+    /// The executed iteration: wave reports, exec + grad-sync time, and
+    /// reconfiguration charging where `reconfig_time_s` is the
+    /// non-hidden remainder `max(0, serial − slack)` and
+    /// `reconfig_serial_s` covers ALL of this step's group creation
+    /// (session prewarm + any execution-time re-creation).
+    pub iteration: IterationReport,
+    /// Mean idle fraction over the iteration's waves (Fig. 2
+    /// diagnostics; 0 for an empty iteration).
+    pub idle_fraction: f64,
+    /// Groups evicted from the session pool during this step (0 on the
+    /// default unbounded pool).
+    pub evictions: u64,
+    /// Cumulative pool statistics since the last
+    /// [`DhpSession::reset_pool_stats`] (or session start).
+    pub pool: PoolStats,
+    /// Groups established in the session pool after this step.
+    pub pool_groups: usize,
+    /// Modeled communicator-buffer bytes those groups pin.
+    pub pool_buffer_bytes: u64,
+}
+
+impl StepReport {
+    /// Deterministic digest of the step's *semantic* content: placements,
+    /// degrees, estimates, the iteration's simulated times, and the pool
+    /// counters — everything except wall-clock measurements. Two runs of
+    /// the same session inputs (same seed, same batches, same
+    /// [`MeshEvent`] trace) produce bit-identical digests; the
+    /// determinism regression test relies on this.
+    pub fn digest(&self) -> u64 {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        self.step.hash(&mut h);
+        self.fabric_fingerprint.hash(&mut h);
+        self.micro_batches.hash(&mut h);
+        self.dispatch_items.hash(&mut h);
+        self.groups_placed.hash(&mut h);
+        self.groups_replayed.hash(&mut h);
+        for s in &self.schedules {
+            s.est_time_s.to_bits().hash(&mut h);
+            s.search_est_time_s.to_bits().hash(&mut h);
+            for w in &s.waves {
+                w.est_makespan_s.to_bits().hash(&mut h);
+                w.replayed_groups.hash(&mut h);
+                for g in &w.groups {
+                    g.degree.hash(&mut h);
+                    g.ranks.hash(&mut h);
+                    g.seq_idxs.hash(&mut h);
+                    g.est_time_s.to_bits().hash(&mut h);
+                    g.ring_bw.to_bits().hash(&mut h);
+                }
+            }
+        }
+        let it = &self.iteration;
+        it.tokens.hash(&mut h);
+        it.exec_time_s.to_bits().hash(&mut h);
+        it.grad_sync_s.to_bits().hash(&mut h);
+        it.reconfig_time_s.to_bits().hash(&mut h);
+        it.reconfig_serial_s.to_bits().hash(&mut h);
+        it.iter_time_s.to_bits().hash(&mut h);
+        for w in &it.waves {
+            w.makespan_s.to_bits().hash(&mut h);
+            w.idle_fraction.to_bits().hash(&mut h);
+        }
+        self.pool.hits.hash(&mut h);
+        self.pool.misses.hash(&mut h);
+        self.pool.evictions.hash(&mut h);
+        self.pool.evicted_recreations.hash(&mut h);
+        self.pool.create_time_s.to_bits().hash(&mut h);
+        self.evictions.hash(&mut h);
+        self.pool_groups.hash(&mut h);
+        self.pool_buffer_bytes.hash(&mut h);
+        h.finish()
+    }
+}
+
+/// Builder for [`DhpSession`]: policy + simulator are mandatory, every
+/// budget/behavior knob has the seed default.
+pub struct SessionBuilder {
+    policy: Box<dyn SchedulePolicy>,
+    sim: ClusterSim,
+    pool_capacity: PoolCapacity,
+    group_buffer_bytes: u64,
+    planner: Option<MicroBatchPlanner>,
+    depth: usize,
+    warm_start: bool,
+}
+
+impl SessionBuilder {
+    /// Start a session over `sim`'s cluster driven by `policy`. The
+    /// simulator's mesh becomes the session's single authoritative
+    /// topology: it is pushed into the policy at build time (and after
+    /// every [`DhpSession::apply`]), so solver, prewarm, and execution
+    /// always share one view. The cluster's configured
+    /// `group_buffer_bytes` seeds the pool's buffer model.
+    pub fn new(policy: Box<dyn SchedulePolicy>, sim: ClusterSim) -> Self {
+        SessionBuilder {
+            policy,
+            group_buffer_bytes: sim.cluster.group_buffer_bytes,
+            sim,
+            pool_capacity: PoolCapacity::Unbounded,
+            planner: None,
+            depth: 2,
+            warm_start: true,
+        }
+    }
+
+    /// Budget the session's communication-group pool (LRU eviction on
+    /// overflow; default unbounded — the seed behavior).
+    pub fn pool_capacity(mut self, capacity: PoolCapacity) -> Self {
+        self.pool_capacity = capacity;
+        self
+    }
+
+    /// Model the per-member-rank communicator buffer footprint the pool's
+    /// byte accounting charges
+    /// ([`crate::config::ClusterConfig::group_buffer_bytes`]).
+    pub fn group_buffer_bytes(mut self, bytes: u64) -> Self {
+        self.group_buffer_bytes = bytes;
+        self
+    }
+
+    /// Plan each [`DhpSession::step`] batch into memory-feasible
+    /// micro-batches first (the experiment-harness protocol). Without a
+    /// planner the whole batch is one micro-batch (the trainer's shape).
+    pub fn micro_batch_planner(mut self, planner: MicroBatchPlanner) -> Self {
+        self.planner = Some(planner);
+        self
+    }
+
+    /// Depth of the background scheduling pipeline's channels (how many
+    /// batches may be in flight; default 2 — one step of lookahead).
+    pub fn pipeline_depth(mut self, depth: usize) -> Self {
+        self.depth = depth.max(1);
+        self
+    }
+
+    /// Prewarm the pool from the FIRST step's schedules before executing
+    /// it (the warm pool a real launch establishes before training —
+    /// creation then happens outside the measured stream). Default on;
+    /// the real trainer turns it off to surface step 0's creation cost.
+    pub fn warm_start(mut self, warm: bool) -> Self {
+        self.warm_start = warm;
+        self
+    }
+
+    /// Spawn the scheduling thread and assemble the session.
+    pub fn build(self) -> DhpSession {
+        let mesh = self.sim.mesh.clone();
+        let mut policy = self.policy;
+        // One topology owner from the first solve on.
+        policy.sync_mesh(&mesh);
+        let name = policy.name();
+        let comm = policy.comm_kind();
+        // The policy is the single source of truth for which bandwidth
+        // oracle solves run under; the session only echoes its identity.
+        let fabric = policy.fabric_kind();
+        // The pipeline solves only — the session owns the ONE pool, so
+        // group creation is charged exactly once.
+        let pipe = SchedulePipeline::spawn_policy(policy, mesh.clone(), self.depth, None);
+        let mpu = ParallelState::new(mesh, 1, 1)
+            .with_pool_capacity(self.pool_capacity)
+            .with_group_buffer_bytes(self.group_buffer_bytes);
+        DhpSession {
+            pipe,
+            sim: self.sim,
+            mpu,
+            planner: self.planner,
+            fabric,
+            comm,
+            name,
+            warm_start: self.warm_start,
+            executed: 0,
+            next_step: 0,
+            job_seq: 0,
+            prev_compute_s: 0.0,
+            unsubmitted: VecDeque::new(),
+            pending: VecDeque::new(),
+        }
+    }
+}
+
+/// A batch whose scheduling is in flight (prefetched but not yet
+/// executed).
+struct PendingStep {
+    step: u64,
+    first_job: u64,
+    mbs: Vec<Vec<Sequence>>,
+    received: Vec<ScheduledBatch>,
+    /// Scheduling-phase wall-clock already spent on this step inside
+    /// `prefetch` (micro-batch planning + submission). The drain span in
+    /// `step_prefetched` is added on top — the caller's own compute
+    /// between the two calls is deliberately NOT counted.
+    sched_span_s: f64,
+}
+
+/// The session façade: owns the mesh, the scheduling pipeline, the
+/// communication-group pool, and the cluster simulator for one training
+/// run. See the [module docs](self) for the lifecycle it unifies.
+pub struct DhpSession {
+    pipe: SchedulePipeline,
+    sim: ClusterSim,
+    /// Authoritative mesh + the run's single group pool.
+    mpu: ParallelState,
+    planner: Option<MicroBatchPlanner>,
+    fabric: FabricKind,
+    comm: CommKind,
+    name: &'static str,
+    warm_start: bool,
+    /// Steps executed so far (warm start applies to the first).
+    executed: u64,
+    /// Next step index to assign at prefetch time.
+    next_step: u64,
+    /// Next pipeline job id (one job per micro-batch, FIFO).
+    job_seq: u64,
+    /// Previous step's simulated compute (exec + grad sync) — the
+    /// default prewarm-overlap budget for [`DhpSession::step`].
+    prev_compute_s: f64,
+    /// Micro-batch jobs not yet accepted by the pipeline's bounded
+    /// channel, pumped opportunistically (deadlock-free submission).
+    unsubmitted: VecDeque<(u64, Vec<Sequence>)>,
+    /// Prefetched steps awaiting execution, oldest first.
+    pending: VecDeque<PendingStep>,
+}
+
+impl DhpSession {
+    /// Start building a session (see [`SessionBuilder::new`]).
+    pub fn builder(policy: Box<dyn SchedulePolicy>, sim: ClusterSim) -> SessionBuilder {
+        SessionBuilder::new(policy, sim)
+    }
+
+    /// Display name of the driving policy ("DHP", "Megatron-LM", …).
+    pub fn policy_name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Communication pattern the policy's groups execute with.
+    pub fn comm_kind(&self) -> CommKind {
+        self.comm
+    }
+
+    /// The session's authoritative mesh (occupancy reflects every applied
+    /// [`MeshEvent`]).
+    pub fn mesh(&self) -> &DeviceMesh {
+        &self.mpu.mesh
+    }
+
+    /// Cumulative pool statistics since the last
+    /// [`DhpSession::reset_pool_stats`].
+    pub fn pool_stats(&self) -> PoolStats {
+        self.mpu.pool_stats()
+    }
+
+    /// Groups currently established in the session pool.
+    pub fn pool_groups(&self) -> usize {
+        self.mpu.pool_size()
+    }
+
+    /// Modeled communicator-buffer bytes the pool currently pins.
+    pub fn pool_buffer_bytes(&self) -> u64 {
+        self.mpu.pool_buffer_bytes()
+    }
+
+    /// Zero the pool's traffic counters while keeping the cached groups
+    /// (the measured-window boundary of the paper's protocol).
+    pub fn reset_pool_stats(&mut self) {
+        self.mpu.pool_mut().reset_stats();
+    }
+
+    /// Semantic identity of the fabric oracle the NEXT solve runs under
+    /// ([`FabricModel::fingerprint`]): mesh events that change any
+    /// bandwidth answer change this value.
+    pub fn fabric_fingerprint(&self) -> u64 {
+        match self.fabric {
+            FabricKind::Uniform => FabricModel::uniform(&self.mpu.mesh).fingerprint(),
+            FabricKind::MeshBacked => {
+                FabricModel::mesh_backed(&self.mpu.mesh, None).fingerprint()
+            }
+        }
+    }
+
+    /// Submit as many queued micro-batch jobs as the pipeline's bounded
+    /// channel accepts right now (never blocks — the submit/recv
+    /// interleaving in [`DhpSession::step_prefetched`] guarantees
+    /// progress for batches of any size at any pipeline depth).
+    fn pump(&mut self) {
+        while let Some((id, seqs)) = self.unsubmitted.pop_front() {
+            if let Err(seqs) = self.pipe.try_submit(id, seqs) {
+                self.unsubmitted.push_front((id, seqs));
+                break;
+            }
+        }
+    }
+
+    /// Hand the next batch to the background scheduling thread WITHOUT
+    /// waiting for the result — the real trainer calls this before
+    /// computing the current step's gradients, so scheduling latency
+    /// hides behind compute (paper §5's producer–consumer overlap).
+    /// Execute it later with [`DhpSession::step_prefetched`]; prefetched
+    /// steps execute in submission order.
+    pub fn prefetch(&mut self, seqs: &[Sequence]) {
+        let t0 = Instant::now();
+        let step = self.next_step;
+        self.next_step += 1;
+        let mbs: Vec<Vec<Sequence>> = match &self.planner {
+            Some(planner) => planner
+                .plan(&GlobalBatch {
+                    step,
+                    sequences: seqs.to_vec(),
+                })
+                .into_iter()
+                .map(|mb| mb.sequences)
+                .collect(),
+            None => vec![seqs.to_vec()],
+        };
+        let first_job = self.job_seq;
+        for mb in &mbs {
+            self.unsubmitted.push_back((self.job_seq, mb.clone()));
+            self.job_seq += 1;
+        }
+        self.pending.push_back(PendingStep {
+            step,
+            first_job,
+            mbs,
+            received: Vec::new(),
+            sched_span_s: 0.0,
+        });
+        self.pump();
+        if let Some(pending) = self.pending.back_mut() {
+            pending.sched_span_s = t0.elapsed().as_secs_f64();
+        }
+    }
+
+    /// Run one full training step: schedule → prewarm → execute →
+    /// report. The prewarm-overlap budget is the previous step's
+    /// simulated compute (exec + grad sync), matching the experiment
+    /// protocol; step 0 has nothing to hide behind. Panics if batches
+    /// are still pending from [`DhpSession::prefetch`] — drain those
+    /// with [`DhpSession::step_prefetched`] first.
+    pub fn step(&mut self, seqs: &[Sequence]) -> StepReport {
+        let slack = self.prev_compute_s;
+        self.step_overlapped(seqs, slack)
+    }
+
+    /// [`DhpSession::step`] with a caller-supplied prewarm-overlap budget
+    /// (e.g. a real trainer's measured compute span). Reconfiguration is
+    /// charged `max(0, serial − slack)`.
+    pub fn step_overlapped(&mut self, seqs: &[Sequence], prewarm_slack_s: f64) -> StepReport {
+        assert!(
+            self.pending.is_empty(),
+            "{} prefetched batch(es) pending — drain them with step_prefetched() \
+             before calling step()",
+            self.pending.len()
+        );
+        self.prefetch(seqs);
+        self.step_prefetched(prewarm_slack_s)
+            .expect("a batch was just prefetched")
+    }
+
+    /// Execute the OLDEST prefetched batch (`None` if nothing is
+    /// prefetched): wait for its schedules, prewarm their groups through
+    /// the session pool (eviction-aware ordering), execute the iteration
+    /// on the simulator, and charge reconfiguration
+    /// `max(0, serial − prewarm_slack_s)` — `prewarm_slack_s` is the
+    /// compute span the caller overlapped the prepare with (a real
+    /// trainer passes its previous step's measured compute).
+    pub fn step_prefetched(&mut self, prewarm_slack_s: f64) -> Option<StepReport> {
+        let mut pending = self.pending.pop_front()?;
+        let t_drain = Instant::now();
+        // Drain this step's schedules, re-pumping submissions as channel
+        // capacity frees up (deadlock-free for any micro-batch count).
+        while pending.received.len() < pending.mbs.len() {
+            self.pump();
+            let sb = self.pipe.recv().expect("scheduler pipeline closed");
+            debug_assert_eq!(
+                sb.step,
+                pending.first_job + pending.received.len() as u64,
+                "pipeline results out of order"
+            );
+            pending.received.push(sb);
+        }
+        // Keep any later prefetched step flowing in the background.
+        self.pump();
+
+        let schedule_latency_s: f64 =
+            pending.received.iter().map(|b| b.schedule_latency_s).sum();
+        let scheduled: Vec<(Vec<Sequence>, Schedule)> = pending
+            .mbs
+            .into_iter()
+            .zip(pending.received.into_iter().map(|b| b.schedule))
+            .collect();
+        let solver_time_s: f64 = scheduled.iter().map(|(_, s)| s.solve_time_s).sum();
+        // Executor preparation is part of the scheduling phase: per-rank
+        // data dispatch lists.
+        let mut dispatch_items = 0usize;
+        for (seqs, schedule) in &scheduled {
+            for plan in &schedule.waves {
+                dispatch_items += dispatch(seqs, plan).len();
+            }
+        }
+        // Scheduling phase = the prefetch span (planning + submission)
+        // plus this drain + executor-preparation span. Compute the
+        // caller overlapped between prefetch and this call is NOT
+        // scheduling time.
+        let schedule_time_s = pending.sched_span_s + t_drain.elapsed().as_secs_f64();
+
+        if self.executed == 0 && self.warm_start {
+            // The warm pool a real launch establishes before training:
+            // creation happens before the measured stream (prewarm also
+            // zeroes the traffic counters).
+            self.mpu
+                .pool_mut()
+                .prewarm(scheduled.iter().flat_map(|(_, s)| s.pool_keys()));
+        }
+        let stats_before = self.mpu.pool_stats();
+        // Prewarm every wave through the session pool (reverse-wave order
+        // under a capacity cap, so the groups needed soonest stay
+        // LRU-warmest). A schedule the policy just validated cannot fail
+        // placement checks; a failure here is a policy bug.
+        for (_, schedule) in &scheduled {
+            self.mpu
+                .prepare_schedule(schedule)
+                .expect("policy emitted an invalid placement");
+        }
+        let prewarm_serial_s =
+            self.mpu.pool_stats().create_time_s - stats_before.create_time_s;
+        // Execute with slack 0 — the session charges overlap itself,
+        // against the TOTAL serial cost (prewarm + any execution-time
+        // re-creation a tight pool cap forces). Execution re-touches the
+        // groups the prepare just acquired, so it runs in passive-hit
+        // mode: pool traffic counts ONE acquisition per group per step
+        // (hit-rates stay comparable with the prepare-less seed
+        // accounting) while an eviction-forced re-creation still counts
+        // as a charged miss.
+        self.mpu.pool_mut().set_passive_hits(true);
+        let pool = self.mpu.pool_mut();
+        let mut iteration =
+            self.sim
+                .execute_iteration_overlapped(&scheduled, self.comm, pool, 0.0);
+        self.mpu.pool_mut().set_passive_hits(false);
+        let serial = prewarm_serial_s + iteration.reconfig_serial_s;
+        let charged = (serial - prewarm_slack_s.max(0.0)).max(0.0);
+        iteration.reconfig_serial_s = serial;
+        iteration.reconfig_time_s = charged;
+        iteration.iter_time_s = iteration.exec_time_s + iteration.grad_sync_s + charged;
+        self.prev_compute_s = iteration.exec_time_s + iteration.grad_sync_s;
+        self.executed += 1;
+
+        let (mut groups_placed, mut groups_replayed) = (0usize, 0usize);
+        for (_, s) in &scheduled {
+            for w in &s.waves {
+                groups_placed += w.groups.len();
+                groups_replayed += w.replayed_groups;
+            }
+        }
+        let idle_fraction = if iteration.waves.is_empty() {
+            0.0
+        } else {
+            iteration.waves.iter().map(|w| w.idle_fraction).sum::<f64>()
+                / iteration.waves.len() as f64
+        };
+        let pool_stats = self.mpu.pool_stats();
+        let schedules: Vec<Schedule> = scheduled.into_iter().map(|(_, s)| s).collect();
+        Some(StepReport {
+            step: pending.step,
+            micro_batches: schedules.len(),
+            schedule_time_s,
+            schedule_latency_s,
+            solver_time_s,
+            dispatch_items,
+            fabric_fingerprint: self.fabric_fingerprint(),
+            groups_placed,
+            groups_replayed,
+            replay_rate: if groups_placed == 0 {
+                0.0
+            } else {
+                groups_replayed as f64 / groups_placed as f64
+            },
+            idle_fraction,
+            evictions: pool_stats.evictions - stats_before.evictions,
+            pool: pool_stats,
+            pool_groups: self.mpu.pool_size(),
+            pool_buffer_bytes: self.mpu.pool_buffer_bytes(),
+            iteration,
+            schedules,
+        })
+    }
+
+    /// Apply a live mesh-event trace between steps (the ROADMAP "live
+    /// occupancy feed"): validate the whole trace against a scratch
+    /// mesh — an invalid trace leaves the session untouched — then
+    /// commit it to the session's mesh, the simulator, and (through the
+    /// ordered pipeline control channel) the scheduling policy, so the
+    /// next solve prices the new fragmentation.
+    ///
+    /// Errors if batches are still prefetched (their schedules would mix
+    /// old and new topology), on out-of-range ranks, on occupying an
+    /// already-occupied rank (or releasing a free one), or if the trace
+    /// would leave zero free replicas.
+    pub fn apply(&mut self, events: &[MeshEvent]) -> Result<()> {
+        ensure!(
+            self.pending.is_empty() && self.unsubmitted.is_empty(),
+            "apply() must run between steps: {} prefetched batch(es) still pending",
+            self.pending.len()
+        );
+        let mut mesh = self.mpu.mesh.clone();
+        for (i, event) in events.iter().enumerate() {
+            match event {
+                MeshEvent::Occupy(ranks) => {
+                    for &r in ranks {
+                        ensure!(
+                            r < mesh.replicas,
+                            "event {i}: occupy rank {r} out of range \
+                             (mesh has {} replicas)",
+                            mesh.replicas
+                        );
+                        ensure!(
+                            mesh.is_rank_free(r),
+                            "event {i}: occupy rank {r} — already occupied"
+                        );
+                        mesh.occupy(&[r]);
+                    }
+                }
+                MeshEvent::Release(ranks) => {
+                    for &r in ranks {
+                        ensure!(
+                            r < mesh.replicas,
+                            "event {i}: release rank {r} out of range \
+                             (mesh has {} replicas)",
+                            mesh.replicas
+                        );
+                        ensure!(
+                            !mesh.is_rank_free(r),
+                            "event {i}: release rank {r} — not occupied"
+                        );
+                        mesh.release(&[r]);
+                    }
+                }
+            }
+        }
+        ensure!(
+            mesh.free_replicas() > 0,
+            "mesh-event trace leaves no free replicas to schedule onto"
+        );
+        // A communicator spanning a surrendered rank is invalid the
+        // moment the co-tenant takes it: tear those groups down so the
+        // pool's residency and buffer accounting never report phantom
+        // footprint on devices this job no longer owns (and a
+        // BufferBytes budget is not consumed by dead groups).
+        // "Surrendered" is the NET free→occupied transition across the
+        // whole trace — the same rule the pipeline's owned-pool
+        // SyncMesh path applies — so a trace that occupies and releases
+        // the same rank is a topology no-op and tears nothing down.
+        let surrendered: Vec<RankId> = (0..mesh.replicas)
+            .filter(|&r| !mesh.is_rank_free(r) && self.mpu.mesh.is_rank_free(r))
+            .collect();
+        self.mpu.mesh = mesh.clone();
+        self.sim.mesh = mesh.clone();
+        self.pipe.sync_mesh(mesh);
+        if !surrendered.is_empty() {
+            self.mpu.pool_mut().invalidate_ranks(&surrendered);
+        }
+        Ok(())
+    }
+
+    /// Close the submission side and join the scheduling thread
+    /// (dropping the session does the same).
+    pub fn shutdown(self) {
+        self.pipe.shutdown();
+    }
+}
+
+/// Per-rank data-dispatch entry: which contiguous token range of which
+/// sequence a rank receives under ring CP (the executor's reallocation
+/// step in Fig. 3; its construction cost is real scheduling-phase work).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DispatchEntry {
+    /// Index of the group within its placed plan.
+    pub group_idx: usize,
+    /// Slot within the group's placed rank set.
+    pub rank_slot: usize,
+    /// Index into the micro-batch's sequence list.
+    pub seq_idx: usize,
+    /// First token (inclusive) of this rank's contiguous chunk.
+    pub token_start: u64,
+    /// One past the last token of this rank's chunk.
+    pub token_end: u64,
+}
+
+/// Build the per-rank dispatch list for one placed plan: each sequence is
+/// split into `degree` contiguous chunks (CP's even sequence
+/// partitioning). `rank_slot` indexes into the group's placed rank set.
+pub fn dispatch(
+    seqs: &[Sequence],
+    plan: &crate::scheduler::PlacedPlan,
+) -> Vec<DispatchEntry> {
+    let mut out = Vec::new();
+    for (gi, g) in plan.groups.iter().enumerate() {
+        let d = g.degree as u64;
+        for &si in &g.seq_idxs {
+            let len = seqs[si].len();
+            let chunk = len.div_ceil(d);
+            for slot in 0..g.degree {
+                let start = slot as u64 * chunk;
+                if start >= len {
+                    break;
+                }
+                let end = (start + chunk).min(len);
+                out.push(DispatchEntry {
+                    group_idx: gi,
+                    rank_slot: slot,
+                    seq_idx: si,
+                    token_start: start,
+                    token_end: end,
+                });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::by_name;
+    use crate::config::{ClusterConfig, TrainStage};
+    use crate::cost::{CostCoeffs, CostModel, HardwareSpec, MemoryModel};
+    use crate::data::datasets::{DatasetKind, DatasetSampler, TokenizerSpec};
+    use crate::scheduler::Scheduler;
+
+    /// High-res video tokenization (the long-context regime where mixed
+    /// CP degrees pay off).
+    fn sampler(kind: DatasetKind, seed: u64) -> DatasetSampler {
+        DatasetSampler::new(kind, seed).with_spec(TokenizerSpec {
+            fps: 2.0,
+            tokens_per_frame: 256.0,
+            text_min: 32,
+            text_max: 512,
+        })
+    }
+
+    /// Paper regime: one replica = TP×PP = 4 NPUs, 2 replicas/node — CP
+    /// degrees ≥ 3 cross nodes, so occupancy changes flip locality.
+    fn dhp_session(replicas: usize) -> DhpSession {
+        let mut cluster = ClusterConfig::default().with_npus(replicas * 4);
+        cluster.tp = 2;
+        cluster.pp = 2;
+        let preset = by_name("InternVL3-8B").unwrap();
+        let hw = HardwareSpec {
+            peak_flops: 376e12 * 4.0,
+            ..HardwareSpec::default()
+        };
+        let cost = CostModel {
+            coeffs: CostCoeffs::analytic(&preset, TrainStage::Full, &hw),
+            memory: MemoryModel {
+                e_bytes: 8192.0 * preset.act_bytes_per_token() + 2e9,
+                m_states: 2e9,
+                m_token: preset.act_bytes_per_token(),
+            },
+        };
+        let scheduler = Scheduler::new(cost, crate::parallel::DeviceMesh::new(&cluster));
+        let sim = ClusterSim::new(preset, TrainStage::Full, cluster);
+        DhpSession::builder(Box::new(scheduler), sim).build()
+    }
+
+    #[test]
+    fn mid_run_occupy_reshapes_the_next_solve() {
+        // The ISSUE-5 acceptance test: a mid-run Occupy changes the
+        // fabric fingerprint, subsequent schedules avoid the occupied
+        // ranks, and the per-step telemetry survives the façade.
+        let mut session = dhp_session(8); // 8 replicas, 2 per node
+        let mut sampler = sampler(DatasetKind::Msrvtt, 0x0CC);
+        let batch = sampler.sample_batch(24);
+
+        let r0 = session.step(&batch);
+        let fp0 = r0.fabric_fingerprint;
+        assert!(r0.iteration.iter_time_s > 0.0);
+
+        // One rank of EVERY node: the largest per-node free count drops
+        // 2 → 1, so intra-node locality answers change.
+        let occupied: Vec<usize> = (0..8).filter(|r| r % 2 == 0).collect();
+        session
+            .apply(&[MeshEvent::Occupy(occupied.clone())])
+            .unwrap();
+        assert_ne!(
+            session.fabric_fingerprint(),
+            fp0,
+            "locality-changing occupancy must re-key the fabric oracle"
+        );
+        assert_eq!(session.mesh().free_replicas(), 4);
+
+        let r1 = session.step(&batch);
+        assert_ne!(r1.fabric_fingerprint, fp0);
+        for schedule in &r1.schedules {
+            for wave in &schedule.waves {
+                for g in &wave.groups {
+                    for &r in &g.ranks {
+                        assert!(
+                            !occupied.contains(&r),
+                            "rank {r} placed while occupied"
+                        );
+                    }
+                }
+            }
+        }
+        // Telemetry is preserved through the façade.
+        assert!(
+            r1.iteration.reconfig_time_s <= r1.iteration.reconfig_serial_s + 1e-15,
+            "charged must never exceed serial"
+        );
+        assert!((0.0..=1.0).contains(&r1.replay_rate));
+        assert_eq!(r1.evictions, 0, "unbounded session pools never evict");
+
+        // Release restores the original oracle identity and full budget.
+        session.apply(&[MeshEvent::Release(occupied)]).unwrap();
+        assert_eq!(session.fabric_fingerprint(), fp0);
+        assert_eq!(session.mesh().free_replicas(), 8);
+        let r2 = session.step(&batch);
+        assert!(r2.iteration.iter_time_s > 0.0);
+    }
+
+    #[test]
+    fn session_is_deterministic_under_a_mesh_event_trace() {
+        // Same seed + same MeshEvent trace ⇒ bit-identical StepReport
+        // digests (wall-clock fields excluded by construction).
+        let run = || -> Vec<u64> {
+            let mut session = dhp_session(8);
+            let mut sampler = sampler(DatasetKind::OpenVid, 0xD15);
+            let mut digests = Vec::new();
+            for step in 0..6u64 {
+                if step == 2 {
+                    session
+                        .apply(&[MeshEvent::Occupy(vec![0, 2])])
+                        .unwrap();
+                }
+                if step == 4 {
+                    session.apply(&[MeshEvent::Release(vec![0])]).unwrap();
+                }
+                let batch = sampler.sample_batch(16);
+                digests.push(session.step(&batch).digest());
+            }
+            digests
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "session must replay bit-identically");
+        // Sanity: the trace actually perturbed the run (the occupy step
+        // differs from the first step's digest universe).
+        assert_eq!(a.len(), 6);
+    }
+
+    #[test]
+    fn prefetched_steps_execute_in_submission_order() {
+        let mut session = dhp_session(8);
+        let mut sampler = sampler(DatasetKind::InternVid, 0xF1F0);
+        let batches: Vec<Vec<_>> =
+            [8usize, 16, 24, 12].iter().map(|&n| sampler.sample_batch(n)).collect();
+
+        session.prefetch(&batches[0]);
+        session.prefetch(&batches[1]);
+        let r0 = session.step_prefetched(0.0).unwrap();
+        assert_eq!(r0.step, 0);
+        session.prefetch(&batches[2]);
+        let r1 = session.step_prefetched(0.0).unwrap();
+        let r2 = session.step_prefetched(0.0).unwrap();
+        assert_eq!((r1.step, r2.step), (1, 2));
+        assert!(session.step_prefetched(0.0).is_none(), "queue drained");
+
+        // apply() between steps only: a pending prefetch rejects events…
+        session.prefetch(&batches[3]);
+        assert!(session.apply(&[MeshEvent::Occupy(vec![0])]).is_err());
+        let r3 = session.step_prefetched(0.0).unwrap();
+        assert_eq!(r3.step, 3);
+        // …and drains cleanly afterwards.
+        session.apply(&[MeshEvent::Occupy(vec![0])]).unwrap();
+        assert_eq!(session.mesh().free_replicas(), 7);
+    }
+
+    #[test]
+    fn apply_validates_event_traces_atomically() {
+        let mut session = dhp_session(8);
+        // Out-of-range rank.
+        assert!(session.apply(&[MeshEvent::Occupy(vec![99])]).is_err());
+        // Releasing a free rank.
+        assert!(session.apply(&[MeshEvent::Release(vec![0])]).is_err());
+        // Double-occupy within one trace.
+        assert!(session.apply(&[MeshEvent::Occupy(vec![1, 1])]).is_err());
+        // A trace that occupies everything leaves nothing to schedule.
+        assert!(session
+            .apply(&[MeshEvent::Occupy((0..8).collect())])
+            .is_err());
+        // Every rejected trace left the session untouched.
+        assert_eq!(session.mesh().free_replicas(), 8);
+        // A valid composite trace commits atomically.
+        session
+            .apply(&[
+                MeshEvent::Occupy(vec![0, 1]),
+                MeshEvent::Release(vec![0]),
+            ])
+            .unwrap();
+        assert_eq!(session.mesh().free_replicas(), 7);
+        assert!(!session.mesh().is_rank_free(1));
+    }
+
+    #[test]
+    fn warm_start_controls_first_step_creation_charge() {
+        let preset = by_name("InternVL3-8B").unwrap();
+        let mut cluster = ClusterConfig::default().with_npus(32);
+        cluster.tp = 2;
+        cluster.pp = 2;
+        let hw = HardwareSpec {
+            peak_flops: 376e12 * 4.0,
+            ..HardwareSpec::default()
+        };
+        let cost = CostModel {
+            coeffs: CostCoeffs::analytic(&preset, TrainStage::Full, &hw),
+            memory: MemoryModel {
+                e_bytes: 8192.0 * preset.act_bytes_per_token() + 2e9,
+                m_states: 2e9,
+                m_token: preset.act_bytes_per_token(),
+            },
+        };
+        let build = |warm: bool| {
+            let scheduler = Scheduler::new(
+                cost.clone(),
+                crate::parallel::DeviceMesh::new(&cluster),
+            );
+            let sim = ClusterSim::new(preset.clone(), TrainStage::Full, cluster.clone());
+            DhpSession::builder(Box::new(scheduler), sim)
+                .warm_start(warm)
+                .build()
+        };
+        let batch = sampler(DatasetKind::Msrvtt, 7).sample_batch(16);
+
+        let mut warm = build(true);
+        let r = warm.step(&batch);
+        assert_eq!(
+            r.iteration.reconfig_serial_s, 0.0,
+            "warm start pays creation before the measured stream"
+        );
+
+        let mut cold = build(false);
+        let r0 = cold.step(&batch);
+        assert!(
+            r0.iteration.reconfig_serial_s > 0.0,
+            "a cold session's first step must create its groups"
+        );
+        // Identical second batch: everything hits the pool, and the
+        // previous step's compute hides any residual creation.
+        let r1 = cold.step(&batch);
+        assert_eq!(r1.iteration.reconfig_serial_s, 0.0);
+        assert_eq!(r1.iteration.reconfig_time_s, 0.0);
+        assert!(r1.replay_rate > 0.99, "stationary batch must replay");
+    }
+}

@@ -35,6 +35,10 @@ pub fn train_cmd(args: &Args) -> Result<()> {
         seed: args.u64_or("seed", 0xE2E)?,
         log_path: args.get("log").map(PathBuf::from),
         sim_npus: args.usize_or("sim-npus", 8)?,
+        pool_capacity: match args.usize_or("pool-cap", 0)? {
+            0 => crate::parallel::PoolCapacity::Unbounded,
+            n => crate::parallel::PoolCapacity::MaxGroups(n),
+        },
     };
     log::info!(
         "training {} for {} steps (params from {})",

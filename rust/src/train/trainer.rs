@@ -4,10 +4,12 @@
 //! HLO, executed by the L3 coordinator).
 //!
 //! Semantics: each optimizer step draws a micro-batch from the synthetic
-//! corpus, DHP schedules it onto the (simulated) cluster while the
-//! *previous* step's gradients are being computed for real on the PJRT
-//! CPU device (the paper's producer–consumer overlap), gradients are
-//! reduced and Adam applied. The loss curve goes to EXPERIMENTS.md §E2E.
+//! corpus, the [`DhpSession`] schedules it onto the (simulated) cluster
+//! while the *previous* step's gradients are being computed for real on
+//! the PJRT CPU device (the paper's producer–consumer overlap, via
+//! [`DhpSession::prefetch`] + [`DhpSession::step_prefetched`]), gradients
+//! are reduced and Adam applied. The loss curve goes to EXPERIMENTS.md
+//! §E2E.
 
 use std::io::Write as _;
 use std::path::PathBuf;
@@ -15,7 +17,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::cluster::{ClusterSim, CommKind};
+use crate::cluster::ClusterSim;
 use crate::config::presets::by_name;
 use crate::config::{ClusterConfig, TrainStage};
 use crate::cost::{CostCoeffs, CostModel, HardwareSpec, MemoryModel};
@@ -23,8 +25,8 @@ use crate::data::corpus::CorpusGenerator;
 use crate::data::sequence::Sequence;
 use crate::parallel::mesh::DeviceMesh;
 use crate::runtime::{load_params, Runtime};
-use crate::scheduler::pipeline::SchedulePipeline;
 use crate::scheduler::Scheduler;
+use crate::session::DhpSession;
 
 use super::adam::{Adam, AdamConfig};
 
@@ -48,10 +50,10 @@ pub struct TrainerConfig {
     pub log_path: Option<PathBuf>,
     /// Simulated cluster size the async scheduler plans for.
     pub sim_npus: usize,
-    /// Budget for the scheduling pipeline's communication-group pool
-    /// (unbounded by default — cap it to model a device that cannot keep
-    /// every communicator established; evictions then show up in the
-    /// per-step CSV).
+    /// Budget for the session's communication-group pool (unbounded by
+    /// default — cap it to model a device that cannot keep every
+    /// communicator established; evictions then show up in the per-step
+    /// CSV).
     pub pool_capacity: crate::parallel::PoolCapacity,
 }
 
@@ -89,8 +91,8 @@ pub struct StepRecord {
     pub sim_makespan_s: f64,
     /// Background scheduling latency (hidden behind compute).
     pub schedule_latency_s: f64,
-    /// FULLY-SERIAL simulated group-creation time the pipeline paid
-    /// prewarming this step's communication groups (one step ahead).
+    /// FULLY-SERIAL simulated group-creation time the session paid
+    /// prewarming this step's communication groups.
     pub reconfig_serial_s: f64,
     /// Overlap-aware charge: the creation time NOT hidden behind the
     /// previous step's real COMPUTE span (PJRT execution + optimizer,
@@ -101,8 +103,8 @@ pub struct StepRecord {
     /// Fraction of this step's groups that replayed the previous step's
     /// rank blocks (hint-quality telemetry).
     pub replay_rate: f64,
-    /// Groups evicted from the (capacity-capped) pipeline pool while
-    /// preparing this step — 0 on the default unbounded pool.
+    /// Groups evicted from the (capacity-capped) session pool during
+    /// this step — 0 on the default unbounded pool.
     pub pool_evictions: u64,
     /// Cumulative communication-group pool hit-rate after this step.
     pub pool_hit_rate: f64,
@@ -164,7 +166,10 @@ pub fn run(cfg: &TrainerConfig) -> Result<TrainReport> {
     let mut opt = Adam::new(params.len(), cfg.adam);
     let mut corpus = CorpusGenerator::new(meta.vocab, meta.patch_dim, cfg.seed);
 
-    // Async DHP scheduling over a simulated cluster, one step ahead.
+    // Async DHP scheduling over a simulated cluster, one step ahead —
+    // the whole lifecycle (pipeline + pool + simulator) behind one
+    // session. `warm_start(false)`: a real launch surfaces step 0's
+    // group-creation cost instead of hiding it pre-stream.
     let preset = by_name("InternVL3-2B").unwrap();
     let cluster = ClusterConfig::default().with_npus(cfg.sim_npus);
     let hw = HardwareSpec::default();
@@ -176,14 +181,14 @@ pub fn run(cfg: &TrainerConfig) -> Result<TrainReport> {
             m_token: preset.act_bytes_per_token(),
         },
     };
-    let sim = ClusterSim::new(preset, TrainStage::Full, cluster.clone());
     let scheduler = Scheduler::new(cost, DeviceMesh::new(&cluster));
-    let pipe = SchedulePipeline::spawn_with_pool(
-        scheduler,
-        2,
-        cfg.pool_capacity,
-        cluster.group_buffer_bytes,
-    );
+    let sim = ClusterSim::new(preset, TrainStage::Full, cluster.clone());
+    let mut session = DhpSession::builder(Box::new(scheduler), sim)
+        .pool_capacity(cfg.pool_capacity)
+        .group_buffer_bytes(cluster.group_buffer_bytes)
+        .pipeline_depth(2)
+        .warm_start(false)
+        .build();
 
     // Scheduling view of a batch: B sequences of (Lv vision + Lt text).
     let batch_seqs = |step: usize| -> Vec<Sequence> {
@@ -213,22 +218,23 @@ pub fn run(cfg: &TrainerConfig) -> Result<TrainReport> {
         None => None,
     };
 
-    // Prime the pipeline with step 0's plan.
-    pipe.submit(0, batch_seqs(0));
+    // Prime the session with step 0's plan.
+    session.prefetch(&batch_seqs(0));
 
     let mut records = Vec::with_capacity(cfg.steps);
     // Overlap budget for step t's group prewarm: the prepare ran while
     // step t−1 COMPUTED (PJRT execution + optimizer). Only that compute
-    // span hides creation — the blocking `pipe.recv` wait is time spent
-    // waiting on the scheduler itself, so counting it as slack would
-    // report reconfiguration as hidden precisely when the run is
-    // scheduling-bound. Step 0's prepare overlapped nothing.
+    // span hides creation — the blocking schedule wait inside
+    // `step_prefetched` is time spent waiting on the scheduler itself,
+    // so counting it as slack would report reconfiguration as hidden
+    // precisely when the run is scheduling-bound. Step 0's prepare
+    // overlapped nothing.
     let mut prev_compute_s = 0.0f64;
     for step in 0..cfg.steps {
         let t0 = Instant::now();
-        // Pipeline ahead: submit step+1 before computing step.
+        // Pipeline ahead: prefetch step+1 before computing step.
         if step + 1 < cfg.steps {
-            pipe.submit((step + 1) as u64, batch_seqs(step + 1));
+            session.prefetch(&batch_seqs(step + 1));
         }
         let (vis, tok, tgt) = corpus.sample_flat_batch(
             meta.batch,
@@ -239,30 +245,27 @@ pub fn run(cfg: &TrainerConfig) -> Result<TrainReport> {
         let out = model.grad_step(&params, &vis, &tok, &tgt)?;
         let grad_norm = opt.step(&mut params, &out.grads);
         // Compute-only span: the prewarm-overlap budget for the NEXT
-        // step (measured before the recv below starts waiting).
+        // step (measured before step_prefetched starts waiting).
         let compute_s = t0.elapsed().as_secs_f64();
-        // Collect this step's (already computed) schedule.
-        let scheduled = pipe.recv().context("scheduler pipeline closed")?;
-        let seqs = batch_seqs(step);
-        let sim_makespan: f64 = sim
-            .execute_schedule(&seqs, &scheduled.schedule, CommKind::RingCp)
-            .iter()
-            .map(|w| w.makespan_s)
-            .sum();
+        // Collect this step's (already computed) schedule, prewarm its
+        // groups through the session pool, and execute it on the
+        // simulated cluster — charged max(0, serial − prev compute).
+        let report = session
+            .step_prefetched(prev_compute_s)
+            .context("scheduler pipeline closed")?;
         let step_time_s = t0.elapsed().as_secs_f64();
         let rec = StepRecord {
             step,
             loss: out.loss,
             grad_norm,
             step_time_s,
-            sim_makespan_s: sim_makespan,
-            schedule_latency_s: scheduled.schedule_latency_s,
-            reconfig_serial_s: scheduled.reconfig_serial_s,
-            reconfig_charged_s: (scheduled.reconfig_serial_s - prev_compute_s)
-                .max(0.0),
-            replay_rate: scheduled.replay_rate,
-            pool_evictions: scheduled.evictions,
-            pool_hit_rate: scheduled.pool.hit_rate(),
+            sim_makespan_s: report.iteration.exec_time_s,
+            schedule_latency_s: report.schedule_latency_s,
+            reconfig_serial_s: report.iteration.reconfig_serial_s,
+            reconfig_charged_s: report.iteration.reconfig_time_s,
+            replay_rate: report.replay_rate,
+            pool_evictions: report.evictions,
+            pool_hit_rate: report.pool.hit_rate(),
         };
         prev_compute_s = compute_s;
         if let Some(f) = log_file.as_mut() {
@@ -292,7 +295,7 @@ pub fn run(cfg: &TrainerConfig) -> Result<TrainReport> {
         }
         records.push(rec);
     }
-    pipe.shutdown();
+    session.shutdown();
     Ok(TrainReport {
         records,
         param_count: params.len(),

@@ -141,12 +141,29 @@ fn cli_dispatch_smoke() {
 fn config_file_round_trip_drives_context() {
     let cfg = TrainConfig::from_toml(
         "[train]\ngbs = 64\nmodel = \"Qwen3VL-4B\"\ndataset = \"internvid\"\n\
+         pool_cap_groups = 6\n\
          [cluster]\nnodes = 4\nnpus_per_node = 8\ntp = 2\npp = 2\n",
     )
     .unwrap();
     assert_eq!(cfg.cluster.replicas(), 8);
     assert_eq!(cfg.model.name, "Qwen3VL-4B");
     assert_eq!(cfg.gbs, 64);
+    // The parsed config drives a real context — including the session's
+    // pool budget, so the TOML knob is live end to end.
+    let ctx = ExpContext::from_train_config(&cfg);
+    assert_eq!(ctx.replicas(), 8);
+    assert_eq!(ctx.gbs, 64);
+    assert_eq!(
+        ctx.pool_capacity,
+        dhp::parallel::PoolCapacity::MaxGroups(6)
+    );
+    // The budget reaches the session's actual pool.
+    let mut session = ctx.session();
+    let mut sampler = ctx.sampler();
+    let report = session.step(&sampler.sample_batch(12));
+    assert!(report.iteration.iter_time_s > 0.0);
+    let stats = session.pool_stats();
+    assert!(stats.hits + stats.misses > 0, "capped session pool saw traffic");
 }
 
 #[test]

@@ -19,12 +19,26 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+# Toolchain guard: this gate is meaningless without cargo, and silently
+# doing nothing would let regressions ship. Fail loudly with a skip
+# message instead.
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "[bench-smoke] SKIP (FAILING): no \`cargo\` on PATH — the doc/clippy/bench gates need a Rust toolchain." >&2
+    echo "[bench-smoke] Install rustup (https://rustup.rs) or run inside the toolchain container, then re-run." >&2
+    exit 1
+fi
+
 COMPARE=0
 BASELINE="scripts/solver_micro.baseline.json"
 if [[ "${1:-}" == "--compare" ]]; then
     COMPARE=1
     [[ -n "${2:-}" ]] && BASELINE="$2"
 fi
+
+# Lint gate: warnings across every target (lib, tests, benches,
+# examples) are promoted to errors so drift never accumulates unseen.
+echo "=== cargo clippy (deny warnings) ==="
+cargo clippy --all-targets -- -D warnings
 
 # Doc gate: the crate carries #![warn(missing_docs)] and a documented
 # public API (ISSUE-3); rustdoc warnings (missing docs on new public
