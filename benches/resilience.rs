@@ -1,0 +1,115 @@
+//! Resilience bench: MTBF-sweep goodput for DHP and the baselines, plus
+//! the zero-drift gate — a zero-fault (quiet-injector) run must be
+//! bit-identical to a session with no injector at all. Any drift means
+//! the fault machinery leaks into the fault-free path, and the bench
+//! exits non-zero so CI catches it.
+//!
+//! Usage:
+//!   cargo bench --bench resilience              # full sweep
+//!   cargo bench --bench resilience -- --quick   # CI smoke (small sweep)
+//!
+//! Both modes persist per-cell goodput to `BENCH_resilience.json` at the
+//! repo root (see scripts/bench_smoke.sh).
+
+use std::path::Path;
+
+use dhp::cluster::FaultConfig;
+use dhp::config::presets::by_name;
+use dhp::config::TrainStage;
+use dhp::data::datasets::DatasetKind;
+use dhp::experiments::harness::ExpContext;
+use dhp::experiments::resilience::{compute, run_policy_under_faults};
+use dhp::util::json::{self, Json};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (npus, gbs, steps) = if quick { (16, 24, 6) } else { (32, 64, 30) };
+    let seed = 0xFA17u64;
+    let mut ctx = ExpContext::new(
+        by_name(if quick { "InternVL3-2B" } else { "InternVL3-8B" }).unwrap(),
+        DatasetKind::OpenVid,
+        npus,
+        TrainStage::Full,
+    )
+    .with_gbs(gbs);
+    ctx.seed = seed;
+
+    // Zero-drift gate: quiet injector vs no injector, digest-for-digest.
+    let dhp = ctx.dhp();
+    let quiet = run_policy_under_faults(
+        &ctx,
+        &dhp,
+        FaultConfig::quiet(seed),
+        steps.min(4),
+    );
+    let mut bare = ctx.session_for(Box::new(ctx.dhp()));
+    let mut sampler = ctx.sampler();
+    let mut bare_digest: u64 = 0;
+    for _ in 0..steps.min(4) {
+        let report = bare.step(&sampler.sample_batch(ctx.gbs));
+        bare_digest = bare_digest.rotate_left(1) ^ report.digest();
+    }
+    if quiet.digest != bare_digest {
+        eprintln!(
+            "[bench] ZERO-DRIFT VIOLATION: quiet-injector digest {:#018x} != \
+             injector-free digest {:#018x}",
+            quiet.digest, bare_digest
+        );
+        std::process::exit(1);
+    }
+    println!("[bench] zero-fault path is bit-identical to the fault-free path");
+
+    let mtbfs: &[f64] = if quick { &[0.0, 8.0] } else { &[0.0, 50.0, 20.0, 8.0] };
+    let rows = compute(&ctx, mtbfs, steps, seed);
+    println!(
+        "{:<14} {:>12} {:>8} {:>8} {:>13} {:>18}",
+        "policy", "mtbf", "useful", "failed", "recovery (s)", "goodput (steps/s)"
+    );
+    for r in &rows {
+        println!(
+            "{:<14} {:>12} {:>8} {:>8} {:>13.1} {:>18.4}",
+            r.policy,
+            if r.mtbf_steps <= 0.0 {
+                "none".to_string()
+            } else {
+                format!("{:.0}", r.mtbf_steps)
+            },
+            r.useful_steps,
+            r.failed_steps,
+            r.recovery_s,
+            r.goodput_steps_per_s
+        );
+    }
+
+    // Persist the trajectory record at the repo root.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap_or_else(|| Path::new("."))
+        .to_path_buf();
+    let out = root.join("BENCH_resilience.json");
+    let cells: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            json::obj(vec![
+                ("policy", json::s(&r.policy)),
+                ("mtbf_steps", json::num(r.mtbf_steps)),
+                ("useful_steps", json::num(r.useful_steps as f64)),
+                ("failed_steps", json::num(r.failed_steps as f64)),
+                ("recovery_s", json::num(r.recovery_s)),
+                ("straggle_s", json::num(r.straggle_s)),
+                ("goodput_steps_per_s", json::num(r.goodput_steps_per_s)),
+            ])
+        })
+        .collect();
+    let doc = json::obj(vec![
+        ("bench", json::s("resilience")),
+        ("quick", Json::Bool(quick)),
+        ("steps", json::num(steps as f64)),
+        ("zero_drift_ok", Json::Bool(true)),
+        ("cells", json::arr(cells)),
+    ]);
+    match std::fs::write(&out, doc.to_string_pretty()) {
+        Ok(()) => println!("[bench] wrote {}", out.display()),
+        Err(e) => eprintln!("[bench] failed to write {}: {e}", out.display()),
+    }
+}

@@ -1,0 +1,93 @@
+//! Fault-injection walkthrough: a DHP session surviving a scripted
+//! incident — a rank failure, a straggler storm, a co-tenant preemption,
+//! and the recoveries — with the recovery economics printed per step.
+//!
+//!   cargo run --example resilience
+
+use dhp::cluster::{FaultEvent, FaultInjector};
+use dhp::config::presets::by_name;
+use dhp::config::TrainStage;
+use dhp::data::datasets::DatasetKind;
+use dhp::experiments::harness::ExpContext;
+
+fn main() {
+    let mut ctx = ExpContext::new(
+        by_name("InternVL3-8B").unwrap(),
+        DatasetKind::OpenVid,
+        32,
+        TrainStage::Full,
+    )
+    .with_gbs(48);
+    ctx.seed = 0x5C21;
+
+    // A recorded "incident": rank 3 dies at step 1 and is repaired at
+    // step 4; rank 5 straggles through steps 2-3; a co-tenant preempts
+    // ranks 0-1 at step 5 and returns them at step 7.
+    let script = vec![
+        vec![],
+        vec![FaultEvent::RankFailure { rank: 3 }],
+        vec![FaultEvent::Straggler { rank: 5, slowdown: 2.5 }],
+        vec![FaultEvent::Straggler { rank: 5, slowdown: 1.8 }],
+        vec![FaultEvent::Recovery { ranks: vec![3] }],
+        vec![FaultEvent::Preemption { ranks: vec![0, 1], duration_steps: 2 }],
+        vec![],
+        vec![FaultEvent::Recovery { ranks: vec![0, 1] }],
+    ];
+    let steps = script.len();
+    let mut session = ctx
+        .session_builder_for(Box::new(ctx.dhp()))
+        .fault_injector(FaultInjector::scripted(ctx.replicas(), script))
+        .checkpoint_interval(3)
+        .build();
+    let mut sampler = ctx.sampler();
+
+    println!(
+        "DHP under a scripted incident ({} replicas, {} steps)\n",
+        ctx.replicas(),
+        steps
+    );
+    println!(
+        "{:<5} {:<34} {:>5} {:>9} {:>10} {:>10} {:>10}",
+        "step", "faults", "free", "iter (s)", "straggle", "recovery", "ckpt (s)"
+    );
+    for _ in 0..steps {
+        let report = session.step(&sampler.sample_batch(ctx.gbs));
+        let faults = if report.faults.is_empty() {
+            "-".to_string()
+        } else {
+            report
+                .faults
+                .iter()
+                .map(|f| match f {
+                    FaultEvent::RankFailure { rank } => format!("fail r{rank}"),
+                    FaultEvent::Straggler { rank, slowdown } => {
+                        format!("straggle r{rank} x{slowdown:.1}")
+                    }
+                    FaultEvent::Preemption { ranks, .. } => {
+                        format!("preempt {ranks:?}")
+                    }
+                    FaultEvent::Recovery { ranks } => format!("recover {ranks:?}"),
+                })
+                .collect::<Vec<_>>()
+                .join(", ")
+        };
+        println!(
+            "{:<5} {:<34} {:>5} {:>9.3} {:>10.3} {:>10.2} {:>10.2}",
+            report.step,
+            faults,
+            session.mesh().free_replicas(),
+            report.iteration.iter_time_s,
+            report.iteration.straggle_s,
+            report.recovery_time_s,
+            report.checkpoint_time_s
+        );
+    }
+    println!(
+        "\nEvery step completed: the schedule re-solved on the survivors \
+         each time the mesh changed,"
+    );
+    println!(
+        "recovery charged checkpoint restore + group re-warm + lost work, \
+         and capacity returned on repair."
+    );
+}

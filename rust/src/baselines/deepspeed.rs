@@ -11,7 +11,7 @@ use crate::data::sequence::Sequence;
 use crate::scheduler::Schedule;
 
 use super::megatron::MegatronStaticCp;
-use super::SchedulePolicy;
+use super::{ScheduleError, SchedulePolicy};
 
 /// Static Ulysses-SP policy (delegates grid construction to the static-CP
 /// machinery; what differs is degree admissibility and the comm pattern).
@@ -73,8 +73,12 @@ impl SchedulePolicy for DeepSpeedUlysses {
         CommKind::UlyssesA2A
     }
 
-    fn schedule(&self, seqs: &[Sequence]) -> Schedule {
-        self.inner.schedule(seqs)
+    fn schedule(&self, seqs: &[Sequence]) -> Result<Schedule, ScheduleError> {
+        // Re-attribute mesh-shrunk errors from the inner static grid so
+        // failed-step reports name the policy the session actually runs.
+        self.inner
+            .schedule(seqs)
+            .map_err(|e| e.attributed_to(self.name()))
     }
 
     fn sync_mesh(&mut self, mesh: &crate::parallel::mesh::DeviceMesh) {
@@ -133,10 +137,28 @@ mod tests {
         assert_eq!(policy.comm_kind(), CommKind::UlyssesA2A);
         let seqs: Vec<Sequence> =
             (0..12).map(|i| Sequence::new(i, 400, 400)).collect();
-        let schedule = policy.schedule(&seqs);
+        let schedule = policy.schedule(&seqs).unwrap();
         schedule.validate(&seqs, 8).unwrap();
         for d in schedule.degree_multiset() {
             assert_eq!(d, 4);
+        }
+    }
+
+    #[test]
+    fn shrunk_mesh_error_names_deepspeed() {
+        let (preset, cm) = cost("Qwen3VL-2B");
+        let mut policy = DeepSpeedUlysses::new(4, 8, &preset, cm, 12.5e9);
+        let mut mesh = crate::parallel::mesh::DeviceMesh::uniform(8, 12.5e9);
+        mesh.occupy(&[0]);
+        policy.sync_mesh(&mesh);
+        let seqs: Vec<Sequence> =
+            (0..4).map(|i| Sequence::new(i, 400, 400)).collect();
+        match policy.schedule(&seqs) {
+            Err(ScheduleError::MeshShrunk { policy, need, free }) => {
+                assert_eq!(policy, "DeepSpeed");
+                assert_eq!((need, free), (8, 7));
+            }
+            other => panic!("expected MeshShrunk, got {other:?}"),
         }
     }
 }

@@ -13,7 +13,7 @@ use crate::data::sequence::Sequence;
 use crate::parallel::mesh::DeviceMesh;
 use crate::scheduler::{place_plan, Plan, PlannedGroup, Schedule};
 
-use super::SchedulePolicy;
+use super::{ScheduleError, SchedulePolicy};
 
 /// Static-CP policy with a fixed degree.
 #[derive(Debug, Clone)]
@@ -50,9 +50,10 @@ impl MegatronStaticCp {
 
     /// Place the static grid on a real cluster topology (groups that fit
     /// inside a node then ride the fast fabric, like a real Megatron
-    /// launch would).
+    /// launch would). A mesh smaller than the static grid is accepted —
+    /// the next [`SchedulePolicy::schedule`] call reports
+    /// [`ScheduleError::MeshShrunk`] instead of placing.
     pub fn with_mesh(mut self, mesh: DeviceMesh) -> Self {
-        assert_eq!(mesh.replicas, self.replicas, "mesh/replica mismatch");
         self.mesh = mesh;
         self
     }
@@ -86,11 +87,10 @@ impl SchedulePolicy for MegatronStaticCp {
 
     fn sync_mesh(&mut self, mesh: &DeviceMesh) {
         // A static grid cannot adapt to lost capacity: it keeps planning
-        // all N replicas, so on a mesh with occupied ranks the next
-        // schedule()'s placement panics against the FREE budget
-        // (`DeviceMesh::place_tracked`) — exactly the rigidity DHP
-        // removes. The assert here only guards topology-size mismatches.
-        assert_eq!(mesh.replicas, self.replicas, "mesh/replica mismatch");
+        // all N replicas. The shrunk mesh is still recorded so the next
+        // schedule() call can report MeshShrunk against the actual free
+        // budget (and resume placing once the capacity returns) — exactly
+        // the rigidity DHP removes.
         self.mesh = mesh.clone();
     }
 
@@ -98,7 +98,17 @@ impl SchedulePolicy for MegatronStaticCp {
         Box::new(self.clone())
     }
 
-    fn schedule(&self, seqs: &[Sequence]) -> Schedule {
+    fn schedule(&self, seqs: &[Sequence]) -> Result<Schedule, ScheduleError> {
+        // The static grid plans all `replicas` ranks; anything less free
+        // and the placement below would overrun the mesh's free budget.
+        let free = self.mesh.free_replicas();
+        if free < self.replicas || self.mesh.replicas != self.replicas {
+            return Err(ScheduleError::MeshShrunk {
+                policy: self.name(),
+                need: self.replicas,
+                free: free.min(self.mesh.replicas),
+            });
+        }
         let t0 = std::time::Instant::now();
         let n_groups = self.replicas / self.degree;
         let cap_tokens = {
@@ -201,7 +211,7 @@ impl SchedulePolicy for MegatronStaticCp {
             schedule.waves.push(placed);
         }
         schedule.solve_time_s = t0.elapsed().as_secs_f64();
-        schedule
+        Ok(schedule)
     }
 }
 
@@ -231,7 +241,7 @@ mod tests {
         let policy = MegatronStaticCp::new(4, 16, cost(), 12.5e9);
         let mut sampler = DatasetSampler::new(DatasetKind::Msrvtt, 81);
         let seqs = sampler.sample_batch(32);
-        let schedule = policy.schedule(&seqs);
+        let schedule = policy.schedule(&seqs).unwrap();
         schedule.validate(&seqs, 16).unwrap();
         for d in schedule.degree_multiset() {
             assert_eq!(d, 4);
@@ -261,7 +271,7 @@ mod tests {
         let seqs: Vec<Sequence> = (0..6)
             .map(|i| Sequence::new(i, 3000, 3000)) // 6000 tokens each
             .collect();
-        let schedule = policy.schedule(&seqs);
+        let schedule = policy.schedule(&seqs).unwrap();
         schedule.validate(&seqs, 2).unwrap();
         assert!(schedule.waves.len() >= 3, "{}", schedule.waves.len());
     }
@@ -279,7 +289,7 @@ mod tests {
             Sequence::new(6, 250, 250),
             Sequence::new(7, 250, 250),
         ];
-        let schedule = policy.schedule(&seqs);
+        let schedule = policy.schedule(&seqs).unwrap();
         assert_eq!(schedule.waves.len(), 1);
         let times: Vec<f64> = schedule.waves[0]
             .groups
@@ -295,5 +305,29 @@ mod tests {
     #[should_panic(expected = "divide")]
     fn bad_degree_panics() {
         MegatronStaticCp::new(3, 16, cost(), 12.5e9);
+    }
+
+    #[test]
+    fn shrunk_mesh_is_a_typed_error_and_recovers() {
+        let mut policy = MegatronStaticCp::new(2, 8, cost(), 12.5e9);
+        let mut sampler = DatasetSampler::new(DatasetKind::Msrvtt, 7);
+        let seqs = sampler.sample_batch(8);
+        assert!(policy.schedule(&seqs).is_ok());
+        // Two ranks lost: the static grid refuses with a typed error.
+        let mut mesh = DeviceMesh::uniform(8, 12.5e9);
+        mesh.occupy(&[3, 5]);
+        policy.sync_mesh(&mesh);
+        match policy.schedule(&seqs) {
+            Err(ScheduleError::MeshShrunk { policy, need, free }) => {
+                assert_eq!(policy, "Megatron-LM");
+                assert_eq!((need, free), (8, 6));
+            }
+            other => panic!("expected MeshShrunk, got {other:?}"),
+        }
+        // Capacity back: the same policy schedules at full strength again.
+        mesh.release(&[3, 5]);
+        policy.sync_mesh(&mesh);
+        let schedule = policy.schedule(&seqs).unwrap();
+        schedule.validate(&seqs, 8).unwrap();
     }
 }

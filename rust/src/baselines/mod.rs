@@ -11,10 +11,71 @@ pub mod deepspeed;
 pub mod flexsp;
 pub mod megatron;
 
+use std::fmt;
+
 use crate::cluster::CommKind;
 use crate::data::sequence::Sequence;
 use crate::parallel::mesh::DeviceMesh;
 use crate::scheduler::{FabricKind, Schedule, Scheduler};
+
+/// Why a policy could not produce a schedule for the current mesh.
+///
+/// Static-grid baselines (Megatron, DeepSpeed-Ulysses) require their full
+/// replica complement; when the session shrinks the mesh under them —
+/// occupancy events or rank failures — they return this typed error and
+/// the session surfaces a *failed step* instead of aborting the process.
+/// The same policy retries at full strength once capacity recovers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ScheduleError {
+    /// The policy's static grid needs more free replicas than the mesh
+    /// currently offers.
+    MeshShrunk {
+        /// Policy display name (for reports).
+        policy: &'static str,
+        /// Replicas the static grid was tuned for.
+        need: usize,
+        /// Free replicas actually available.
+        free: usize,
+    },
+}
+
+impl ScheduleError {
+    /// Re-attribute the error to a wrapping policy (e.g. DeepSpeed-Ulysses
+    /// delegating its packing to the inner Megatron grid).
+    pub fn attributed_to(self, policy: &'static str) -> Self {
+        match self {
+            ScheduleError::MeshShrunk { need, free, .. } => {
+                ScheduleError::MeshShrunk { policy, need, free }
+            }
+        }
+    }
+
+    /// Hash the semantic content into a step digest (wall-clock free).
+    pub fn digest_into(&self, h: &mut impl std::hash::Hasher) {
+        use std::hash::Hash;
+        match self {
+            ScheduleError::MeshShrunk { policy, need, free } => {
+                0u8.hash(h);
+                policy.hash(h);
+                need.hash(h);
+                free.hash(h);
+            }
+        }
+    }
+}
+
+impl fmt::Display for ScheduleError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ScheduleError::MeshShrunk { policy, need, free } => write!(
+                f,
+                "{policy}: static grid needs {need} free replicas, mesh has {free}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ScheduleError {}
 
 /// A parallelism scheduling policy: micro-batch sequences → schedule.
 ///
@@ -29,8 +90,11 @@ pub trait SchedulePolicy: Send {
     fn name(&self) -> &'static str;
     /// Communication pattern the policy's groups use at execution time.
     fn comm_kind(&self) -> CommKind;
-    /// Plan one micro-batch into a placed schedule.
-    fn schedule(&self, seqs: &[Sequence]) -> Schedule;
+    /// Plan one micro-batch into a placed schedule, or a typed error when
+    /// the policy cannot operate on the current mesh (static grids under a
+    /// shrunk mesh). Dynamic policies (DHP, FlexSP) re-solve on whatever
+    /// capacity is free and never fail here.
+    fn schedule(&self, seqs: &[Sequence]) -> Result<Schedule, ScheduleError>;
     /// Install an updated physical mesh. The session calls this once at
     /// build time (so policy and executor share one topology) and again
     /// after every applied [`crate::session::MeshEvent`] batch, making
@@ -58,8 +122,11 @@ impl SchedulePolicy for Scheduler {
         CommKind::RingCp
     }
 
-    fn schedule(&self, seqs: &[Sequence]) -> Schedule {
-        Scheduler::schedule(self, seqs)
+    fn schedule(&self, seqs: &[Sequence]) -> Result<Schedule, ScheduleError> {
+        // DHP re-solves on whatever the mesh offers; it only needs one
+        // free replica, which the session's occupancy validation and the
+        // fault injector's last-rank guard both preserve.
+        Ok(Scheduler::schedule(self, seqs))
     }
 
     fn sync_mesh(&mut self, mesh: &DeviceMesh) {

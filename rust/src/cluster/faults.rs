@@ -1,0 +1,404 @@
+//! Deterministic fault injection for the simulated cluster.
+//!
+//! Production MLLM training at scale is dominated not by steady-state
+//! throughput but by *workload resilience* — rank failures, stragglers,
+//! and co-tenant preemption (MegaScale-Omni, PAPERS.md). This module
+//! generates per-step fault traces from a seeded [`crate::util::rng::Rng`]
+//! so every resilience experiment is bit-reproducible: same seed, same
+//! trace, same goodput numbers.
+//!
+//! The injector is a pure event *source*. It tracks which ranks it has
+//! taken down (so repairs re-admit exactly those ranks and victim draws
+//! only target live ranks) but applies nothing itself — the consumer
+//! ([`crate::session::DhpSession`]) owns the mesh, the group pool, and
+//! the recovery cost accounting.
+
+use std::collections::BTreeMap;
+use std::hash::{Hash, Hasher};
+
+use crate::parallel::RankId;
+use crate::util::rng::Rng;
+
+/// One fault-domain event at a step boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultEvent {
+    /// A rank dies (hardware fault / kernel panic). The job loses the
+    /// replica until its repair completes and pays a checkpoint restore
+    /// plus the work since the last checkpoint.
+    RankFailure {
+        /// The rank that died.
+        rank: RankId,
+    },
+    /// A rank runs slow this step (thermal throttling, network
+    /// congestion, a noisy neighbor): its groups' critical paths stretch
+    /// by `slowdown`.
+    Straggler {
+        /// The slow rank.
+        rank: RankId,
+        /// Multiplicative slowdown factor (> 1.0).
+        slowdown: f64,
+    },
+    /// A co-tenant preempts a set of ranks for a bounded number of steps.
+    /// Cheaper than a failure: no state is lost, the job just shrinks.
+    Preemption {
+        /// The preempted ranks (sorted).
+        ranks: Vec<RankId>,
+        /// How many steps the ranks stay preempted.
+        duration_steps: u64,
+    },
+    /// Previously lost ranks return to service (repair completed or the
+    /// preemption lease expired).
+    Recovery {
+        /// The ranks re-admitted (sorted).
+        ranks: Vec<RankId>,
+    },
+}
+
+impl FaultEvent {
+    /// Hash the semantic content into a step digest (used by
+    /// [`crate::session::StepReport::digest`]; f64 fields hash by bits).
+    pub fn digest_into(&self, h: &mut impl Hasher) {
+        match self {
+            FaultEvent::RankFailure { rank } => {
+                0u8.hash(h);
+                rank.hash(h);
+            }
+            FaultEvent::Straggler { rank, slowdown } => {
+                1u8.hash(h);
+                rank.hash(h);
+                slowdown.to_bits().hash(h);
+            }
+            FaultEvent::Preemption {
+                ranks,
+                duration_steps,
+            } => {
+                2u8.hash(h);
+                ranks.hash(h);
+                duration_steps.hash(h);
+            }
+            FaultEvent::Recovery { ranks } => {
+                3u8.hash(h);
+                ranks.hash(h);
+            }
+        }
+    }
+}
+
+/// Fault-rate configuration. All rates are per training step; zero
+/// disables that fault class. [`FaultConfig::quiet`] disables everything,
+/// which the session guarantees is behaviorally identical to running
+/// with no injector at all (the zero-drift invariant the resilience
+/// bench checks).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultConfig {
+    /// Mean steps between rank failures, cluster-wide (geometric
+    /// inter-arrival with per-step probability `1 / mtbf_steps`).
+    /// `0.0` disables failures.
+    pub mtbf_steps: f64,
+    /// Steps until a failed rank is repaired and recovered.
+    pub repair_steps: u64,
+    /// Per-step probability that some live rank straggles.
+    pub straggler_rate: f64,
+    /// Uniform slowdown-factor range `[lo, hi)` for stragglers (> 1.0).
+    pub straggler_slowdown: (f64, f64),
+    /// Per-step probability of a co-tenant preemption burst.
+    pub preemption_rate: f64,
+    /// How many ranks one preemption burst takes (clamped so at least
+    /// one rank always survives).
+    pub preemption_ranks: usize,
+    /// Uniform preemption-duration range `[lo, hi)` in steps.
+    pub preemption_steps: (u64, u64),
+    /// RNG seed: the whole trace is a pure function of this config.
+    pub seed: u64,
+}
+
+impl FaultConfig {
+    /// All fault classes disabled (the zero-drift reference config).
+    pub fn quiet(seed: u64) -> Self {
+        FaultConfig {
+            mtbf_steps: 0.0,
+            repair_steps: 0,
+            straggler_rate: 0.0,
+            straggler_slowdown: (1.0, 1.0),
+            preemption_rate: 0.0,
+            preemption_ranks: 0,
+            preemption_steps: (0, 0),
+            seed,
+        }
+    }
+
+    /// Failures only, at the given MTBF, with a fixed repair lease —
+    /// the configuration the MTBF-sweep resilience bench sweeps.
+    pub fn mtbf(mtbf_steps: f64, seed: u64) -> Self {
+        FaultConfig {
+            mtbf_steps,
+            repair_steps: 25,
+            ..FaultConfig::quiet(seed)
+        }
+    }
+
+    /// True when every fault class is disabled.
+    pub fn is_quiet(&self) -> bool {
+        self.mtbf_steps <= 0.0
+            && self.straggler_rate <= 0.0
+            && self.preemption_rate <= 0.0
+    }
+}
+
+/// Deterministic, seeded per-step fault-trace generator.
+#[derive(Debug, Clone)]
+pub struct FaultInjector {
+    cfg: FaultConfig,
+    replicas: usize,
+    rng: Rng,
+    /// Rank → step at which its `Recovery` fires. BTreeMap so the event
+    /// and victim-draw orders are deterministic.
+    down_until: BTreeMap<RankId, u64>,
+    /// A fixed per-step trace overriding the stochastic draws (tests,
+    /// incident replay).
+    script: Option<Vec<Vec<FaultEvent>>>,
+}
+
+impl FaultInjector {
+    /// Injector over a cluster of `replicas` model replicas.
+    pub fn new(replicas: usize, cfg: FaultConfig) -> Self {
+        assert!(replicas > 0, "fault injector needs at least one replica");
+        FaultInjector {
+            cfg,
+            replicas,
+            rng: Rng::new(cfg.seed),
+            down_until: BTreeMap::new(),
+            script: None,
+        }
+    }
+
+    /// Injector replaying a fixed trace: `trace[s]` is emitted verbatim
+    /// at step `s`; steps beyond the script are quiet. For targeted
+    /// tests and reproducing recorded incidents. The scripted author is
+    /// responsible for trace sanity (e.g. pairing failures with
+    /// recoveries) — the session's own guards skip impossible events
+    /// (dead-rank double-kill, last-rank kill) rather than panicking.
+    pub fn scripted(replicas: usize, trace: Vec<Vec<FaultEvent>>) -> Self {
+        let mut inj = FaultInjector::new(replicas, FaultConfig::quiet(0));
+        inj.script = Some(trace);
+        inj
+    }
+
+    /// The configuration this injector draws from.
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    fn up_ranks(&self) -> Vec<RankId> {
+        (0..self.replicas)
+            .filter(|r| !self.down_until.contains_key(r))
+            .collect()
+    }
+
+    /// Generate the fault events for step boundary `step`. Call exactly
+    /// once per step, in step order: the stochastic stream advances with
+    /// each call and repairs are keyed on the step numbers seen here.
+    pub fn advance(&mut self, step: u64) -> Vec<FaultEvent> {
+        if let Some(script) = &self.script {
+            return script.get(step as usize).cloned().unwrap_or_default();
+        }
+        // Quiet configs touch neither the RNG nor the down-set, so a
+        // quiet injector is trace-identical to no injector at all.
+        if self.cfg.is_quiet() {
+            return Vec::new();
+        }
+        let mut events = Vec::new();
+        // 1. Repairs that completed by this step re-admit their ranks.
+        let due: Vec<RankId> = self
+            .down_until
+            .iter()
+            .filter(|&(_, &until)| until <= step)
+            .map(|(&r, _)| r)
+            .collect();
+        if !due.is_empty() {
+            for r in &due {
+                self.down_until.remove(r);
+            }
+            events.push(FaultEvent::Recovery { ranks: due });
+        }
+        // 2. Rank failure (geometric inter-arrival at 1/MTBF per step).
+        if self.cfg.mtbf_steps > 0.0
+            && self.rng.bool((1.0 / self.cfg.mtbf_steps).min(1.0))
+        {
+            let up = self.up_ranks();
+            // Never kill the last survivor: a job with zero replicas is
+            // not a degraded run, it is a different experiment.
+            if up.len() > 1 {
+                let rank = *self.rng.choose(&up);
+                self.down_until
+                    .insert(rank, step + self.cfg.repair_steps.max(1));
+                events.push(FaultEvent::RankFailure { rank });
+            }
+        }
+        // 3. Co-tenant preemption burst.
+        if self.cfg.preemption_rate > 0.0 && self.rng.bool(self.cfg.preemption_rate)
+        {
+            let mut up = self.up_ranks();
+            let take = self.cfg.preemption_ranks.min(up.len().saturating_sub(1));
+            if take > 0 {
+                let (lo, hi) = self.cfg.preemption_steps;
+                let duration_steps =
+                    if hi > lo { self.rng.range_u64(lo, hi) } else { lo }.max(1);
+                self.rng.shuffle(&mut up);
+                let mut ranks: Vec<RankId> = up[..take].to_vec();
+                ranks.sort_unstable();
+                for &r in &ranks {
+                    self.down_until.insert(r, step + duration_steps);
+                }
+                events.push(FaultEvent::Preemption {
+                    ranks,
+                    duration_steps,
+                });
+            }
+        }
+        // 4. Straggler (transient: one step only, no down-set entry).
+        if self.cfg.straggler_rate > 0.0 && self.rng.bool(self.cfg.straggler_rate)
+        {
+            let up = self.up_ranks();
+            if !up.is_empty() {
+                let rank = *self.rng.choose(&up);
+                let (lo, hi) = self.cfg.straggler_slowdown;
+                let slowdown =
+                    if hi > lo { self.rng.range_f64(lo, hi) } else { lo }.max(1.0);
+                events.push(FaultEvent::Straggler { rank, slowdown });
+            }
+        }
+        events
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace(cfg: FaultConfig, replicas: usize, steps: u64) -> Vec<Vec<FaultEvent>> {
+        let mut inj = FaultInjector::new(replicas, cfg);
+        (0..steps).map(|s| inj.advance(s)).collect()
+    }
+
+    fn stormy(seed: u64) -> FaultConfig {
+        FaultConfig {
+            mtbf_steps: 5.0,
+            repair_steps: 7,
+            straggler_rate: 0.3,
+            straggler_slowdown: (1.5, 3.0),
+            preemption_rate: 0.1,
+            preemption_ranks: 2,
+            preemption_steps: (2, 6),
+            seed,
+        }
+    }
+
+    #[test]
+    fn same_seed_same_trace() {
+        let a = trace(stormy(0xBEEF), 8, 200);
+        let b = trace(stormy(0xBEEF), 8, 200);
+        assert_eq!(a, b);
+        assert!(
+            a.iter().any(|evs| !evs.is_empty()),
+            "a stormy config must actually emit events"
+        );
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = trace(stormy(1), 8, 200);
+        let b = trace(stormy(2), 8, 200);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn quiet_config_emits_nothing() {
+        for evs in trace(FaultConfig::quiet(42), 8, 100) {
+            assert!(evs.is_empty());
+        }
+    }
+
+    #[test]
+    fn every_failure_eventually_recovers() {
+        let cfg = FaultConfig::mtbf(4.0, 0xD0E);
+        let mut inj = FaultInjector::new(8, cfg);
+        let mut down = std::collections::BTreeSet::new();
+        let mut failures = 0u32;
+        for step in 0..400 {
+            for ev in inj.advance(step) {
+                match ev {
+                    FaultEvent::RankFailure { rank } => {
+                        assert!(down.insert(rank), "double-kill of rank {rank}");
+                        failures += 1;
+                    }
+                    FaultEvent::Recovery { ranks } => {
+                        for r in ranks {
+                            assert!(down.remove(&r), "recovered a live rank {r}");
+                        }
+                    }
+                    other => panic!("mtbf config emitted {other:?}"),
+                }
+            }
+            assert!(down.len() < 8, "injector downed the whole cluster");
+        }
+        assert!(failures > 10, "MTBF 4 over 400 steps saw {failures} failures");
+        // Drain: with no new failures possible after the last step,
+        // everything still down recovers within one repair lease.
+        let mut quiet = inj.clone();
+        for step in 400..400 + cfg.repair_steps + 1 {
+            for ev in quiet.advance(step) {
+                if let FaultEvent::Recovery { ranks } = ev {
+                    for r in ranks {
+                        down.remove(&r);
+                    }
+                }
+            }
+        }
+        assert!(down.len() <= 1, "still down after lease: {down:?}");
+    }
+
+    #[test]
+    fn never_downs_the_last_rank() {
+        // One replica: failures and preemptions must never fire.
+        let mut inj = FaultInjector::new(1, stormy(3));
+        for step in 0..200 {
+            for ev in inj.advance(step) {
+                match ev {
+                    FaultEvent::Straggler { .. } => {}
+                    other => panic!("single-replica cluster saw {other:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scripted_trace_replays_verbatim() {
+        let script = vec![
+            vec![],
+            vec![FaultEvent::RankFailure { rank: 3 }],
+            vec![FaultEvent::Recovery { ranks: vec![3] }],
+        ];
+        let mut inj = FaultInjector::scripted(4, script.clone());
+        for (s, want) in script.iter().enumerate() {
+            assert_eq!(&inj.advance(s as u64), want);
+        }
+        // Beyond the script: quiet.
+        assert!(inj.advance(99).is_empty());
+    }
+
+    #[test]
+    fn digest_distinguishes_events() {
+        use std::collections::hash_map::DefaultHasher;
+        let h = |ev: &FaultEvent| {
+            let mut h = DefaultHasher::new();
+            ev.digest_into(&mut h);
+            h.finish()
+        };
+        let a = FaultEvent::RankFailure { rank: 1 };
+        let b = FaultEvent::Straggler { rank: 1, slowdown: 2.0 };
+        let c = FaultEvent::Straggler { rank: 1, slowdown: 2.5 };
+        assert_ne!(h(&a), h(&b));
+        assert_ne!(h(&b), h(&c));
+    }
+}

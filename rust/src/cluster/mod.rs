@@ -15,6 +15,8 @@
 //! * per-iteration data-parallel gradient synchronization,
 //! * per-wave makespan/idle accounting (Fig. 2's "idle gaps").
 
+pub mod faults;
 pub mod sim;
 
+pub use faults::{FaultConfig, FaultEvent, FaultInjector};
 pub use sim::{ClusterSim, CommKind, IterationReport, WaveReport};

@@ -16,6 +16,7 @@ use crate::cost::HardwareSpec;
 use crate::data::sequence::Sequence;
 use crate::parallel::mesh::DeviceMesh;
 use crate::parallel::pool::GroupPool;
+use crate::parallel::RankId;
 use crate::scheduler::{PlacedPlan, Schedule};
 
 /// Communication pattern of the sequence-dimension parallelism.
@@ -40,6 +41,11 @@ pub struct WaveReport {
     /// (Fig. 2's synchronization stalls). Idle ranks not in any group
     /// count as fully idle.
     pub idle_fraction: f64,
+    /// Straggle inflation: how much longer this wave's critical path ran
+    /// versus the same placement with no straggling ranks
+    /// (`makespan_s − counterfactual makespan`). Exactly 0.0 when no
+    /// slowdowns are installed.
+    pub straggle_s: f64,
 }
 
 /// Execution report for one full training iteration.
@@ -65,6 +71,9 @@ pub struct IterationReport {
     pub reconfig_serial_s: f64,
     /// exec + grad sync + charged reconfiguration.
     pub iter_time_s: f64,
+    /// Σ per-wave straggle inflation (already inside `exec_time_s`; this
+    /// field attributes it). 0.0 when no rank straggled.
+    pub straggle_s: f64,
     /// Total tokens processed.
     pub tokens: u64,
 }
@@ -94,6 +103,14 @@ pub struct ClusterSim {
     pub mesh: DeviceMesh,
     /// Cluster topology/configuration the mesh was derived from.
     pub cluster: ClusterConfig,
+    /// Transient per-rank straggler slowdowns for the CURRENT step
+    /// (rank, factor > 1.0). Installed by the session's fault path before
+    /// execution and cleared at the next step boundary; a group's time
+    /// stretches by the worst factor among its member ranks (lock-step
+    /// collectives run at the slowest member's pace). Sparse: empty in
+    /// the fault-free path, so that path is bit-identical to the
+    /// pre-fault simulator.
+    slowdowns: Vec<(RankId, f64)>,
 }
 
 impl ClusterSim {
@@ -116,7 +133,39 @@ impl ClusterSim {
             hw,
             mesh: DeviceMesh::new(&cluster),
             cluster,
+            slowdowns: Vec::new(),
         }
+    }
+
+    /// Install (or update) a transient slowdown factor for `rank`,
+    /// effective until [`ClusterSim::clear_slowdowns`]. Factors below 1.0
+    /// are clamped to 1.0 (a straggler never speeds a group up).
+    pub fn set_slowdown(&mut self, rank: RankId, factor: f64) {
+        let factor = factor.max(1.0);
+        match self.slowdowns.iter_mut().find(|(r, _)| *r == rank) {
+            Some(entry) => entry.1 = factor,
+            None => self.slowdowns.push((rank, factor)),
+        }
+    }
+
+    /// Remove all installed straggler slowdowns (step boundary).
+    pub fn clear_slowdowns(&mut self) {
+        self.slowdowns.clear();
+    }
+
+    /// Currently installed slowdowns, as (rank, factor) pairs.
+    pub fn slowdowns(&self) -> &[(RankId, f64)] {
+        &self.slowdowns
+    }
+
+    /// Worst slowdown factor among `ranks` (1.0 when none straggle):
+    /// lock-step collectives run at the slowest member's pace.
+    fn group_stretch(&self, ranks: &[RankId]) -> f64 {
+        self.slowdowns
+            .iter()
+            .filter(|(r, _)| ranks.contains(r))
+            .map(|&(_, f)| f)
+            .fold(1.0, f64::max)
     }
 
     /// Ground-truth execution time for one group at `degree` over the
@@ -159,12 +208,19 @@ impl ClusterSim {
         comm: CommKind,
     ) -> WaveReport {
         let mut group_times = Vec::with_capacity(plan.groups.len());
+        let mut base_makespan = 0.0f64;
         for g in &plan.groups {
             let group_seqs: Vec<Sequence> =
                 g.seq_idxs.iter().map(|&i| seqs[i].clone()).collect();
-            group_times.push(self.group_time(&group_seqs, g.degree, &g.ranks, comm));
+            let base = self.group_time(&group_seqs, g.degree, &g.ranks, comm);
+            base_makespan = base_makespan.max(base);
+            // With no slowdowns installed the stretch is exactly 1.0 and
+            // `base * 1.0 == base` bitwise — the fault-free path charges
+            // identically to the pre-straggler simulator.
+            group_times.push(base * self.group_stretch(&g.ranks));
         }
         let makespan = group_times.iter().fold(0.0f64, |a, &b| a.max(b));
+        let straggle_s = makespan - base_makespan;
         // Rank·seconds busy vs available (idle ranks: whole wave idle).
         // "Available" means ranks this job can actually use: slots held
         // by concurrent jobs ([`DeviceMesh::occupy`]) are not idle
@@ -184,6 +240,7 @@ impl ClusterSim {
             group_times_s: group_times,
             makespan_s: makespan,
             idle_fraction,
+            straggle_s,
         }
     }
 
@@ -260,6 +317,7 @@ impl ClusterSim {
         let reconfig_before = pool.stats().create_time_s;
         let mut waves = Vec::new();
         let mut exec = 0.0;
+        let mut straggle = 0.0;
         let mut tokens = 0u64;
         for (seqs, schedule) in micro_batches {
             tokens += seqs.iter().map(|s| s.len()).sum::<u64>();
@@ -272,6 +330,7 @@ impl ClusterSim {
             }
             for w in self.execute_schedule(seqs, schedule, comm) {
                 exec += w.makespan_s;
+                straggle += w.straggle_s;
                 waves.push(w);
             }
         }
@@ -285,6 +344,7 @@ impl ClusterSim {
             reconfig_time_s: reconfig,
             reconfig_serial_s: reconfig_serial,
             iter_time_s: exec + grad_sync + reconfig,
+            straggle_s: straggle,
             tokens,
         }
     }
@@ -466,6 +526,53 @@ mod tests {
             ClusterConfig::default().with_npus(8),
         );
         assert!(single.grad_sync_time() < big.grad_sync_time());
+    }
+
+    #[test]
+    fn straggler_stretches_only_its_waves() {
+        let s = sim(8);
+        let sch = dhp_scheduler(&s);
+        let mut sampler = DatasetSampler::new(DatasetKind::OpenVid, 77);
+        let seqs = sampler.sample_batch(24);
+        let schedule = sch.schedule(&seqs);
+        let clean = s.execute_schedule(&seqs, &schedule, CommKind::RingCp);
+        // Fault-free path reports exactly zero straggle.
+        assert!(clean.iter().all(|w| w.straggle_s == 0.0));
+
+        let mut slow = s.clone();
+        slow.set_slowdown(0, 2.0);
+        let stretched = slow.execute_schedule(&seqs, &schedule, CommKind::RingCp);
+        for (cw, sw) in clean.iter().zip(&stretched) {
+            assert!(sw.makespan_s >= cw.makespan_s - 1e-15);
+            assert!(sw.straggle_s >= 0.0);
+        }
+        // Every wave placing rank 0 in its critical-path group inflates.
+        let total_clean: f64 = clean.iter().map(|w| w.makespan_s).sum();
+        let total_slow: f64 = stretched.iter().map(|w| w.makespan_s).sum();
+        assert!(
+            total_slow > total_clean,
+            "a 2x straggler on rank 0 must cost wall-clock"
+        );
+        let total_straggle: f64 = stretched.iter().map(|w| w.straggle_s).sum();
+        assert!(
+            (total_slow - total_clean - total_straggle).abs() < 1e-9,
+            "straggle attribution must equal the inflation"
+        );
+        // Clearing restores the fault-free timings bit-for-bit.
+        slow.clear_slowdowns();
+        let restored = slow.execute_schedule(&seqs, &schedule, CommKind::RingCp);
+        for (cw, rw) in clean.iter().zip(&restored) {
+            assert_eq!(cw.makespan_s.to_bits(), rw.makespan_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn slowdown_below_one_is_clamped() {
+        let mut s = sim(8);
+        s.set_slowdown(2, 0.25);
+        assert_eq!(s.slowdowns(), &[(2usize, 1.0)]);
+        s.set_slowdown(2, 3.0);
+        assert_eq!(s.slowdowns(), &[(2usize, 3.0)]);
     }
 
     #[test]

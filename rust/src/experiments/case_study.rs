@@ -60,7 +60,9 @@ pub fn compute_case(dataset: DatasetKind, npus: usize, gbs: usize, seed: u64) ->
         let scheduled: Vec<(Vec<Sequence>, Schedule)> = mbs
             .iter()
             .map(|mb| {
-                let s = policy.schedule(&mb.sequences);
+                let s = policy
+                    .schedule(&mb.sequences)
+                    .expect("case study runs on an unfragmented mesh");
                 degrees.push(s.degree_multiset());
                 (mb.sequences.clone(), s)
             })

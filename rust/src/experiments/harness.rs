@@ -18,7 +18,7 @@ use crate::data::datasets::{DatasetKind, DatasetSampler, TokenizerSpec};
 use crate::data::sequence::Sequence;
 use crate::parallel::mesh::DeviceMesh;
 use crate::scheduler::{Schedule, Scheduler};
-use crate::session::DhpSession;
+use crate::session::{DhpSession, SessionBuilder};
 use crate::util::stats;
 
 pub use crate::session::{dispatch, DispatchEntry};
@@ -240,11 +240,20 @@ impl ExpContext {
     /// hints, the communication-group pool — lives inside the returned
     /// session (the accessors above hand out fresh, stateless builders).
     pub fn session_for(&self, policy: Box<dyn SchedulePolicy>) -> DhpSession {
+        self.session_builder_for(policy).build()
+    }
+
+    /// The builder behind [`ExpContext::session_for`], for callers that
+    /// need extra session knobs before `build()` — the resilience bench
+    /// installs its [`crate::cluster::FaultInjector`] here.
+    pub fn session_builder_for(
+        &self,
+        policy: Box<dyn SchedulePolicy>,
+    ) -> SessionBuilder {
         DhpSession::builder(policy, self.sim())
             .pool_capacity(self.pool_capacity)
             .group_buffer_bytes(self.cluster.group_buffer_bytes)
             .micro_batch_planner(self.micro_batch_planner())
-            .build()
     }
 
     /// [`ExpContext::session_for`] with the context's DHP scheduler.
@@ -300,6 +309,15 @@ pub struct PolicyResult {
     pub pool_groups: usize,
     /// Modeled communicator-buffer bytes those groups pin at run end.
     pub pool_buffer_bytes: u64,
+    /// Measured steps that ended in a typed schedule failure (a static
+    /// baseline refusing a fault-shrunken mesh). Failed steps make no
+    /// progress and are excluded from the throughput means above; 0
+    /// without a fault injector.
+    pub failed_steps: usize,
+    /// Total recovery seconds charged over the measured window
+    /// (checkpoint restores, torn-group re-warms, lost work); 0 without
+    /// a fault injector.
+    pub recovery_s: f64,
 }
 
 /// Run `policy` through the full protocol in `ctx`, entirely through the
@@ -325,6 +343,8 @@ pub fn run_policy(ctx: &ExpContext, policy: &dyn SchedulePolicy) -> PolicyResult
     let mut degree_multisets = Vec::new();
     let mut groups_replayed = 0usize;
     let mut groups_placed = 0usize;
+    let mut failed_steps = 0usize;
+    let mut recovery_s = 0.0;
 
     for step in 0..total_steps {
         let seqs = sampler.sample_batch(ctx.gbs);
@@ -335,6 +355,13 @@ pub fn run_policy(ctx: &ExpContext, policy: &dyn SchedulePolicy) -> PolicyResult
         }
         let report = session.step(&seqs);
         if step >= ctx.warmup_steps {
+            recovery_s += report.recovery_time_s;
+            if report.failed.is_some() {
+                // No iteration ran: nothing to average into the
+                // throughput metrics, but the failure is on the record.
+                failed_steps += 1;
+                continue;
+            }
             iter_times.push(report.iteration.iter_time_s);
             tokens_list.push(report.iteration.tokens as f64);
             sched_times.push(report.schedule_time_s);
@@ -377,6 +404,8 @@ pub fn run_policy(ctx: &ExpContext, policy: &dyn SchedulePolicy) -> PolicyResult
         pool: session.pool_stats(),
         pool_groups: session.pool_groups(),
         pool_buffer_bytes: session.pool_buffer_bytes(),
+        failed_steps,
+        recovery_s,
     }
 }
 
@@ -418,7 +447,12 @@ impl PolicySet {
                 let mbs = planner.plan(&trial_batch);
                 let scheduled: Vec<(Vec<Sequence>, Schedule)> = mbs
                     .iter()
-                    .map(|mb| (mb.sequences.clone(), policy.schedule(&mb.sequences)))
+                    .map(|mb| {
+                        let s = policy
+                            .schedule(&mb.sequences)
+                            .expect("tuning runs on an unfragmented mesh");
+                        (mb.sequences.clone(), s)
+                    })
                     .collect();
                 // Tuning compares steady-state iteration time: a warm
                 // pool (one-time creation is amortized over a long run,

@@ -55,7 +55,9 @@ pub fn compute(npus: usize, batch: usize, seed: u64) -> Vec<MeshRow> {
     for (name, schedule, comm) in [
         (
             "Static mesh".to_string(),
-            static_policy.schedule(&seqs),
+            static_policy
+                .schedule(&seqs)
+                .expect("mesh comparison runs on an unfragmented mesh"),
             CommKind::RingCp,
         ),
         ("Dynamic mesh (DHP)".to_string(), dhp.schedule(&seqs), CommKind::RingCp),

@@ -13,6 +13,7 @@ pub mod estimator;
 pub mod harness;
 pub mod mesh_compare;
 pub mod overhead;
+pub mod resilience;
 pub mod scalability;
 
 use anyhow::{bail, Result};
@@ -39,15 +40,16 @@ pub fn reproduce(args: &Args) -> Result<()> {
             "tab2" => overhead::run_npus(args),
             "tab3" => estimator::run(args),
             "tab4" => case_study::run(args),
+            "resilience" => resilience::run(args),
             other => bail!(
-                "unknown experiment {other:?}: expected fig1|fig2|fig4|fig5|fig6|tab1|tab2|tab3|tab4|all"
+                "unknown experiment {other:?}: expected fig1|fig2|fig4|fig5|fig6|tab1|tab2|tab3|tab4|resilience|all"
             ),
         }
     };
     if which == "all" {
         for name in [
             "fig1", "fig2", "tab3", "tab4", "tab1", "tab2", "fig5", "fig4",
-            "fig6",
+            "fig6", "resilience",
         ] {
             println!("\n#### reproduce {name} ####");
             run(name, args)?;

@@ -1,0 +1,281 @@
+//! Resilience under injected faults: goodput vs failure rate (MTBF
+//! sweep) for DHP and the static baselines, all through the same
+//! [`crate::session::DhpSession`] machinery.
+//!
+//! The question this experiment answers is the MegaScale-Omni one
+//! (PAPERS.md): production MLLM training is gated by *workload
+//! resilience*, not steady-state throughput. DHP's per-batch re-solve
+//! means a rank failure shrinks the mesh and the very next schedule
+//! runs on the survivors; a static grid sized for the full mesh can
+//! only report a typed failed step ([`crate::baselines::ScheduleError`])
+//! and retry at full strength once the repair lands. Goodput — useful
+//! steps per simulated second, net of recovery, checkpoint, and
+//! failed-step penalties — is the honest summary of that difference.
+
+use anyhow::Result;
+
+use crate::baselines::SchedulePolicy;
+use crate::cluster::{FaultConfig, FaultInjector};
+use crate::config::presets::by_name;
+use crate::config::TrainStage;
+use crate::data::datasets::DatasetKind;
+use crate::report::Table;
+use crate::util::cli::Args;
+
+use super::harness::{flexsp, ExpContext};
+use super::PolicySet;
+
+/// One (policy, MTBF) cell of the resilience sweep.
+#[derive(Debug, Clone)]
+pub struct ResilienceRow {
+    /// Policy display name.
+    pub policy: String,
+    /// Mean steps between rank failures (0 = fault-free reference).
+    pub mtbf_steps: f64,
+    /// Steps that executed and made training progress.
+    pub useful_steps: usize,
+    /// Steps that ended in a typed schedule failure (no progress).
+    pub failed_steps: usize,
+    /// Total simulated seconds the run consumed (iterations + recovery
+    /// + checkpoints + failed-step stalls).
+    pub total_time_s: f64,
+    /// Total recovery seconds charged (restores, re-warms, lost work).
+    pub recovery_s: f64,
+    /// Total straggle inflation attributed across the run's waves.
+    pub straggle_s: f64,
+    /// Useful steps per total simulated second — the headline metric.
+    pub goodput_steps_per_s: f64,
+    /// Order-sensitive fold of the per-step report digests: two runs of
+    /// the same (ctx, policy, fault seed) must match bit-for-bit, and a
+    /// quiet config must match an injector-free session exactly.
+    pub digest: u64,
+}
+
+/// Run `policy` for `steps` steps under `cfg`'s fault trace, entirely
+/// through the session façade. A failed step (static baseline on a
+/// shrunken mesh) makes no progress but still burns wall-clock: the
+/// cluster stalls for roughly one iteration (the last successful step's
+/// span) plus whatever the fault boundary charged.
+pub fn run_policy_under_faults(
+    ctx: &ExpContext,
+    policy: &dyn SchedulePolicy,
+    cfg: FaultConfig,
+    steps: usize,
+) -> ResilienceRow {
+    let mut session = ctx
+        .session_builder_for(policy.clone_policy())
+        .fault_injector(FaultInjector::new(ctx.replicas(), cfg))
+        .build();
+    let mut sampler = ctx.sampler();
+    let mut useful = 0usize;
+    let mut failed = 0usize;
+    let mut total_time_s = 0.0;
+    let mut recovery_s = 0.0;
+    let mut straggle_s = 0.0;
+    let mut digest: u64 = 0;
+    let mut last_iter_s = 0.0;
+    for _ in 0..steps {
+        let report = session.step(&sampler.sample_batch(ctx.gbs));
+        digest = digest.rotate_left(1) ^ report.digest();
+        recovery_s += report.recovery_time_s;
+        straggle_s += report.iteration.straggle_s;
+        if report.failed.is_some() {
+            failed += 1;
+            total_time_s +=
+                last_iter_s + report.recovery_time_s + report.checkpoint_time_s;
+        } else {
+            useful += 1;
+            last_iter_s = report.iteration.iter_time_s;
+            total_time_s += report.total_time_s();
+        }
+    }
+    ResilienceRow {
+        policy: session.policy_name().to_string(),
+        mtbf_steps: cfg.mtbf_steps,
+        useful_steps: useful,
+        failed_steps: failed,
+        total_time_s,
+        recovery_s,
+        straggle_s,
+        goodput_steps_per_s: if total_time_s > 0.0 {
+            useful as f64 / total_time_s
+        } else {
+            0.0
+        },
+        digest,
+    }
+}
+
+/// Sweep goodput over `mtbfs` (0 = fault-free) for DHP and all three
+/// baselines (tuned per the paper's protocol). Every policy sees the
+/// SAME fault trace at each MTBF (same seed), so cells differ only in
+/// how the policy absorbs the faults.
+pub fn compute(
+    ctx: &ExpContext,
+    mtbfs: &[f64],
+    steps: usize,
+    seed: u64,
+) -> Vec<ResilienceRow> {
+    let set = PolicySet::build(ctx);
+    let flex = flexsp(ctx);
+    let policies: [&dyn SchedulePolicy; 4] =
+        [&set.dhp, &set.megatron, &set.deepspeed, &flex];
+    let mut rows = Vec::new();
+    for &mtbf in mtbfs {
+        let cfg = if mtbf <= 0.0 {
+            FaultConfig::quiet(seed)
+        } else {
+            FaultConfig::mtbf(mtbf, seed)
+        };
+        for policy in policies {
+            rows.push(run_policy_under_faults(ctx, policy, cfg, steps));
+        }
+    }
+    rows
+}
+
+/// `dhp reproduce resilience` entry point.
+pub fn run(args: &Args) -> Result<()> {
+    let npus = args.usize_or("npus", 32)?;
+    let gbs = args.usize_or("gbs", 64)?;
+    let steps = args.usize_or("steps", 30)?;
+    let seed = args.u64_or("seed", 0xFA17)?;
+    let mut ctx = ExpContext::new(
+        by_name("InternVL3-8B").unwrap(),
+        DatasetKind::OpenVid,
+        npus,
+        TrainStage::Full,
+    )
+    .with_gbs(gbs);
+    ctx.seed = seed;
+    let mtbfs = [0.0, 50.0, 20.0, 8.0];
+    let rows = compute(&ctx, &mtbfs, steps, seed);
+
+    let mut t = Table::new(
+        &format!(
+            "Resilience: goodput vs MTBF ({npus} NPUs, {steps} steps, gbs {gbs})"
+        ),
+        &[
+            "MTBF (steps)",
+            "policy",
+            "useful",
+            "failed",
+            "recovery (s)",
+            "goodput (steps/s)",
+        ],
+    );
+    for r in &rows {
+        t.row(vec![
+            if r.mtbf_steps <= 0.0 {
+                "none".to_string()
+            } else {
+                format!("{:.0}", r.mtbf_steps)
+            },
+            r.policy.clone(),
+            r.useful_steps.to_string(),
+            r.failed_steps.to_string(),
+            format!("{:.1}", r.recovery_s),
+            format!("{:.4}", r.goodput_steps_per_s),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::FaultEvent;
+
+    fn test_ctx() -> ExpContext {
+        let mut ctx = ExpContext::new(
+            by_name("InternVL3-2B").unwrap(),
+            DatasetKind::OpenVid,
+            16,
+            TrainStage::Full,
+        )
+        .with_gbs(24);
+        ctx.seed = 0x5EED;
+        ctx
+    }
+
+    #[test]
+    fn same_seed_is_bit_identical() {
+        let ctx = test_ctx();
+        let a = compute(&ctx, &[0.0, 6.0], 5, 11);
+        let b = compute(&ctx, &[0.0, 6.0], 5, 11);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(
+                x.digest, y.digest,
+                "{} at MTBF {} must replay bit-identically",
+                x.policy, x.mtbf_steps
+            );
+            assert_eq!(
+                x.goodput_steps_per_s.to_bits(),
+                y.goodput_steps_per_s.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn quiet_sweep_matches_injector_free_sessions() {
+        let ctx = test_ctx();
+        let dhp = ctx.dhp();
+        let faulted =
+            run_policy_under_faults(&ctx, &dhp, FaultConfig::quiet(3), 4);
+        assert_eq!(faulted.failed_steps, 0);
+        assert_eq!(faulted.recovery_s, 0.0);
+        // The same protocol with no injector installed at all.
+        let mut session = ctx.session_for(dhp.clone_policy());
+        let mut sampler = ctx.sampler();
+        let mut digest: u64 = 0;
+        for _ in 0..4 {
+            let report = session.step(&sampler.sample_batch(ctx.gbs));
+            digest = digest.rotate_left(1) ^ report.digest();
+        }
+        assert_eq!(
+            faulted.digest, digest,
+            "a quiet injector must be zero-drift vs no injector"
+        );
+    }
+
+    #[test]
+    fn dhp_survives_where_the_static_grid_fails_typed() {
+        let ctx = test_ctx();
+        let steps = 12usize;
+        // Deterministically pick a seed whose trace actually fails a
+        // rank inside the window (seeded draws, so this scan is stable).
+        let seed = (0..64u64)
+            .find(|&s| {
+                let mut inj = FaultInjector::new(
+                    ctx.replicas(),
+                    FaultConfig::mtbf(4.0, s),
+                );
+                (0..steps as u64).flat_map(|step| inj.advance(step)).any(
+                    |ev| matches!(ev, FaultEvent::RankFailure { .. }),
+                )
+            })
+            .expect("some seed under MTBF 4 must fail within the window");
+        let cfg = FaultConfig::mtbf(4.0, seed);
+        let set = PolicySet::build(&ctx);
+
+        let dhp = run_policy_under_faults(&ctx, &set.dhp, cfg, steps);
+        assert_eq!(dhp.failed_steps, 0, "DHP must re-solve on survivors");
+        assert_eq!(dhp.useful_steps, steps);
+        assert!(dhp.recovery_s > 0.0, "failures must charge recovery");
+
+        let mega = run_policy_under_faults(&ctx, &set.megatron, cfg, steps);
+        assert!(
+            mega.failed_steps > 0,
+            "the static grid must report typed failed steps"
+        );
+        assert_eq!(mega.useful_steps + mega.failed_steps, steps);
+        assert!(
+            dhp.goodput_steps_per_s > mega.goodput_steps_per_s,
+            "DHP goodput {} must beat the failing static grid's {}",
+            dhp.goodput_steps_per_s,
+            mega.goodput_steps_per_s
+        );
+    }
+}

@@ -36,7 +36,7 @@ use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use crate::baselines::SchedulePolicy;
+use crate::baselines::{ScheduleError, SchedulePolicy};
 use crate::data::sequence::Sequence;
 use crate::parallel::group::GROUP_BUFFER_BYTES_PER_RANK;
 use crate::parallel::mesh::DeviceMesh;
@@ -64,8 +64,11 @@ enum Job {
 pub struct ScheduledBatch {
     /// Step id this schedule belongs to (matches the submit order).
     pub step: u64,
-    /// The placed schedule, groups already prewarmed through the pool.
-    pub schedule: Schedule,
+    /// The placed schedule, groups already prewarmed through the pool —
+    /// or the policy's typed refusal (a static grid on a shrunk mesh),
+    /// which [`crate::session::DhpSession::step`] surfaces as a failed
+    /// step instead of a process abort.
+    pub schedule: Result<Schedule, ScheduleError>,
     /// End-to-end scheduling-phase latency (queueing + packing + DP +
     /// placement + group prewarm) — Tables 1–2 "Schedule Time".
     pub schedule_latency_s: f64,
@@ -201,12 +204,14 @@ impl SchedulePipeline {
                     // Prepare the groups one step ahead (CPU-side
                     // overlap). A schedule the policy just validated
                     // cannot fail placement checks; a failure here would
-                    // be a policy bug, so surface it loudly.
-                    let (reconfig_serial_s, evictions, pool) = match mpu.as_mut() {
-                        Some(mpu) => {
+                    // be a policy bug, so surface it loudly. A typed
+                    // schedule refusal skips the prewarm entirely — there
+                    // is nothing to place.
+                    let (reconfig_serial_s, evictions, pool) = match (mpu.as_mut(), schedule.as_ref()) {
+                        (Some(mpu), Ok(schedule)) => {
                             let evictions_before = mpu.pool_stats().evictions;
                             let paid = mpu
-                                .prepare_schedule(&schedule)
+                                .prepare_schedule(schedule)
                                 .expect("policy emitted an invalid placement");
                             (
                                 paid,
@@ -214,9 +219,10 @@ impl SchedulePipeline {
                                 mpu.pool_stats(),
                             )
                         }
-                        None => (0.0, 0, PoolStats::default()),
+                        _ => (0.0, 0, PoolStats::default()),
                     };
-                    let replay_rate = schedule.replay_rate();
+                    let replay_rate =
+                        schedule.as_ref().map(|s| s.replay_rate()).unwrap_or(0.0);
                     let out = ScheduledBatch {
                         step,
                         schedule,
@@ -348,8 +354,9 @@ mod tests {
         for (i, b) in batches.iter().enumerate() {
             let done = pipe.recv().expect("schedule");
             assert_eq!(done.step, i as u64);
-            done.schedule.validate(b, 8).unwrap();
-            assert!(done.schedule_latency_s >= done.schedule.solve_time_s);
+            let schedule = done.schedule.as_ref().unwrap();
+            schedule.validate(b, 8).unwrap();
+            assert!(done.schedule_latency_s >= schedule.solve_time_s);
         }
         pipe.shutdown();
     }

@@ -79,22 +79,26 @@
 //! );
 //! ```
 
-use std::collections::VecDeque;
+use std::collections::{BTreeSet, VecDeque};
 use std::hash::{Hash, Hasher};
 use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
-use crate::baselines::SchedulePolicy;
-use crate::cluster::{ClusterSim, CommKind, IterationReport};
+use crate::baselines::{ScheduleError, SchedulePolicy};
+use crate::cluster::{
+    ClusterSim, CommKind, FaultEvent, FaultInjector, IterationReport,
+};
 use crate::data::batch::GlobalBatch;
 use crate::data::batch::MicroBatchPlanner;
 use crate::data::sequence::Sequence;
+use crate::parallel::group::GROUP_CREATE_COST_S;
 use crate::parallel::mesh::DeviceMesh;
 use crate::parallel::pool::{PoolCapacity, PoolStats};
 use crate::parallel::{ParallelState, RankId};
 use crate::scheduler::pipeline::{ScheduledBatch, SchedulePipeline};
 use crate::scheduler::{FabricKind, FabricModel, Schedule};
+use crate::train::CheckpointCostModel;
 
 #[allow(unused_imports)] // doc links
 use crate::parallel::GroupPool;
@@ -173,6 +177,22 @@ pub struct StepReport {
     pub pool_groups: usize,
     /// Modeled communicator-buffer bytes those groups pin.
     pub pool_buffer_bytes: u64,
+    /// Fault events the injector delivered at this step's boundary
+    /// (empty without an injector — and with a quiet one).
+    pub faults: Vec<FaultEvent>,
+    /// `Some` when the policy could not schedule on the current mesh (a
+    /// static baseline refusing a shrunken grid): nothing executed, no
+    /// progress was made, and the next step retries. `None` on every
+    /// successful step.
+    pub failed: Option<ScheduleError>,
+    /// Simulated recovery charge paid at this step's boundary:
+    /// checkpoint restore + torn-group re-warm + work lost since the
+    /// last checkpoint (failures), or re-warm only (preemption /
+    /// straggler fencing). 0 on fault-free steps.
+    pub recovery_time_s: f64,
+    /// Simulated periodic-checkpoint save charge (nonzero only on steps
+    /// where the checkpoint cadence fires).
+    pub checkpoint_time_s: f64,
 }
 
 impl StepReport {
@@ -212,9 +232,11 @@ impl StepReport {
         it.reconfig_time_s.to_bits().hash(&mut h);
         it.reconfig_serial_s.to_bits().hash(&mut h);
         it.iter_time_s.to_bits().hash(&mut h);
+        it.straggle_s.to_bits().hash(&mut h);
         for w in &it.waves {
             w.makespan_s.to_bits().hash(&mut h);
             w.idle_fraction.to_bits().hash(&mut h);
+            w.straggle_s.to_bits().hash(&mut h);
         }
         self.pool.hits.hash(&mut h);
         self.pool.misses.hash(&mut h);
@@ -224,7 +246,28 @@ impl StepReport {
         self.evictions.hash(&mut h);
         self.pool_groups.hash(&mut h);
         self.pool_buffer_bytes.hash(&mut h);
+        self.recovery_time_s.to_bits().hash(&mut h);
+        self.checkpoint_time_s.to_bits().hash(&mut h);
+        self.faults.len().hash(&mut h);
+        for f in &self.faults {
+            f.digest_into(&mut h);
+        }
+        match &self.failed {
+            None => 0u8.hash(&mut h),
+            Some(e) => {
+                1u8.hash(&mut h);
+                e.digest_into(&mut h);
+            }
+        }
         h.finish()
+    }
+
+    /// Simulated wall this step actually cost the trainer: the executed
+    /// iteration plus any recovery and checkpoint charges. The goodput
+    /// denominator of the resilience bench (useful steps per total
+    /// second).
+    pub fn total_time_s(&self) -> f64 {
+        self.iteration.iter_time_s + self.recovery_time_s + self.checkpoint_time_s
     }
 }
 
@@ -238,6 +281,10 @@ pub struct SessionBuilder {
     planner: Option<MicroBatchPlanner>,
     depth: usize,
     warm_start: bool,
+    injector: Option<FaultInjector>,
+    ckpt_interval: u64,
+    ckpt_cost: Option<CheckpointCostModel>,
+    fence_threshold: Option<u32>,
 }
 
 impl SessionBuilder {
@@ -256,6 +303,10 @@ impl SessionBuilder {
             planner: None,
             depth: 2,
             warm_start: true,
+            injector: None,
+            ckpt_interval: 10,
+            ckpt_cost: None,
+            fence_threshold: None,
         }
     }
 
@@ -298,9 +349,52 @@ impl SessionBuilder {
         self
     }
 
+    /// Drive the session from a seeded [`FaultInjector`]: every
+    /// [`DhpSession::step`] first advances the injector one step
+    /// boundary and applies its events — failures/preemptions shrink
+    /// the mesh (pooled groups spanning dead ranks are invalidated, the
+    /// next solve runs on the survivors), stragglers install transient
+    /// per-rank slowdowns, recoveries re-admit capacity. A quiet
+    /// injector is behaviorally identical to none (the zero-drift
+    /// invariant the resilience bench enforces).
+    pub fn fault_injector(mut self, injector: FaultInjector) -> Self {
+        self.injector = Some(injector);
+        self
+    }
+
+    /// Checkpoint every `steps` successful steps (default 10; 0
+    /// disables). The save cost is charged to the checkpointing step's
+    /// report; a later rank failure replays only the work since the
+    /// last checkpoint.
+    pub fn checkpoint_interval(mut self, steps: u64) -> Self {
+        self.ckpt_interval = steps;
+        self
+    }
+
+    /// Override the checkpoint save/restore cost model (default:
+    /// [`CheckpointCostModel::for_params`] over the simulator's model
+    /// preset).
+    pub fn checkpoint_cost(mut self, model: CheckpointCostModel) -> Self {
+        self.ckpt_cost = Some(model);
+        self
+    }
+
+    /// Fence a rank out of placement once it has straggled this many
+    /// times (chronic-straggler quarantine, the solver-facing half of
+    /// straggler mitigation). Default off: stragglers only stretch
+    /// their waves.
+    pub fn straggler_fence_threshold(mut self, threshold: u32) -> Self {
+        self.fence_threshold = Some(threshold.max(1));
+        self
+    }
+
     /// Spawn the scheduling thread and assemble the session.
     pub fn build(self) -> DhpSession {
+        let ckpt_cost = self
+            .ckpt_cost
+            .unwrap_or_else(|| CheckpointCostModel::for_params(self.sim.preset.params_b));
         let mesh = self.sim.mesh.clone();
+        let replicas = mesh.replicas;
         let mut policy = self.policy;
         // One topology owner from the first solve on.
         policy.sync_mesh(&mesh);
@@ -330,6 +424,16 @@ impl SessionBuilder {
             prev_compute_s: 0.0,
             unsubmitted: VecDeque::new(),
             pending: VecDeque::new(),
+            injector: self.injector,
+            ckpt_cost,
+            ckpt_interval: self.ckpt_interval,
+            fence_threshold: self.fence_threshold,
+            work_since_ckpt_s: 0.0,
+            straggle_counts: vec![0; replicas],
+            downed: BTreeSet::new(),
+            fenced: BTreeSet::new(),
+            pending_faults: Vec::new(),
+            pending_recovery_s: 0.0,
         }
     }
 }
@@ -375,6 +479,30 @@ pub struct DhpSession {
     unsubmitted: VecDeque<(u64, Vec<Sequence>)>,
     /// Prefetched steps awaiting execution, oldest first.
     pending: VecDeque<PendingStep>,
+    /// Per-step fault-trace source (None = no faults ever).
+    injector: Option<FaultInjector>,
+    /// Checkpoint save/restore cost model (recovery accounting).
+    ckpt_cost: CheckpointCostModel,
+    /// Checkpoint every this many successful steps (0 disables).
+    ckpt_interval: u64,
+    /// Fence ranks after this many straggle events (None = never).
+    fence_threshold: Option<u32>,
+    /// Simulated seconds of progress since the last checkpoint — the
+    /// work a rank failure replays.
+    work_since_ckpt_s: f64,
+    /// Per-rank straggle-event counts (chronic-offender detection).
+    straggle_counts: Vec<u32>,
+    /// Ranks currently lost to failures or preemption; their `Recovery`
+    /// re-admits exactly these.
+    downed: BTreeSet<RankId>,
+    /// Ranks permanently fenced off as chronic stragglers (never
+    /// re-admitted by `Recovery`).
+    fenced: BTreeSet<RankId>,
+    /// Fault events applied at the upcoming step's boundary, attached
+    /// to its report when it executes.
+    pending_faults: Vec<FaultEvent>,
+    /// Recovery charge accrued at the upcoming step's boundary.
+    pending_recovery_s: f64,
 }
 
 impl DhpSession {
@@ -397,6 +525,17 @@ impl DhpSession {
     /// [`MeshEvent`]).
     pub fn mesh(&self) -> &DeviceMesh {
         &self.mpu.mesh
+    }
+
+    /// Ranks currently lost to rank failures or co-tenant preemption
+    /// (fault-injector driven; empty without an injector).
+    pub fn downed_ranks(&self) -> Vec<RankId> {
+        self.downed.iter().copied().collect()
+    }
+
+    /// Ranks permanently fenced out of placement as chronic stragglers.
+    pub fn fenced_ranks(&self) -> Vec<RankId> {
+        self.fenced.iter().copied().collect()
     }
 
     /// Cumulative pool statistics since the last
@@ -444,6 +583,128 @@ impl DhpSession {
                 break;
             }
         }
+    }
+
+    /// Commit a fault-driven occupancy change to every topology
+    /// consumer — the authoritative mesh, the simulator, and (through
+    /// the ordered pipeline control channel) the scheduling policy —
+    /// and tear pooled groups spanning newly occupied ranks. Returns
+    /// how many groups were torn down (the re-warm charge base).
+    fn commit_occupancy(&mut self, occupy: &[RankId], release: &[RankId]) -> usize {
+        let mut mesh = self.mpu.mesh.clone();
+        if !occupy.is_empty() {
+            mesh.occupy(occupy);
+        }
+        if !release.is_empty() {
+            mesh.release(release);
+        }
+        self.mpu.mesh = mesh.clone();
+        self.sim.mesh = mesh.clone();
+        self.pipe.sync_mesh(mesh);
+        if occupy.is_empty() {
+            0
+        } else {
+            self.mpu.pool_mut().invalidate_ranks(occupy)
+        }
+    }
+
+    /// True if `rank` can be taken away right now: in range, currently
+    /// free to this job, and not the last free replica (a job with zero
+    /// replicas is a different experiment, not a degraded run).
+    fn take_down(&self, rank: RankId) -> bool {
+        rank < self.mpu.mesh.replicas
+            && self.mpu.mesh.is_rank_free(rank)
+            && self.mpu.mesh.free_replicas() > 1
+    }
+
+    /// Advance the fault injector to the next step boundary and apply
+    /// its events: recoveries re-admit downed ranks, failures and
+    /// preemptions shrink the mesh (charging restore / lost-work /
+    /// re-warm into the step's recovery time), stragglers install
+    /// transient slowdowns — or, past the fence threshold, quarantine
+    /// the offender out of placement. Events the live mesh makes
+    /// impossible (dead-rank double-kill, last-rank kill, out-of-range
+    /// scripted ranks) are skipped, never panicked on. The events and
+    /// the accrued charge ride on the next executed step's report.
+    fn apply_faults(&mut self) {
+        // Straggler slowdowns are transient: one step only.
+        self.sim.clear_slowdowns();
+        let mut injector = match self.injector.take() {
+            Some(injector) => injector,
+            None => return,
+        };
+        let events = injector.advance(self.next_step);
+        self.injector = Some(injector);
+        let mut recovery = 0.0;
+        for ev in &events {
+            match ev {
+                FaultEvent::Recovery { ranks } => {
+                    // Re-admit only ranks THIS machinery downed and that
+                    // are still occupied (a mesh event may have released
+                    // them already); fenced ranks stay fenced.
+                    let back: Vec<RankId> = ranks
+                        .iter()
+                        .copied()
+                        .filter(|&r| {
+                            self.downed.remove(&r) && !self.mpu.mesh.is_rank_free(r)
+                        })
+                        .collect();
+                    if !back.is_empty() {
+                        self.commit_occupancy(&[], &back);
+                    }
+                }
+                FaultEvent::RankFailure { rank } => {
+                    if self.take_down(*rank) {
+                        let torn = self.commit_occupancy(&[*rank], &[]);
+                        self.downed.insert(*rank);
+                        // A failure loses device state: restore the last
+                        // checkpoint, re-warm the torn groups, redo the
+                        // work since that checkpoint.
+                        recovery += self.ckpt_cost.restore_time_s()
+                            + torn as f64 * GROUP_CREATE_COST_S
+                            + self.work_since_ckpt_s;
+                        self.work_since_ckpt_s = 0.0;
+                        // No compute span survives a restore to hide the
+                        // next step's prewarm behind.
+                        self.prev_compute_s = 0.0;
+                    }
+                }
+                FaultEvent::Preemption { ranks, .. } => {
+                    for &r in ranks {
+                        if self.take_down(r) {
+                            let torn = self.commit_occupancy(&[r], &[]);
+                            self.downed.insert(r);
+                            // No state lost: the job shrinks and only
+                            // re-warms what the leaving ranks tore.
+                            recovery += torn as f64 * GROUP_CREATE_COST_S;
+                        }
+                    }
+                }
+                FaultEvent::Straggler { rank, slowdown } => {
+                    let r = *rank;
+                    if r >= self.mpu.mesh.replicas || !self.mpu.mesh.is_rank_free(r) {
+                        continue;
+                    }
+                    self.straggle_counts[r] += 1;
+                    let chronic = match self.fence_threshold {
+                        Some(t) => self.straggle_counts[r] >= t,
+                        None => false,
+                    };
+                    if chronic && self.mpu.mesh.free_replicas() > 1 {
+                        // Quarantine the chronic offender: placement
+                        // stops seeing it, as if a co-tenant occupied it
+                        // for good.
+                        let torn = self.commit_occupancy(&[r], &[]);
+                        self.fenced.insert(r);
+                        recovery += torn as f64 * GROUP_CREATE_COST_S;
+                    } else {
+                        self.sim.set_slowdown(r, *slowdown);
+                    }
+                }
+            }
+        }
+        self.pending_faults = events;
+        self.pending_recovery_s = recovery;
     }
 
     /// Hand the next batch to the background scheduling thread WITHOUT
@@ -506,6 +767,9 @@ impl DhpSession {
              before calling step()",
             self.pending.len()
         );
+        // Faults land at the step boundary, BEFORE the solve: the
+        // schedule must see the post-fault mesh.
+        self.apply_faults();
         self.prefetch(seqs);
         self.step_prefetched(prewarm_slack_s)
             .expect("a batch was just prefetched")
@@ -536,13 +800,67 @@ impl DhpSession {
         // Keep any later prefetched step flowing in the background.
         self.pump();
 
+        // Boundary faults (if any) ride on this step's report.
+        let faults = std::mem::take(&mut self.pending_faults);
+        let recovery_time_s = std::mem::take(&mut self.pending_recovery_s);
+
         let schedule_latency_s: f64 =
             pending.received.iter().map(|b| b.schedule_latency_s).sum();
-        let scheduled: Vec<(Vec<Sequence>, Schedule)> = pending
-            .mbs
-            .into_iter()
-            .zip(pending.received.into_iter().map(|b| b.schedule))
-            .collect();
+        let n_mbs = pending.mbs.len();
+        let mut failed: Option<ScheduleError> = None;
+        let mut scheduled: Vec<(Vec<Sequence>, Schedule)> = Vec::with_capacity(n_mbs);
+        for (mb, sb) in pending.mbs.into_iter().zip(pending.received.into_iter()) {
+            match sb.schedule {
+                Ok(schedule) => scheduled.push((mb, schedule)),
+                Err(err) => {
+                    if failed.is_none() {
+                        failed = Some(err);
+                    }
+                }
+            }
+        }
+        if let Some(err) = failed {
+            // A static policy that cannot fit the shrunken mesh reports
+            // a typed failed step instead of panicking: nothing
+            // executes, no progress is made, and the next step retries
+            // at whatever strength the mesh then offers. An iteration
+            // cannot half-run (gradient sync needs every micro-batch),
+            // so any schedule that did solve is discarded untouched.
+            let schedule_time_s = pending.sched_span_s + t_drain.elapsed().as_secs_f64();
+            self.prev_compute_s = 0.0;
+            return Some(StepReport {
+                step: pending.step,
+                schedules: Vec::new(),
+                micro_batches: n_mbs,
+                schedule_time_s,
+                schedule_latency_s,
+                solver_time_s: 0.0,
+                dispatch_items: 0,
+                fabric_fingerprint: self.fabric_fingerprint(),
+                groups_placed: 0,
+                groups_replayed: 0,
+                replay_rate: 0.0,
+                iteration: IterationReport {
+                    waves: Vec::new(),
+                    exec_time_s: 0.0,
+                    grad_sync_s: 0.0,
+                    reconfig_time_s: 0.0,
+                    reconfig_serial_s: 0.0,
+                    iter_time_s: 0.0,
+                    straggle_s: 0.0,
+                    tokens: 0,
+                },
+                idle_fraction: 0.0,
+                evictions: 0,
+                pool: self.mpu.pool_stats(),
+                pool_groups: self.mpu.pool_size(),
+                pool_buffer_bytes: self.mpu.pool_buffer_bytes(),
+                faults,
+                failed: Some(err),
+                recovery_time_s,
+                checkpoint_time_s: 0.0,
+            });
+        }
         let solver_time_s: f64 = scheduled.iter().map(|(_, s)| s.solve_time_s).sum();
         // Executor preparation is part of the scheduling phase: per-rank
         // data dispatch lists.
@@ -599,6 +917,17 @@ impl DhpSession {
         iteration.iter_time_s = iteration.exec_time_s + iteration.grad_sync_s + charged;
         self.prev_compute_s = iteration.exec_time_s + iteration.grad_sync_s;
         self.executed += 1;
+        // This step's progress is at risk until the next checkpoint; the
+        // cadence is injector-independent so a fault-free faulted run
+        // and a no-injector run stay bit-identical.
+        self.work_since_ckpt_s += iteration.iter_time_s;
+        let checkpoint_time_s =
+            if self.ckpt_interval > 0 && self.executed % self.ckpt_interval == 0 {
+                self.work_since_ckpt_s = 0.0;
+                self.ckpt_cost.save_time_s()
+            } else {
+                0.0
+            };
 
         let (mut groups_placed, mut groups_replayed) = (0usize, 0usize);
         for (_, s) in &scheduled {
@@ -637,6 +966,10 @@ impl DhpSession {
             pool_buffer_bytes: self.mpu.pool_buffer_bytes(),
             iteration,
             schedules,
+            faults,
+            failed: None,
+            recovery_time_s,
+            checkpoint_time_s,
         })
     }
 
@@ -795,7 +1128,7 @@ mod tests {
 
     /// Paper regime: one replica = TP×PP = 4 NPUs, 2 replicas/node — CP
     /// degrees ≥ 3 cross nodes, so occupancy changes flip locality.
-    fn dhp_session(replicas: usize) -> DhpSession {
+    fn paper_regime(replicas: usize) -> (CostModel, ClusterConfig) {
         let mut cluster = ClusterConfig::default().with_npus(replicas * 4);
         cluster.tp = 2;
         cluster.pp = 2;
@@ -812,9 +1145,28 @@ mod tests {
                 m_token: preset.act_bytes_per_token(),
             },
         };
+        (cost, cluster)
+    }
+
+    fn dhp_builder(replicas: usize) -> SessionBuilder {
+        let (cost, cluster) = paper_regime(replicas);
+        let preset = by_name("InternVL3-8B").unwrap();
         let scheduler = Scheduler::new(cost, crate::parallel::DeviceMesh::new(&cluster));
         let sim = ClusterSim::new(preset, TrainStage::Full, cluster);
-        DhpSession::builder(Box::new(scheduler), sim).build()
+        DhpSession::builder(Box::new(scheduler), sim)
+    }
+
+    fn dhp_session(replicas: usize) -> DhpSession {
+        dhp_builder(replicas).build()
+    }
+
+    fn megatron_builder(replicas: usize) -> SessionBuilder {
+        let (cost, cluster) = paper_regime(replicas);
+        let preset = by_name("InternVL3-8B").unwrap();
+        let policy =
+            crate::baselines::MegatronStaticCp::new(2, replicas, cost, 12.5e9);
+        let sim = ClusterSim::new(preset, TrainStage::Full, cluster);
+        DhpSession::builder(Box::new(policy), sim)
     }
 
     #[test]
@@ -1005,5 +1357,188 @@ mod tests {
         assert_eq!(r1.iteration.reconfig_serial_s, 0.0);
         assert_eq!(r1.iteration.reconfig_time_s, 0.0);
         assert!(r1.replay_rate > 0.99, "stationary batch must replay");
+    }
+
+    #[test]
+    fn rank_failure_shrinks_resolves_and_charges_recovery() {
+        let script = vec![
+            vec![],
+            vec![FaultEvent::RankFailure { rank: 2 }],
+            vec![],
+            vec![FaultEvent::Recovery { ranks: vec![2] }],
+        ];
+        let mut session = dhp_builder(8)
+            .fault_injector(FaultInjector::scripted(8, script))
+            .build();
+        let mut sampler = sampler(DatasetKind::Msrvtt, 0xFA11);
+        let batch = sampler.sample_batch(16);
+
+        let r0 = session.step(&batch);
+        assert!(r0.failed.is_none());
+        assert!(r0.faults.is_empty());
+        assert_eq!(r0.recovery_time_s, 0.0);
+        assert_eq!(session.mesh().free_replicas(), 8);
+
+        // The failure lands BEFORE step 1's solve: DHP re-solves on the
+        // 7 survivors and completes the step.
+        let r1 = session.step(&batch);
+        assert_eq!(r1.faults, vec![FaultEvent::RankFailure { rank: 2 }]);
+        assert!(r1.failed.is_none(), "DHP must re-solve on survivors");
+        assert!(r1.iteration.iter_time_s > 0.0);
+        assert_eq!(session.mesh().free_replicas(), 7);
+        assert_eq!(session.downed_ranks(), vec![2]);
+        for s in &r1.schedules {
+            for w in &s.waves {
+                for g in &w.groups {
+                    assert!(!g.ranks.contains(&2), "dead rank placed");
+                }
+            }
+        }
+        // Recovery is charged honestly: at least the checkpoint restore,
+        // plus the step-0 work lost since the (nonexistent) checkpoint.
+        let restore = CheckpointCostModel::for_params(8.0).restore_time_s();
+        assert!(
+            r1.recovery_time_s >= restore + r0.iteration.iter_time_s,
+            "recovery {} must cover restore {} + lost work {}",
+            r1.recovery_time_s,
+            restore,
+            r0.iteration.iter_time_s
+        );
+        assert!(r1.total_time_s() > r1.iteration.iter_time_s);
+
+        let r2 = session.step(&batch);
+        assert!(r2.failed.is_none());
+        assert_eq!(r2.recovery_time_s, 0.0);
+
+        // Repair completes: the rank is re-admitted and capacity returns.
+        let r3 = session.step(&batch);
+        assert_eq!(r3.faults, vec![FaultEvent::Recovery { ranks: vec![2] }]);
+        assert_eq!(session.mesh().free_replicas(), 8);
+        assert!(session.downed_ranks().is_empty());
+    }
+
+    #[test]
+    fn quiet_injector_is_bit_identical_to_no_injector() {
+        use crate::cluster::FaultConfig;
+        let run = |with_injector: bool| -> Vec<u64> {
+            let mut builder = dhp_builder(8);
+            if with_injector {
+                builder = builder
+                    .fault_injector(FaultInjector::new(8, FaultConfig::quiet(7)));
+            }
+            let mut session = builder.build();
+            let mut sampler = sampler(DatasetKind::OpenVid, 0x2E20);
+            (0..4)
+                .map(|_| session.step(&sampler.sample_batch(12)).digest())
+                .collect()
+        };
+        assert_eq!(
+            run(true),
+            run(false),
+            "a quiet injector must not drift from the fault-free path"
+        );
+    }
+
+    #[test]
+    fn chronic_straggler_is_fenced_at_threshold() {
+        let straggle = |rank| {
+            vec![FaultEvent::Straggler {
+                rank,
+                slowdown: 3.0,
+            }]
+        };
+        let mut session = dhp_builder(8)
+            .fault_injector(FaultInjector::scripted(8, vec![
+                straggle(1),
+                straggle(1),
+                straggle(1),
+            ]))
+            .straggler_fence_threshold(3)
+            .build();
+        let mut sampler = sampler(DatasetKind::InternVid, 0x57A6);
+        let batch = sampler.sample_batch(16);
+
+        let r0 = session.step(&batch);
+        assert_eq!(r0.faults.len(), 1);
+        assert!(session.fenced_ranks().is_empty());
+        // If the slowed rank was placed, its waves must show inflation.
+        let touches_rank_1 = r0
+            .schedules
+            .iter()
+            .flat_map(|s| &s.waves)
+            .flat_map(|w| &w.groups)
+            .any(|g| g.ranks.contains(&1));
+        if touches_rank_1 {
+            assert!(r0.iteration.straggle_s > 0.0);
+        }
+
+        let _ = session.step(&batch);
+        assert!(session.fenced_ranks().is_empty(), "below threshold");
+
+        // Third strike: the rank is fenced BEFORE the solve, so this
+        // step's schedule already avoids it and nothing is slowed.
+        let r2 = session.step(&batch);
+        assert_eq!(session.fenced_ranks(), vec![1]);
+        assert_eq!(session.mesh().free_replicas(), 7);
+        assert_eq!(r2.iteration.straggle_s, 0.0);
+        for s in &r2.schedules {
+            for w in &s.waves {
+                for g in &w.groups {
+                    assert!(!g.ranks.contains(&1), "fenced rank placed");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn static_baseline_reports_typed_failed_steps_and_recovers() {
+        let script = vec![
+            vec![FaultEvent::RankFailure { rank: 0 }],
+            vec![],
+            vec![FaultEvent::Recovery { ranks: vec![0] }],
+        ];
+        let mut session = megatron_builder(8)
+            .fault_injector(FaultInjector::scripted(8, script))
+            .build();
+        let mut sampler = sampler(DatasetKind::Msrvtt, 0x3E66);
+        let batch = sampler.sample_batch(16);
+
+        // The static grid cannot fit 7 replicas: a typed failed step,
+        // not a panic — and the recovery charge is still accounted.
+        let r0 = session.step(&batch);
+        match &r0.failed {
+            Some(ScheduleError::MeshShrunk { need, free, .. }) => {
+                assert_eq!((*need, *free), (8, 7));
+            }
+            other => panic!("expected MeshShrunk, got {other:?}"),
+        }
+        assert!(r0.schedules.is_empty());
+        assert_eq!(r0.iteration.iter_time_s, 0.0);
+        assert!(r0.recovery_time_s > 0.0, "the failure itself still bills");
+
+        // Still shrunk: still failing, still not panicking.
+        let r1 = session.step(&batch);
+        assert!(r1.failed.is_some());
+
+        // Repair restores full strength: the baseline retries and runs.
+        let r2 = session.step(&batch);
+        assert!(r2.failed.is_none(), "full-strength retry must succeed");
+        assert!(r2.iteration.iter_time_s > 0.0);
+    }
+
+    #[test]
+    fn checkpoint_cadence_charges_saves() {
+        let mut session = dhp_builder(8).checkpoint_interval(2).build();
+        let mut sampler = sampler(DatasetKind::Msrvtt, 0xC4D);
+        let batch = sampler.sample_batch(12);
+        let save = CheckpointCostModel::for_params(8.0).save_time_s();
+
+        let r0 = session.step(&batch);
+        assert_eq!(r0.checkpoint_time_s, 0.0);
+        let r1 = session.step(&batch);
+        assert!((r1.checkpoint_time_s - save).abs() < 1e-12);
+        assert!(r1.total_time_s() > r1.iteration.iter_time_s);
+        let r2 = session.step(&batch);
+        assert_eq!(r2.checkpoint_time_s, 0.0);
     }
 }

@@ -12,7 +12,7 @@ use anyhow::Result;
 use crate::util::cli::Args;
 
 pub use adam::{average_grads, Adam, AdamConfig};
-pub use checkpoint::Checkpoint;
+pub use checkpoint::{Checkpoint, CheckpointCostModel};
 pub use trainer::{run, StepRecord, TrainReport, TrainerConfig};
 
 /// `dhp train` — real end-to-end training on the AOT artifacts.

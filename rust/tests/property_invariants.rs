@@ -447,6 +447,90 @@ fn micro_batch_planner_partitions_any_stream() {
 }
 
 #[test]
+fn session_apply_rejects_atomically_under_adversarial_traces() {
+    // ISSUE-6 acceptance property: a rejected MeshEvent trace must leave
+    // the session EXACTLY as it was. We drive a "dirty" session with
+    // adversarial traces (out-of-range ranks, double-occupies, releases
+    // of free ranks, all-occupying traces — several with a VALID prefix,
+    // so rejection must also roll that prefix back) and a "clean" twin
+    // that never sees them; after every Err, the next step's digest must
+    // match the twin's bit-for-bit.
+    use dhp::experiments::harness::ExpContext;
+    use dhp::session::MeshEvent;
+    forall(10, 0xA7DC, |rng| {
+        let npus = *rng.choose(&[16usize, 32]);
+        let mut ctx = ExpContext::new(
+            by_name("InternVL3-2B").unwrap(),
+            DatasetKind::OpenVid,
+            npus,
+            TrainStage::Full,
+        )
+        .with_gbs(16);
+        ctx.seed = rng.next_u64();
+        let mut dirty = ctx.session_for(Box::new(ctx.dhp()));
+        let mut clean = ctx.session_for(Box::new(ctx.dhp()));
+        let mut sampler = ctx.sampler();
+        let n = ctx.replicas();
+        for round in 0..4 {
+            // Occasionally move BOTH twins to the same legal occupancy,
+            // so the adversarial traces also hit fragmented meshes.
+            if rng.bool(0.5) {
+                let free: Vec<usize> =
+                    (0..n).filter(|&r| dirty.mesh().is_rank_free(r)).collect();
+                if free.len() > 2 {
+                    let legal = vec![MeshEvent::Occupy(vec![free[0]])];
+                    dirty.apply(&legal).map_err(|e| format!("{e}"))?;
+                    clean.apply(&legal).map_err(|e| format!("{e}"))?;
+                }
+            }
+            let free: Vec<usize> =
+                (0..n).filter(|&r| dirty.mesh().is_rank_free(r)).collect();
+            let held: Vec<usize> =
+                (0..n).filter(|&r| !dirty.mesh().is_rank_free(r)).collect();
+            let trace = match rng.range_usize(0, 5) {
+                // Out-of-range rank.
+                0 => vec![MeshEvent::Occupy(vec![n + rng.range_usize(0, 4)])],
+                // Double-occupy of the same rank within one event.
+                1 => vec![MeshEvent::Occupy(vec![free[0], free[0]])],
+                // Valid prefix, then a release of a rank nobody holds.
+                2 => vec![
+                    MeshEvent::Occupy(vec![free[0]]),
+                    MeshEvent::Release(vec![*rng.choose(&free[1..])]),
+                ],
+                // Occupying every free rank leaves nothing to schedule.
+                3 => vec![MeshEvent::Occupy(free.clone())],
+                // Valid release prefix, then out-of-range; or, on a
+                // fully free mesh, a release of an unheld rank.
+                _ => match held.first() {
+                    Some(&h) => vec![
+                        MeshEvent::Release(vec![h]),
+                        MeshEvent::Occupy(vec![n]),
+                    ],
+                    None => vec![MeshEvent::Release(vec![free[0]])],
+                },
+            };
+            if dirty.apply(&trace).is_ok() {
+                return Err(format!(
+                    "round {round}: adversarial trace {trace:?} was accepted"
+                ));
+            }
+            let batch = sampler.sample_batch(ctx.gbs);
+            let a = dirty.step(&batch);
+            let b = clean.step(&batch);
+            if a.digest() != b.digest() {
+                return Err(format!(
+                    "round {round}: digests diverged after rejected trace \
+                     {trace:?}: {:#018x} vs {:#018x}",
+                    a.digest(),
+                    b.digest()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn cost_model_monotonicities() {
     forall(200, 0xA114, |rng| {
         let preset = rng.choose(&PRESETS).clone();

@@ -74,9 +74,10 @@ fn async_pipeline_with_simulated_training_loop() {
         let done = pipe.recv().unwrap();
         assert_eq!(done.step, step);
         let seqs = &batches[step as usize];
-        done.schedule.validate(seqs, ctx.replicas()).unwrap();
+        let schedule = done.schedule.unwrap();
+        schedule.validate(seqs, ctx.replicas()).unwrap();
         total_sim += sim
-            .execute_schedule(seqs, &done.schedule, CommKind::RingCp)
+            .execute_schedule(seqs, &schedule, CommKind::RingCp)
             .iter()
             .map(|w| w.makespan_s)
             .sum::<f64>();
@@ -99,7 +100,7 @@ fn dispatch_lists_cover_plans_for_all_policies() {
         [&set.megatron, &set.deepspeed, &set.dhp];
     for policy in policies {
         for mb in &mbs {
-            let schedule = policy.schedule(&mb.sequences);
+            let schedule = policy.schedule(&mb.sequences).unwrap();
             for plan in &schedule.waves {
                 let entries = dispatch(&mb.sequences, plan);
                 // Every assigned sequence's tokens are fully covered.
@@ -180,7 +181,9 @@ fn property_every_policy_schedules_any_workload() {
         let policies: [&dyn SchedulePolicy; 3] =
             [&set.megatron, &set.deepspeed, &set.dhp];
         for policy in policies {
-            let schedule = policy.schedule(&seqs);
+            let schedule = policy
+                .schedule(&seqs)
+                .map_err(|e| format!("{} refused a full mesh: {e}", policy.name()))?;
             schedule
                 .validate(&seqs, c.replicas())
                 .map_err(|e| format!("{} on {n} seqs: {e}", policy.name()))?;

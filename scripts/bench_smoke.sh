@@ -48,9 +48,19 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
 cargo bench --bench solver_micro -- --quick
 
+# Resilience gate (ISSUE-6): the quick MTBF sweep runs DHP and every
+# baseline through the session facade under seeded fault traces, and the
+# bench itself exits non-zero if the zero-fault (quiet-injector) goodput
+# path is not bit-identical to a session with no injector at all.
+cargo bench --bench resilience -- --quick
+
 echo
 echo "=== BENCH_solver_micro.json ==="
 cat BENCH_solver_micro.json
+
+echo
+echo "=== BENCH_resilience.json ==="
+cat BENCH_resilience.json
 
 if [[ "$COMPARE" == "1" ]]; then
     if [[ ! -f "$BASELINE" ]]; then
