@@ -8,9 +8,11 @@
 //!   cargo bench --bench solver_micro              # full repetitions
 //!   cargo bench --bench solver_micro -- --quick   # CI smoke (fewer reps)
 //!
-//! Both modes persist machine-readable per-case mean/p50 latencies to
+//! Both modes persist machine-readable per-case mean/p50/p90 latencies to
 //! `BENCH_solver_micro.json` at the repo root (see scripts/bench_smoke.sh)
-//! so future PRs can track the solver-latency trajectory.
+//! so future PRs can track the solver-latency trajectory. The ISSUE-7
+//! scale tier (npus=1024 and npus=4096) benches `schedule()` alone — the
+//! reference path is quadratic in N and would run for minutes there.
 
 use std::path::Path;
 
@@ -76,6 +78,27 @@ fn main() {
                 std::hint::black_box(sch.schedule_reference(&seqs));
             },
         );
+    }
+
+    // ISSUE-7 scale tier: the paper's large-cluster regimes. No
+    // `schedule_reference` pair here — the seed's O(K'·N²) exact-j DP
+    // takes minutes at N=4096, while the monotone-sweep solver on the
+    // persistent pool is the sub-millisecond claim under test
+    // (scripts/bench_smoke.sh gates the npus=1024 case on a 1 ms p90
+    // budget).
+    for (npus, gbs) in [(1024usize, 2048usize), (4096, 8192)] {
+        let ctx = ExpContext::new(
+            by_name("InternVL3-8B").unwrap(),
+            DatasetKind::OpenVid,
+            npus,
+            TrainStage::Full,
+        );
+        let mut sampler = ctx.sampler();
+        let seqs = sampler.sample_batch(gbs);
+        let sch = ctx.dhp();
+        report.bench(&format!("schedule_gbs{gbs}_npus{npus}"), sch_w, sch_r, || {
+            std::hint::black_box(sch.schedule(&seqs));
+        });
     }
 
     // Pure DP at K'=64 groups / N=16 ranks (the O(K'N²) → O(K'N log N)

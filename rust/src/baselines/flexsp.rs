@@ -52,6 +52,15 @@ impl SchedulePolicy for FlexSp {
     fn fabric_kind(&self) -> crate::scheduler::FabricKind {
         self.inner.fabric
     }
+
+    fn attach_search_pool(
+        &mut self,
+        pool: std::sync::Arc<crate::scheduler::SearchPool>,
+    ) {
+        // FlexSP runs the same parallel outer search as DHP (only the
+        // degree filter differs), so it benefits identically.
+        self.inner.set_search_pool(pool);
+    }
 }
 
 #[cfg(test)]

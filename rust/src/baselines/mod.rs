@@ -111,6 +111,12 @@ pub trait SchedulePolicy: Send {
     fn fabric_kind(&self) -> FabricKind {
         FabricKind::Uniform
     }
+    /// Attach a persistent outer-search worker pool. The scheduling
+    /// pipeline calls this once per scheduling thread so steady-state
+    /// solves never spawn threads ([`crate::scheduler::SearchPool`]).
+    /// Policies without a parallel search (the static baselines) ignore
+    /// it — the default is a no-op.
+    fn attach_search_pool(&mut self, _pool: std::sync::Arc<crate::scheduler::SearchPool>) {}
 }
 
 impl SchedulePolicy for Scheduler {
@@ -142,6 +148,10 @@ impl SchedulePolicy for Scheduler {
 
     fn fabric_kind(&self) -> FabricKind {
         self.fabric
+    }
+
+    fn attach_search_pool(&mut self, pool: std::sync::Arc<crate::scheduler::SearchPool>) {
+        self.set_search_pool(pool);
     }
 }
 

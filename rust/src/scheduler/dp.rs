@@ -23,9 +23,25 @@
 //!    non-increasing in `d` by construction.
 //!
 //! The inner objective is therefore the max of one non-decreasing and one
-//! non-increasing function of `d`, minimized at their crossing — found by
-//! binary search in O(log N) per cell instead of the O(N) scan, for
-//! O(K′·N·log N) per wave overall. Substituting `Tmin` for `T` is exact:
+//! non-increasing function of `d`, minimized at their crossing. The matrix
+//! `M[j][d] = max(DP≤[i−1][j−d], Tmin_i(d))` is totally monotone, and for
+//! valley-shaped rows with a monotone crossing the full SMAWK machinery
+//! degenerates to something even simpler: the crossing slot is
+//! **non-decreasing in `j`** (raising `j` only lowers the previous-row
+//! term at a fixed `d`, pushing the crossing right), so one cursor swept
+//! left-to-right across the row finds every cell's crossing in O(1)
+//! amortized — O(K′·N) per wave total, the log factor gone. The
+//! prefix-min + per-cell binary-search transition (O(K′·N·log N)) is
+//! retained verbatim as [`allocate_degrees_prefixmin`]: the monotone
+//! sweep is regression-tested **bit-identical** to it (and both to the
+//! exact-j oracle) on randomized non-monotone cost tables. On rows where
+//! a degree filter with gaps leaves ∞ cells in the table (impossible for
+//! the scheduler's real waves — policy rounding guarantees an admissible
+//! degree at every `d_min`), the sweep's monotonicity certificate fails
+//! and the hot path falls back to the bisection for the remaining rows,
+//! so the two paths agree on *every* input by construction.
+//!
+//! Substituting `Tmin` for `T` is exact:
 //! any slot `d` with argmin `d' ≤ d` yields a feasible allocation (group
 //! `i` really uses `d'` ranks and simply leaves `d − d'` idle — Cond. 6 is
 //! an inequality, Σd_p ≤ N), and conversely every allocation is dominated
@@ -85,13 +101,70 @@ where
 }
 
 /// [`allocate_degrees`] writing into caller-owned scratch tables (zero
-/// table allocations once the buffers are warm).
+/// table allocations once the buffers are warm). Uses the O(K′·N)
+/// monotone row-minima sweep (see module docs).
 pub fn allocate_degrees_in<T, A>(
     bufs: &mut DpTables,
     groups: &[AtomicGroup],
     n: usize,
     time: T,
     allowed: A,
+) -> DpSolution
+where
+    T: Fn(usize, usize) -> f64,
+    A: Fn(usize) -> bool,
+{
+    solve_at_most_in(bufs, groups, n, time, allowed, true)
+}
+
+/// The retained prefix-min + per-cell binary-search transition
+/// (O(K′·N·log N) per wave): the production path before the monotone
+/// sweep landed, kept as a bit-equivalence reference alongside the
+/// exact-j [`allocate_degrees_reference`]. Allocates fresh tables; see
+/// [`allocate_degrees_prefixmin_in`] for the scratch-threaded form.
+pub fn allocate_degrees_prefixmin<T, A>(
+    groups: &[AtomicGroup],
+    n: usize,
+    time: T,
+    allowed: A,
+) -> DpSolution
+where
+    T: Fn(usize, usize) -> f64,
+    A: Fn(usize) -> bool,
+{
+    allocate_degrees_prefixmin_in(&mut DpTables::default(), groups, n, time, allowed)
+}
+
+/// [`allocate_degrees_prefixmin`] writing into caller-owned scratch
+/// tables.
+pub fn allocate_degrees_prefixmin_in<T, A>(
+    bufs: &mut DpTables,
+    groups: &[AtomicGroup],
+    n: usize,
+    time: T,
+    allowed: A,
+) -> DpSolution
+where
+    T: Fn(usize, usize) -> f64,
+    A: Fn(usize) -> bool,
+{
+    solve_at_most_in(bufs, groups, n, time, allowed, false)
+}
+
+/// The shared at-most-j solver. `sweep` selects the transition: the
+/// O(K′·N) monotone-crossing cursor (hot path) or the O(K′·N·log N)
+/// per-cell bisection (retained reference). Both find the same crossing
+/// slot for every cell, so the two paths produce bit-identical tables —
+/// the sweep additionally certifies its own preconditions row by row and
+/// downgrades to the bisection when they fail (∞-bearing rows under
+/// gapped degree filters), making the equivalence unconditional.
+fn solve_at_most_in<T, A>(
+    bufs: &mut DpTables,
+    groups: &[AtomicGroup],
+    n: usize,
+    time: T,
+    allowed: A,
+    sweep: bool,
 ) -> DpSolution
 where
     T: Fn(usize, usize) -> f64,
@@ -134,6 +207,16 @@ where
         *cell = 0.0;
     }
 
+    // The sweep's certificate: every row stored so far is ∞-free over its
+    // valid span. Inductively that guarantees (a) the previous row is
+    // monotone non-increasing in j, and (b) the crossing predicate
+    // `Tmin(d) ≤ DP≤[i−1][j−d]` is monotone in d — the two preconditions
+    // under which one forward cursor finds every cell's crossing exactly
+    // where the bisection would. An ∞ cell (a degree window with no
+    // admissible degree — impossible for the scheduler's policy-rounded
+    // waves) voids the certificate, and all remaining rows bisect
+    // instead: bit-identical to [`allocate_degrees_prefixmin`] either way.
+    let mut sweep_ok = sweep;
     for i in 1..=k {
         let dmin_i = bufs.dmin[i - 1];
         // Ranks that must stay reserved for the remaining groups.
@@ -167,20 +250,36 @@ where
             }
         }
 
+        // Crossing cursor for the monotone sweep: raising j lowers
+        // DP≤[i−1][j−d] at fixed d, so the crossing never moves left —
+        // the cursor only ever advances, O(d_cap + row width) per row.
+        let mut cursor = dmin_i;
+        let mut row_has_inf = false;
         for j in j_lo..=j_hi {
             let d_hi = j - off;
             // Smallest slot d with Tmin(d) ≤ DP≤[i−1][j−d] (the predicate
-            // is monotone: LHS non-increasing, RHS non-decreasing).
-            let mut lo = dmin_i;
-            let mut hi = d_hi;
-            while lo < hi {
-                let mid = (lo + hi) / 2;
-                if bufs.tmin[mid] <= bufs.dp[base_prev + (j - mid)] {
-                    hi = mid;
-                } else {
-                    lo = mid + 1;
+            // is monotone: LHS non-increasing, RHS non-decreasing),
+            // clamped to d_hi when no slot in range satisfies it.
+            let lo = if sweep_ok {
+                while cursor < d_hi
+                    && bufs.tmin[cursor] > bufs.dp[base_prev + (j - cursor)]
+                {
+                    cursor += 1;
                 }
-            }
+                cursor
+            } else {
+                let mut lo = dmin_i;
+                let mut hi = d_hi;
+                while lo < hi {
+                    let mid = (lo + hi) / 2;
+                    if bufs.tmin[mid] <= bufs.dp[base_prev + (j - mid)] {
+                        hi = mid;
+                    } else {
+                        lo = mid + 1;
+                    }
+                }
+                lo
+            };
             // The optimum sits at the crossing: candidate `lo` (first slot
             // where Tmin dips under the prev row) or `lo − 1`.
             let mut best_slot = lo;
@@ -192,9 +291,13 @@ where
                     best_slot = lo - 1;
                 }
             }
+            row_has_inf |= best_cost == INF;
             bufs.dp[base + j] = best_cost;
             bufs.slot[base + j] = best_slot as u32;
             bufs.deg[base + j] = bufs.argt[best_slot];
+        }
+        if row_has_inf {
+            sweep_ok = false;
         }
     }
 
@@ -612,6 +715,90 @@ mod tests {
                 if d < d_mins[i] || !allowed(d) {
                     return Err(format!("degree {d} invalid at group {i}"));
                 }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_sweep_matches_prefixmin_and_reference() {
+        // The ISSUE-7 equivalence gate: the monotone-sweep transition must
+        // be BIT-identical (not 1e-9-close) to the retained prefix-min +
+        // binary-search path — same makespan bits, same degrees, same rank
+        // count — and bit-identical in makespan to the exact-j oracle, on
+        // randomized non-monotone tables up to k = 12, n = 128, under both
+        // degree policies. pow2 instances exercise the ∞-certificate
+        // fallback (gapped admissible sets can park ∞ in a row's valid
+        // span, after which the sweep must bisect like the reference).
+        forall(160, 0x5_33ED, |rng| {
+            let k = rng.range_usize(1, 13);
+            let n = rng.range_usize(k.max(4), 129);
+            let d_mins: Vec<usize> =
+                (0..k).map(|_| rng.range_usize(1, 6)).collect();
+            if d_mins.iter().sum::<usize>() > n {
+                return Ok(());
+            }
+            let works: Vec<f64> =
+                (0..k).map(|_| rng.range_f64(1.0, 1000.0)).collect();
+            let hops: Vec<f64> = (0..k).map(|_| rng.range_f64(0.0, 8.0)).collect();
+            let bases: Vec<f64> = (0..k).map(|_| rng.range_f64(0.0, 3.0)).collect();
+            let jagged = rng.bool(0.5);
+            let time = |i: usize, d: usize| {
+                let smooth = works[i] / d as f64 + hops[i] * (d as f64 - 1.0) + bases[i];
+                if jagged {
+                    smooth + hops[i] * ((d % 3) as f64) + bases[i] * ((d & 1) as f64)
+                } else {
+                    smooth
+                }
+            };
+            let pow2 = rng.bool(0.5);
+            let allowed = |d: usize| !pow2 || d.is_power_of_two();
+            if pow2 {
+                let mut need = 0usize;
+                let mut impossible = false;
+                for &dm in &d_mins {
+                    match (dm..=n).find(|d| d.is_power_of_two()) {
+                        Some(d) => need += d,
+                        None => {
+                            impossible = true;
+                            break;
+                        }
+                    }
+                }
+                if impossible || need > n {
+                    return Ok(());
+                }
+            }
+            let groups = mk_groups(&d_mins, &works);
+            let sweep = allocate_degrees(&groups, n, time, allowed);
+            let prefixmin = allocate_degrees_prefixmin(&groups, n, time, allowed);
+            if sweep.makespan_s.to_bits() != prefixmin.makespan_s.to_bits() {
+                return Err(format!(
+                    "sweep {} != prefixmin {} bits (works {works:?}, hops {hops:?}, \
+                     d_mins {d_mins:?}, n={n}, pow2={pow2}, jagged={jagged})",
+                    sweep.makespan_s, prefixmin.makespan_s
+                ));
+            }
+            if sweep.degrees != prefixmin.degrees {
+                return Err(format!(
+                    "degree vectors diverged: sweep {:?} vs prefixmin {:?} \
+                     (d_mins {d_mins:?}, n={n}, pow2={pow2}, jagged={jagged})",
+                    sweep.degrees, prefixmin.degrees
+                ));
+            }
+            if sweep.ranks_used != prefixmin.ranks_used {
+                return Err(format!(
+                    "ranks_used diverged: {} vs {}",
+                    sweep.ranks_used, prefixmin.ranks_used
+                ));
+            }
+            let reference = allocate_degrees_reference(&groups, n, time, allowed);
+            if sweep.makespan_s.to_bits() != reference.makespan_s.to_bits() {
+                return Err(format!(
+                    "sweep {} != exact-j reference {} bits (works {works:?}, \
+                     d_mins {d_mins:?}, n={n}, pow2={pow2}, jagged={jagged})",
+                    sweep.makespan_s, reference.makespan_s
+                ));
             }
             Ok(())
         });

@@ -41,13 +41,15 @@
 //! training batch" is carried by four mechanisms layered over the
 //! two-stage algorithm:
 //!
-//! 1. **Near-linear DP** — [`dp::allocate_degrees`] solves an
-//!    *at-most-j-ranks* reformulation whose rows are monotone
-//!    non-increasing, so each cell's transition is a binary search over
-//!    the prefix-min cost curve: O(K′·N·log N) per wave instead of the
-//!    paper's O(K′·N²). The exact-j formulation survives as
-//!    [`dp::allocate_degrees_reference`], the equivalence oracle and
-//!    bench baseline.
+//! 1. **Linear-transition DP** — [`dp::allocate_degrees`] solves an
+//!    *at-most-j-ranks* reformulation whose transition matrix is totally
+//!    monotone: the optimal slot's crossing point only moves right as the
+//!    rank budget grows, so one cursor swept across each row finds every
+//!    cell's optimum in O(1) amortized — O(K′·N) per wave instead of the
+//!    paper's O(K′·N²). The prefix-min + binary-search transition
+//!    (O(K′·N·log N)) survives as [`dp::allocate_degrees_prefixmin`] and
+//!    the exact-j formulation as [`dp::allocate_degrees_reference`] —
+//!    both bit-equivalence oracles and bench baselines.
 //! 2. **Scratch arena** — every worker threads a pooled
 //!    [`scratch::SolverScratch`] through packing and DP
 //!    ([`Scheduler::schedule_with_target_in`]), so the steady-state
@@ -59,16 +61,28 @@
 //!    across the balance-target outer search (and across consecutive
 //!    micro-batches), so most DP transitions after the first candidate
 //!    hit the cache instead of re-deriving Eqs. 8–10.
-//! 4. **Parallel pruned outer search** — the candidate targets and
-//!    uniform-grid anchors are solved by a pool of std threads pulling
-//!    from a shared queue, with an incumbent best (lock-free f64-bits
-//!    `fetch_min`) and a per-candidate lower bound (aggregate-work/N and
-//!    best-single-group-time) that skips candidates which provably cannot
-//!    win. Selection is by (estimated time, candidate index), which makes
-//!    the result bit-identical to the sequential first-wins search
-//!    regardless of worker timing: a pruned candidate's bound strictly
-//!    exceeded a then-current incumbent, which is ≥ the final best, so it
-//!    could never have been selected.
+//! 4. **Parallel pruned outer search on a persistent pool** — the
+//!    candidate targets and uniform-grid anchors are solved by
+//!    long-lived workers ([`search_pool::SearchPool`]) stealing
+//!    candidate indices off a shared counter, with an incumbent best
+//!    (lock-free f64-bits `fetch_min`) and a per-candidate lower bound
+//!    (aggregate-work/N, best-single-group-time, and a communication
+//!    floor at each group's minimum degree) that skips candidates which
+//!    provably cannot win. The pipeline owns a pool per scheduling
+//!    thread (bare `schedule()` calls share a lazily-created global
+//!    one), so the steady state spawns zero threads per solve — the
+//!    seed's per-batch `thread::scope` spawn tax is gone. Selection is
+//!    by (estimated time, candidate index), which makes the result
+//!    bit-identical to the sequential first-wins search regardless of
+//!    worker timing: a pruned candidate's bound strictly exceeded a
+//!    then-current incumbent, which is ≥ the final best, so it could
+//!    never have been selected.
+//! 5. **Incremental packing across the target sweep** — the candidate
+//!    targets are packed in ascending order through one
+//!    [`packing::TargetSweep`], which proves most repacks redundant (a
+//!    packing is reused verbatim while every placement's feasibility
+//!    threshold stays under the next work cap) instead of running BFD
+//!    from scratch per target.
 
 pub mod dp;
 pub mod fabric;
@@ -76,6 +90,7 @@ pub mod packing;
 pub mod pipeline;
 pub mod plan;
 pub mod scratch;
+pub mod search_pool;
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -95,6 +110,7 @@ pub use plan::{
     PlannedGroup,
 };
 pub use scratch::{solver_threads, SolverScratch};
+pub use search_pool::SearchPool;
 
 /// Degree admissibility policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -266,6 +282,11 @@ pub struct Scheduler {
     /// Rank blocks of the previously realized schedule, per wave slot.
     /// Shared across clones so a policy wrapper keeps reuse continuity.
     hint: Arc<Mutex<PlacementHint>>,
+    /// The persistent worker pool the outer search submits to. `None`
+    /// (a bare scheduler) falls back to [`SearchPool::global`]; the
+    /// pipeline attaches its own per-scheduling-thread pool via
+    /// [`Scheduler::set_search_pool`].
+    search_pool: Option<Arc<SearchPool>>,
 }
 
 impl Clone for Scheduler {
@@ -276,6 +297,7 @@ impl Clone for Scheduler {
             policy: self.policy,
             fabric: self.fabric,
             hint: Arc::clone(&self.hint),
+            search_pool: self.search_pool.clone(),
         }
     }
 }
@@ -290,7 +312,17 @@ impl Scheduler {
             policy: DegreePolicy::AnyInteger,
             fabric: FabricKind::default(),
             hint: Arc::new(Mutex::new(PlacementHint::default())),
+            search_pool: None,
         }
+    }
+
+    /// Attach a persistent search pool; subsequent `schedule()` calls
+    /// submit their outer search to it instead of the global fallback
+    /// pool. Called by the pipeline (through
+    /// [`crate::baselines::SchedulePolicy::attach_search_pool`]) so a
+    /// session's steady-state solves spawn zero threads.
+    pub fn set_search_pool(&mut self, pool: Arc<SearchPool>) {
+        self.search_pool = Some(pool);
     }
 
     /// Restrict the degree search space (e.g. to powers of two for the
@@ -460,9 +492,15 @@ impl Scheduler {
         // (fingerprint, target, policy-rounded groups) for each keeper.
         let mut kept: Vec<(u64, usize, Vec<AtomicGroup>)> =
             Vec::with_capacity(targets.len());
+        // Incremental Stage-1 (ISSUE-7): targets ascend, so the sweep
+        // proves most adjacent repacks redundant and returns `None` —
+        // which is exactly a duplicate of the previous packing and
+        // therefore of something already offered to the dedupe below.
+        let mut sweep = packing::TargetSweep::new(seqs, &self.cost.memory, n, pack);
         for t in targets {
-            let mut groups =
-                packing::pack_with_target_in(seqs, &self.cost.memory, n, t, pack);
+            let Some(mut groups) = sweep.pack(t, pack) else {
+                continue;
+            };
             // Policy-restricted systems must round minimum degrees up to
             // the admissible set (e.g. pow2) BEFORE wave feasibility is
             // decided; doing it here (identical for every candidate) lets
@@ -481,6 +519,7 @@ impl Scheduler {
                 kept.push((fp, t, groups));
             }
         }
+        sweep.finish(pack);
         let mut out: Vec<Candidate> = kept
             .into_iter()
             .map(|(_, target, groups)| Candidate::Target {
@@ -518,31 +557,29 @@ impl Scheduler {
             out
         };
         let model_fp = self.cost.coeffs.fingerprint();
-        let next = AtomicUsize::new(0);
-        // Incumbent best estimate as f64 bits: non-negative IEEE-754
-        // floats order identically to their bit patterns, so a lock-free
-        // `fetch_min` maintains the minimum.
-        let incumbent = AtomicU64::new(f64::INFINITY.to_bits());
         let workers = solver_threads().min(candidates.len()).max(1);
         let mut results: Vec<(usize, Draft)> = if workers <= 1 {
+            // Sequential path: claim indices off a local counter with a
+            // local incumbent — the reference discipline the pool
+            // reproduces.
+            let next = AtomicUsize::new(0);
+            // Incumbent best estimate as f64 bits: non-negative IEEE-754
+            // floats order identically to their bit patterns, so a
+            // lock-free `fetch_min` maintains the minimum.
+            let incumbent = AtomicU64::new(f64::INFINITY.to_bits());
             self.run_candidates(seqs, &candidates, fabric, model_fp, &next, &incumbent)
         } else {
-            std::thread::scope(|scope| {
-                let handles: Vec<_> = (0..workers)
-                    .map(|_| {
-                        scope.spawn(|| {
-                            self.run_candidates(
-                                seqs, &candidates, fabric, model_fp, &next, &incumbent,
-                            )
-                        })
-                    })
-                    .collect();
-                let mut all = Vec::with_capacity(candidates.len());
-                for h in handles {
-                    all.extend(h.join().expect("solver worker panicked"));
+            // Persistent pool: the attached (pipeline-owned) pool if one
+            // was set, else the lazily-created process-global one — no
+            // per-solve thread spawn on either path.
+            let helpers = workers - 1;
+            match &self.search_pool {
+                Some(pool) => {
+                    pool.search(self, seqs, fabric, model_fp, candidates, helpers)
                 }
-                all
-            })
+                None => SearchPool::global()
+                    .search(self, seqs, fabric, model_fp, candidates, helpers),
+            }
         };
         // Deterministic selection regardless of worker timing: best
         // estimate, ties to the lowest candidate index (the seed's
@@ -559,7 +596,9 @@ impl Scheduler {
     }
 
     /// Worker loop: pull candidate indices off the shared queue until
-    /// drained, solving each with this worker's pooled scratch.
+    /// drained, solving each with this worker's pooled scratch. The
+    /// sequential (`workers <= 1`) search path; the pool's participants
+    /// run the same discipline through [`SearchPool`].
     fn run_candidates(
         &self,
         seqs: &[Sequence],
@@ -578,29 +617,47 @@ impl Scheduler {
                 break;
             }
             let bound = f64::from_bits(incumbent.load(Ordering::Relaxed));
-            let solved = match &candidates[ci] {
-                Candidate::Target { groups, .. } => groups
-                    .lock()
-                    .unwrap_or_else(|e| e.into_inner())
-                    .take() // each index is claimed by exactly one worker
-                    .and_then(|g| {
-                        self.solve_packed(g, fabric, model_fp, bound, &mut scratch)
-                    }),
-                Candidate::Grid(d) => {
-                    self.uniform_grid_schedule(seqs, *d, fabric, |agg, dd, bw| {
-                        scratch
-                            .cache
-                            .t_total(model_fp, fabric_fp, &self.cost, agg, dd, bw)
-                    })
-                }
-            };
-            if let Some(draft) = solved {
+            if let Some(draft) = self.solve_candidate(
+                seqs, candidates, ci, fabric, model_fp, fabric_fp, bound,
+                &mut scratch,
+            ) {
                 incumbent.fetch_min(draft.est_time_s.to_bits(), Ordering::Relaxed);
                 out.push((ci, draft));
             }
         }
         scratch.release();
         out
+    }
+
+    /// Solve one claimed candidate (shared by the sequential loop above
+    /// and the pool's participants). Returns `None` when the candidate
+    /// was pruned or is inadmissible.
+    #[allow(clippy::too_many_arguments)]
+    fn solve_candidate(
+        &self,
+        seqs: &[Sequence],
+        candidates: &[Candidate],
+        ci: usize,
+        fabric: &FabricModel,
+        model_fp: u64,
+        fabric_fp: u64,
+        bound: f64,
+        scratch: &mut SolverScratch,
+    ) -> Option<Draft> {
+        match &candidates[ci] {
+            Candidate::Target { groups, .. } => groups
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .take() // each index is claimed by exactly one worker
+                .and_then(|g| self.solve_packed(g, fabric, model_fp, bound, scratch)),
+            Candidate::Grid(d) => {
+                self.uniform_grid_schedule(seqs, *d, fabric, |agg, dd, bw| {
+                    scratch
+                        .cache
+                        .t_total(model_fp, fabric_fp, &self.cost, agg, dd, bw)
+                })
+            }
+        }
     }
 
     /// One pack→waves→DP candidate solve (the single-target entry; the
@@ -672,7 +729,16 @@ impl Scheduler {
     ///   bound. On the uniform oracle max-bw equals the costing
     ///   bandwidth, so these evaluations also warm the cache for the DP
     ///   if the candidate survives (and pruning matches the seed
-    ///   bit-for-bit).
+    ///   bit-for-bit);
+    /// * the communication floor (ISSUE-7) — any group forced to span
+    ///   `d_min ≥ 2` ranks pays ring communication no allocation can
+    ///   remove: Eq. 10 gives `T = T_cp + T_cm − min(T_cpa, T_cma) ≥
+    ///   T_cm` (the overlap term never exceeds `T_cp`), and `t_comm` is
+    ///   monotone increasing in the degree and decreasing in bandwidth,
+    ///   so `t_comm(agg, d_min, v*)` at the fabric's best bandwidth over
+    ///   ALL degrees bounds every admissible choice from below. This is
+    ///   what rejects over-fragmented balance targets (many thin forced-
+    ///   multi-rank groups) before any DP work.
     fn lower_bound(
         &self,
         waves: &[Vec<AtomicGroup>],
@@ -682,15 +748,36 @@ impl Scheduler {
     ) -> f64 {
         let fabric_fp = fabric.fingerprint();
         let n = fabric.capacity();
+        // Best-case ring bandwidth over every degree — hoisted once per
+        // candidate; the communication floor below is only admissible at
+        // the fabric's most optimistic answer.
+        let mut v_star = 0.0f64;
+        for d in 2..=n {
+            let v = fabric.max_bw_for_degree(d);
+            if v > v_star {
+                v_star = v;
+            }
+        }
         let mut total = 0.0;
         for wave in waves {
             let mut agg = WorkloadAgg::default();
             let mut heaviest: Option<&AtomicGroup> = None;
+            let mut comm_floor = 0.0f64;
             for g in wave {
                 agg.merge(&g.agg);
                 match heaviest {
                     Some(h) if h.agg.quad >= g.agg.quad => {}
                     _ => heaviest = Some(g),
+                }
+                // Communication floor of a forced-multi-rank group (see
+                // doc comment); 1e-9 shave so floating-point rounding in
+                // the monotonicity argument can never make it unsound.
+                let dm = g.d_min.min(n).max(1);
+                if dm >= 2 && v_star > 0.0 {
+                    let f = self.cost.t_comm(&g.agg, dm, v_star) * (1.0 - 1e-9);
+                    if f > comm_floor {
+                        comm_floor = f;
+                    }
                 }
             }
             // The work bound holds by real-valued algebra; shave 1e-9 so
@@ -698,6 +785,7 @@ impl Scheduler {
             // single-group bound below is float-exact — it is a min over
             // the very T values the DP maximizes over).
             let mut lb = self.cost.t_compute(&agg, n) * (1.0 - 1e-9);
+            lb = lb.max(comm_floor);
             if let Some(h) = heaviest {
                 let dmin = h.d_min.min(n).max(1);
                 let mut best = f64::INFINITY;
@@ -1423,6 +1511,83 @@ mod tests {
         assert_eq!(a.waves, b.waves);
         assert_eq!(a.search_est_time_s.to_bits(), b.search_est_time_s.to_bits());
         assert_eq!(a.est_time_s.to_bits(), b.est_time_s.to_bits());
+    }
+
+    #[test]
+    fn attached_pool_search_matches_reference_and_never_respawns() {
+        // ISSUE-7: an explicitly attached persistent pool must (a) leave
+        // the search result exactly on the sequential reference estimate
+        // and (b) spawn all of its threads at construction — repeated
+        // solves reuse them, so the spawn counter never moves again.
+        let pool = Arc::new(SearchPool::new(3));
+        assert_eq!(pool.threads_spawned(), 3);
+        let mut sch = scheduler(16);
+        sch.set_search_pool(Arc::clone(&pool));
+        let bare = scheduler(16);
+        for seed in [11u64, 57, 1234] {
+            let mut sampler = sampler(DatasetKind::OpenVid, seed);
+            let seqs = sampler.sample_batch(32);
+            let pooled = sch.schedule(&seqs);
+            pooled.validate(&seqs, 16).unwrap();
+            let reference = bare.schedule_reference(&seqs);
+            assert!(
+                (pooled.search_est_time_s - reference.search_est_time_s).abs()
+                    <= 1e-9 * reference.search_est_time_s.max(1.0),
+                "seed {seed}: pooled {} vs reference {}",
+                pooled.search_est_time_s,
+                reference.search_est_time_s
+            );
+        }
+        assert_eq!(
+            pool.threads_spawned(),
+            3,
+            "pool re-spawned threads after construction"
+        );
+    }
+
+    #[test]
+    fn property_lower_bound_never_exceeds_solved_estimate() {
+        // Soundness of ALL pruning terms (aggregate work, best single
+        // group, and the ISSUE-7 communication floor): the pre-DP bound
+        // must never exceed the estimate the full DP solve achieves —
+        // an unsound bound would silently prune the true winner.
+        forall(30, 0xB0DD, |rng| {
+            let npus = *rng.choose(&[8usize, 16, 32]);
+            let sch = scheduler(npus);
+            let kind = *rng.choose(&DatasetKind::all());
+            let mut sampler = sampler(kind, rng.next_u64());
+            let seqs = sampler.sample_batch(rng.range_usize(1, 64));
+            let fabric = sch.snapshot_fabric();
+            let n = fabric.capacity();
+            let model_fp = sch.cost.coeffs.fingerprint();
+            let mut scratch = SolverScratch::acquire();
+            for target in [1usize, 3, 8, npus] {
+                let mut groups = packing::pack_with_target_in(
+                    &seqs,
+                    &sch.cost.memory,
+                    n,
+                    target,
+                    &mut scratch.pack,
+                );
+                for g in &mut groups {
+                    g.d_min = sch.policy.min_admissible(g.d_min).min(n);
+                }
+                let mut waves = packing::waves_in(&mut groups, n, &mut scratch.pack);
+                scratch.pack.put_groups(groups);
+                let lb = sch.lower_bound(&waves, &fabric, model_fp, &scratch.cache);
+                let draft = sch.solve_waves(&waves, &fabric, model_fp, &mut scratch);
+                scratch.pack.reclaim_waves(&mut waves);
+                if lb > draft.est_time_s {
+                    return Err(format!(
+                        "unsound bound {lb} > solved {} (npus={npus}, \
+                         target={target}, kind={kind:?})",
+                        draft.est_time_s
+                    ));
+                }
+            }
+            scratch.release();
+            Ok(())
+        });
     }
 
     #[test]

@@ -96,24 +96,32 @@ pub fn pack_with_target_in(
     group_target: usize,
     scratch: &mut PackScratch,
 ) -> Vec<AtomicGroup> {
-    let budget = memory.rank_budget();
     // Work-balance cap (token² units): makespan follows the quadratic
     // workload, so bins close on WORK at ~1/target of the batch (5% slack
     // absorbs BFD rounding so a target of G yields G bins, not G+1 with a
     // nearly-empty spill). Memory stays a hard feasibility bound.
-    let total_quad: f64 = {
-        let mut agg = WorkloadAgg::default();
-        for s in seqs {
-            agg.add(s);
-        }
-        agg.quad
-    };
-    let work_cap = total_quad / group_target.max(1) as f64 * 1.05;
-    let mem_cap = max_degree as f64 * budget;
-
-    // Order by memory (≡ token count × M_token) descending. The sort
-    // buffer is reused; sort_by is stable, so results match a fresh Vec.
+    let work_cap = total_quad(seqs) / group_target.max(1) as f64 * 1.05;
     let mut order = std::mem::take(&mut scratch.order);
+    sort_order(seqs, &mut order);
+    let (groups, _crit) =
+        pack_core(seqs, memory, max_degree, work_cap, &order, scratch);
+    scratch.order = order;
+    groups
+}
+
+/// Σ quadratic work over the batch — the sweep cap's numerator.
+fn total_quad(seqs: &[Sequence]) -> f64 {
+    let mut agg = WorkloadAgg::default();
+    for s in seqs {
+        agg.add(s);
+    }
+    agg.quad
+}
+
+/// BFD visit order: by memory (≡ token count × M_token) descending. The
+/// sort buffer is reused; sort_by is stable, so results match a fresh
+/// Vec. Target-independent — [`TargetSweep`] sorts once per batch.
+fn sort_order(seqs: &[Sequence], order: &mut Vec<usize>) {
     order.clear();
     order.extend(0..seqs.len());
     order.sort_by(|&a, &b| {
@@ -122,9 +130,26 @@ pub fn pack_with_target_in(
             .cmp(&seqs[a].len())
             .then_with(|| a.cmp(&b)) // deterministic tie-break
     });
+}
 
+/// The shared BFD core: pack `seqs` (visited in `order`) against one
+/// work cap. Besides the groups it returns the packing's *reuse
+/// threshold* — the smallest sweep cap `c ≤ work_cap` at which every
+/// decision this run made provably repeats verbatim (see
+/// [`TargetSweep`] for the argument).
+fn pack_core(
+    seqs: &[Sequence],
+    memory: &MemoryModel,
+    max_degree: usize,
+    work_cap: f64,
+    order: &[usize],
+    scratch: &mut PackScratch,
+) -> (Vec<AtomicGroup>, f64) {
+    let budget = memory.rank_budget();
+    let mem_cap = max_degree as f64 * budget;
+    let mut crit = 0.0f64;
     let mut groups: Vec<AtomicGroup> = scratch.take_groups();
-    for &idx in &order {
+    for &idx in order {
         let seq = &seqs[idx];
         let mem = seq.act_bytes(memory.m_token);
         let l = seq.len() as f64;
@@ -147,6 +172,25 @@ pub fn pack_with_target_in(
         match best {
             Some((gi, _)) => {
                 let g = &mut groups[gi];
+                // Reuse threshold of this placement: shrinking the sweep
+                // cap only shrinks every bin's work headroom, so the
+                // feasible set at a smaller cap is a subset of today's —
+                // the decision repeats iff the CHOSEN bin stays feasible
+                // (dropping non-chosen competitors never changes a
+                // least-loaded argmin that is still present, and the
+                // ties-keep-earliest break is order-preserving). A bin
+                // whose cap was raised by its own initiator
+                // (`work_cap > sweep cap`) is cap-independent; otherwise
+                // the placement needs `c ≥ quad + work`, padded
+                // multiplicatively so float rounding of the headroom
+                // subtraction can never flip the comparison at a cap
+                // that passed this threshold.
+                if g.work_cap <= work_cap {
+                    let thresh = g.agg.quad + work * (1.0 + 1e-12);
+                    if thresh > crit {
+                        crit = thresh;
+                    }
+                }
                 g.seq_idxs.push(idx);
                 g.mem_bytes += mem;
                 g.agg.add(seq);
@@ -156,6 +200,8 @@ pub fn pack_with_target_in(
                     .clamp(1, max_degree);
             }
             None => {
+                // Opening a bin is always cap-independent downward: the
+                // feasible set was empty and can only shrink further.
                 let mut agg = WorkloadAgg::default();
                 agg.add(seq);
                 let mut seq_idxs = scratch.take_idxs();
@@ -171,8 +217,91 @@ pub fn pack_with_target_in(
             }
         }
     }
-    scratch.order = order;
-    groups
+    (groups, crit)
+}
+
+/// Incremental Stage-1 across the outer search's ascending balance
+/// targets (ISSUE-7). Ascending targets mean strictly shrinking work
+/// caps, and a BFD run at cap `W` is reproduced verbatim by any cap in
+/// `[crit, W]` where `crit` is the largest reuse threshold among its
+/// placements ([`pack_core`]): within that interval every chosen bin
+/// stays feasible and every rejected set stays rejected. The sweep
+/// therefore sorts once, packs only when the next cap drops below
+/// `crit`, and answers `None` — "identical to my previous packing" —
+/// otherwise, which the candidate dedupe in `Scheduler::candidates`
+/// treats exactly like a fingerprint duplicate. Only membership and
+/// `d_min` are certified identical (bin bookkeeping like `work_cap`
+/// differs with the cap) — precisely the fields anything downstream of
+/// packing reads ([`same_packing`]).
+pub struct TargetSweep<'s> {
+    seqs: &'s [Sequence],
+    memory: &'s MemoryModel,
+    max_degree: usize,
+    total_quad: f64,
+    order: Vec<usize>,
+    /// Reuse threshold of the latest real packing.
+    crit: f64,
+    /// The cap that packing ran at.
+    last_cap: f64,
+    packed_any: bool,
+}
+
+impl<'s> TargetSweep<'s> {
+    /// Start a sweep: aggregates the batch and sorts the BFD visit order
+    /// once (buffer borrowed from `scratch`, returned by
+    /// [`TargetSweep::finish`]).
+    pub fn new(
+        seqs: &'s [Sequence],
+        memory: &'s MemoryModel,
+        max_degree: usize,
+        scratch: &mut PackScratch,
+    ) -> Self {
+        let mut order = std::mem::take(&mut scratch.order);
+        sort_order(seqs, &mut order);
+        TargetSweep {
+            seqs,
+            memory,
+            max_degree,
+            total_quad: total_quad(seqs),
+            order,
+            crit: f64::INFINITY,
+            last_cap: f64::INFINITY,
+            packed_any: false,
+        }
+    }
+
+    /// Pack the next balance target. `None` means the packing is provably
+    /// identical (membership + `d_min`) to the previous `Some` — keep
+    /// using that one. Targets must be fed in the caller's search order;
+    /// reuse only triggers while caps keep shrinking, so a non-ascending
+    /// caller degrades to from-scratch packing, never to a wrong answer.
+    pub fn pack(
+        &mut self,
+        group_target: usize,
+        scratch: &mut PackScratch,
+    ) -> Option<Vec<AtomicGroup>> {
+        let cap = self.total_quad / group_target.max(1) as f64 * 1.05;
+        if self.packed_any && cap <= self.last_cap && cap >= self.crit {
+            return None;
+        }
+        let (groups, crit) = pack_core(
+            self.seqs,
+            self.memory,
+            self.max_degree,
+            cap,
+            &self.order,
+            scratch,
+        );
+        self.crit = crit;
+        self.last_cap = cap;
+        self.packed_any = true;
+        Some(groups)
+    }
+
+    /// Return the sweep's sort buffer to the scratch free-list.
+    pub fn finish(self, scratch: &mut PackScratch) {
+        scratch.order = self.order;
+    }
 }
 
 /// Do two packings describe the same atomic groups, in the same order?
@@ -386,6 +515,59 @@ mod tests {
             let total: usize = w.iter().map(|g| g.d_min).sum();
             assert!(total <= 8 || w.len() == 1, "wave over budget: {total}");
         }
+    }
+
+    #[test]
+    fn property_target_sweep_matches_from_scratch() {
+        // The ISSUE-7 incremental-packing gate: at EVERY target of an
+        // ascending sweep — including the ones the sweep skipped as
+        // provably-identical — the sweep's current packing must equal
+        // the from-scratch packing on exactly the fields downstream
+        // consumers read (membership + d_min), and across the trials
+        // the sweep must actually skip repacks (that is the perf claim
+        // being purchased).
+        let mut total_skips = 0usize;
+        forall(60, 0x57EE9, |rng| {
+            let mm = memory();
+            let nseq = rng.range_usize(1, 60);
+            let seqs: Vec<Sequence> = (0..nseq)
+                .map(|i| {
+                    let len = rng.range_u64(16, 20_000);
+                    seq(i as u64, len)
+                })
+                .collect();
+            let max_degree = rng.range_usize(1, 65);
+            let mut scratch = PackScratch::default();
+            let mut sweep = TargetSweep::new(&seqs, &mm, max_degree, &mut scratch);
+            let mut current: Vec<AtomicGroup> = Vec::new();
+            let mut skips = 0usize;
+            for t in 1..=32usize {
+                match sweep.pack(t, &mut scratch) {
+                    Some(g) => current = g,
+                    None => skips += 1,
+                }
+                let fresh = pack_with_target(&seqs, &mm, max_degree, t);
+                if !same_packing(&current, &fresh) {
+                    return Err(format!(
+                        "sweep diverged from scratch at target {t} \
+                         (nseq={nseq}, max_degree={max_degree}): \
+                         sweep {} groups, fresh {} groups",
+                        current.len(),
+                        fresh.len()
+                    ));
+                }
+            }
+            sweep.finish(&mut scratch);
+            total_skips += skips;
+            Ok(())
+        });
+        // Adjacent targets collapse constantly (always once the target
+        // exceeds the sequence count) — a sweep that never skips is not
+        // incremental at all.
+        assert!(
+            total_skips > 0,
+            "TargetSweep never skipped a repack across 60 random batches"
+        );
     }
 
     #[test]

@@ -1,0 +1,277 @@
+//! Persistent work-stealing worker pool for the outer search (ISSUE-7).
+//!
+//! The seed's `plan_search` spawned a fresh `std::thread::scope` per
+//! solve — a ~50–100 µs tax paid on every micro-batch, which dominates
+//! the solver's budget once the DP itself is near-linear. This module
+//! replaces it with a pool of long-lived workers that candidate solves
+//! are *submitted* to:
+//!
+//! * Workers block on one shared job queue. A submission sends the job's
+//!   `Arc` once per requested helper, then the **submitting thread joins
+//!   the search itself** — it is always the (helpers + 1)-th participant,
+//!   so a solve makes progress even if every pooled worker is busy with
+//!   another scheduler's job (or the pool has zero workers).
+//! * Work-stealing is candidate-index stealing: participants claim
+//!   indices off the job's shared `fetch_add` counter, exactly the
+//!   seed's queue discipline, so the incumbent-pruned, `(est, index)`-
+//!   selected result is bit-identical to the scoped-thread search and to
+//!   the sequential first-wins reference (see the module docs in
+//!   [`super`]).
+//! * Completion is tracked per *candidate*, not per participant: each
+//!   participant decrements the job's pending count by the indices it
+//!   claimed, so stray job handles still queued when the search drains
+//!   are harmless — a late worker claims nothing, decrements nothing,
+//!   and moves on.
+//!
+//! [`crate::scheduler::pipeline::SchedulePipeline`] owns one pool per
+//! scheduling thread and attaches it to its policy
+//! ([`crate::baselines::SchedulePolicy::attach_search_pool`]), so a
+//! session's steady-state `step()` never spawns a thread. Bare
+//! `Scheduler::schedule` callers (benches, tests) fall back to a
+//! process-global pool — lazily created once, then reused — so the
+//! per-solve spawn tax is gone on every path.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+use crate::data::sequence::Sequence;
+
+use super::scratch::solver_threads;
+use super::{Candidate, Draft, FabricModel, Scheduler, SolverScratch};
+
+/// One submitted outer search: everything a participant needs to claim
+/// and solve candidates, owned (cloned/moved in) so worker threads need
+/// no borrowed lifetimes. The `Scheduler` clone is cheap — it shares the
+/// placement-hint `Arc` — and `plan_search` never touches the hint, so
+/// solving through the clone is bit-identical to solving through the
+/// original.
+struct SearchJob {
+    sch: Scheduler,
+    seqs: Vec<Sequence>,
+    fabric: FabricModel,
+    model_fp: u64,
+    candidates: Vec<Candidate>,
+    /// Shared claim counter — the work-stealing queue head.
+    next: AtomicUsize,
+    /// Incumbent best estimate as f64 bits (non-negative IEEE-754 floats
+    /// order identically to their bit patterns).
+    incumbent: AtomicU64,
+    state: Mutex<JobState>,
+    done: Condvar,
+}
+
+struct JobState {
+    /// Candidates not yet claimed-and-processed. 0 ⇒ search complete.
+    pending: usize,
+    results: Vec<(usize, Draft)>,
+}
+
+impl SearchJob {
+    /// Claim-and-solve until the index counter drains, then fold this
+    /// participant's results and claim count into the job state. Run by
+    /// pooled workers and by the submitting thread alike.
+    fn run(&self) {
+        let fabric_fp = self.fabric.fingerprint();
+        let total = self.candidates.len();
+        let mut scratch = SolverScratch::acquire();
+        let mut local: Vec<(usize, Draft)> = Vec::new();
+        let mut claimed = 0usize;
+        loop {
+            let ci = self.next.fetch_add(1, Ordering::Relaxed);
+            if ci >= total {
+                break;
+            }
+            claimed += 1;
+            let bound = f64::from_bits(self.incumbent.load(Ordering::Relaxed));
+            if let Some(draft) = self.sch.solve_candidate(
+                &self.seqs,
+                &self.candidates,
+                ci,
+                &self.fabric,
+                self.model_fp,
+                fabric_fp,
+                bound,
+                &mut scratch,
+            ) {
+                self.incumbent
+                    .fetch_min(draft.est_time_s.to_bits(), Ordering::Relaxed);
+                local.push((ci, draft));
+            }
+        }
+        scratch.release();
+        if claimed > 0 {
+            let mut state = self.state.lock().unwrap_or_else(|e| e.into_inner());
+            state.results.append(&mut local);
+            state.pending -= claimed;
+            if state.pending == 0 {
+                self.done.notify_all();
+            }
+        }
+    }
+}
+
+/// A pool of persistent search workers (see module docs). Dropping the
+/// pool closes the queue and joins every worker.
+#[derive(Debug)]
+pub struct SearchPool {
+    tx: Mutex<Option<Sender<Arc<SearchJob>>>>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    workers: usize,
+    /// Threads spawned over this pool's lifetime — exactly `workers`,
+    /// all at construction. The zero-spawn acceptance test snapshots
+    /// this across steps.
+    spawned: AtomicUsize,
+}
+
+impl SearchPool {
+    /// Spawn a pool of `workers` persistent search threads (0 is valid:
+    /// submissions then run entirely on the submitting thread).
+    pub fn new(workers: usize) -> Self {
+        let (tx, rx) = channel::<Arc<SearchJob>>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let rx = Arc::clone(&rx);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("dhp-search-{w}"))
+                    .spawn(move || loop {
+                        // Hold the lock through the blocking recv: the
+                        // standard shared-receiver handoff — the waiting
+                        // worker takes the job, releases, and the next
+                        // worker moves up to wait.
+                        let job = {
+                            let guard =
+                                rx.lock().unwrap_or_else(|e| e.into_inner());
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => job.run(),
+                            Err(_) => break, // queue closed: pool dropped
+                        }
+                    })
+                    .expect("failed to spawn dhp-search worker"),
+            );
+        }
+        SearchPool {
+            tx: Mutex::new(Some(tx)),
+            handles: Mutex::new(handles),
+            workers,
+            spawned: AtomicUsize::new(workers),
+        }
+    }
+
+    /// Pool sized for `plan_search`'s historical parallelism: the
+    /// submitter plus `solver_threads() − 1` helpers.
+    pub fn with_default_size() -> Self {
+        SearchPool::new(solver_threads().saturating_sub(1))
+    }
+
+    /// The process-global fallback pool, created on first use. Bare
+    /// `Scheduler::schedule` calls without an attached pool (benches,
+    /// tests, one-off CLI solves) share it, so even they stop paying the
+    /// per-solve spawn tax after the very first solve.
+    pub fn global() -> &'static Arc<SearchPool> {
+        static GLOBAL: OnceLock<Arc<SearchPool>> = OnceLock::new();
+        GLOBAL.get_or_init(|| Arc::new(SearchPool::with_default_size()))
+    }
+
+    /// Number of persistent workers.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Total threads ever spawned by this pool (== `workers()`; the pool
+    /// never re-spawns). A steady-state session asserts this constant
+    /// across steps.
+    pub fn threads_spawned(&self) -> usize {
+        self.spawned.load(Ordering::Relaxed)
+    }
+
+    /// Run one outer search through the pool: enqueue the job for up to
+    /// `helpers` workers, participate from the calling thread, and block
+    /// until every candidate is claimed and processed. Returns the
+    /// per-candidate drafts exactly as the scoped-thread search did.
+    pub(in crate::scheduler) fn search(
+        &self,
+        sch: &Scheduler,
+        seqs: &[Sequence],
+        fabric: &FabricModel,
+        model_fp: u64,
+        candidates: Vec<Candidate>,
+        helpers: usize,
+    ) -> Vec<(usize, Draft)> {
+        let total = candidates.len();
+        if total == 0 {
+            return Vec::new();
+        }
+        let job = Arc::new(SearchJob {
+            sch: sch.clone(),
+            seqs: seqs.to_vec(),
+            fabric: fabric.clone(),
+            model_fp,
+            candidates,
+            next: AtomicUsize::new(0),
+            incumbent: AtomicU64::new(f64::INFINITY.to_bits()),
+            state: Mutex::new(JobState {
+                pending: total,
+                results: Vec::with_capacity(total),
+            }),
+            done: Condvar::new(),
+        });
+        let helpers = helpers.min(self.workers).min(total.saturating_sub(1));
+        if helpers > 0 {
+            let tx = self.tx.lock().unwrap_or_else(|e| e.into_inner());
+            if let Some(tx) = tx.as_ref() {
+                for _ in 0..helpers {
+                    if tx.send(Arc::clone(&job)).is_err() {
+                        break;
+                    }
+                }
+            }
+        }
+        job.run();
+        let mut state = job.state.lock().unwrap_or_else(|e| e.into_inner());
+        while state.pending > 0 {
+            state = job.done.wait(state).unwrap_or_else(|e| e.into_inner());
+        }
+        std::mem::take(&mut state.results)
+    }
+}
+
+impl Drop for SearchPool {
+    fn drop(&mut self) {
+        // Closing the sender unblocks every worker's recv with an error.
+        self.tx.lock().unwrap_or_else(|e| e.into_inner()).take();
+        let handles =
+            std::mem::take(&mut *self.handles.lock().unwrap_or_else(|e| e.into_inner()));
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_worker_pool_runs_on_the_submitter() {
+        let pool = SearchPool::new(0);
+        assert_eq!(pool.workers(), 0);
+        assert_eq!(pool.threads_spawned(), 0);
+        // No job to submit here — `search` needs a Scheduler; the
+        // scheduler tests cover submission. This guards the degenerate
+        // construction and the clean drop path.
+    }
+
+    #[test]
+    fn pool_spawns_exactly_once_and_joins_on_drop() {
+        let pool = SearchPool::new(3);
+        assert_eq!(pool.workers(), 3);
+        assert_eq!(pool.threads_spawned(), 3);
+        drop(pool); // must not hang: sender closes, workers exit
+    }
+}

@@ -91,6 +91,10 @@ pub struct StepRecord {
     pub sim_makespan_s: f64,
     /// Background scheduling latency (hidden behind compute).
     pub schedule_latency_s: f64,
+    /// Pure solver wall time (packing + DP + placement), measured on the
+    /// scheduling thread — the paper's "millisecond-level scheduling
+    /// overhead" number, excluding queueing and group prewarm.
+    pub solver_time_s: f64,
     /// FULLY-SERIAL simulated group-creation time the session paid
     /// prewarming this step's communication groups.
     pub reconfig_serial_s: f64,
@@ -210,8 +214,8 @@ pub fn run(cfg: &TrainerConfig) -> Result<TrainReport> {
             writeln!(
                 f,
                 "step,loss,grad_norm,step_s,sim_makespan_s,sched_latency_s,\
-                 reconfig_serial_s,reconfig_charged_s,replay_rate,\
-                 pool_evictions,pool_hit_rate"
+                 solver_time_s,reconfig_serial_s,reconfig_charged_s,\
+                 replay_rate,pool_evictions,pool_hit_rate"
             )?;
             Some(f)
         }
@@ -261,6 +265,7 @@ pub fn run(cfg: &TrainerConfig) -> Result<TrainReport> {
             step_time_s,
             sim_makespan_s: report.iteration.exec_time_s,
             schedule_latency_s: report.schedule_latency_s,
+            solver_time_s: report.solver_time_s,
             reconfig_serial_s: report.iteration.reconfig_serial_s,
             reconfig_charged_s: report.iteration.reconfig_time_s,
             replay_rate: report.replay_rate,
@@ -271,13 +276,14 @@ pub fn run(cfg: &TrainerConfig) -> Result<TrainReport> {
         if let Some(f) = log_file.as_mut() {
             writeln!(
                 f,
-                "{},{:.6},{:.4},{:.4},{:.6},{:.6},{:.6},{:.6},{:.4},{},{:.4}",
+                "{},{:.6},{:.4},{:.4},{:.6},{:.6},{:.6},{:.6},{:.6},{:.4},{},{:.4}",
                 rec.step,
                 rec.loss,
                 rec.grad_norm,
                 rec.step_time_s,
                 rec.sim_makespan_s,
                 rec.schedule_latency_s,
+                rec.solver_time_s,
                 rec.reconfig_serial_s,
                 rec.reconfig_charged_s,
                 rec.replay_rate,

@@ -23,6 +23,9 @@ pub struct Timing {
     pub mean_s: f64,
     /// Median seconds per repetition.
     pub p50_s: f64,
+    /// 90th-percentile seconds per repetition (the tail the solver-
+    /// latency budget gates on — means hide stragglers).
+    pub p90_s: f64,
     /// Fastest repetition (seconds).
     pub min_s: f64,
     /// Standard deviation (seconds).
@@ -33,10 +36,11 @@ impl Timing {
     /// One-line human-readable summary (milliseconds).
     pub fn summary(&self) -> String {
         format!(
-            "{:<44} {:>10.3} ms/iter (p50 {:>10.3}, min {:>10.3}, sd {:>8.3}, n={})",
+            "{:<44} {:>10.3} ms/iter (p50 {:>10.3}, p90 {:>10.3}, min {:>10.3}, sd {:>8.3}, n={})",
             self.name,
             self.mean_s * 1e3,
             self.p50_s * 1e3,
+            self.p90_s * 1e3,
             self.min_s * 1e3,
             self.std_s * 1e3,
             self.reps
@@ -48,6 +52,7 @@ impl Timing {
         json::obj(vec![
             ("mean_ms", json::num(self.mean_s * 1e3)),
             ("p50_ms", json::num(self.p50_s * 1e3)),
+            ("p90_ms", json::num(self.p90_s * 1e3)),
             ("min_ms", json::num(self.min_s * 1e3)),
             ("std_ms", json::num(self.std_s * 1e3)),
             ("reps", json::num(self.reps as f64)),
@@ -71,6 +76,7 @@ pub fn time<F: FnMut()>(name: &str, warmup: usize, reps: usize, mut f: F) -> Tim
         reps: samples.len(),
         mean_s: stats::mean(&samples),
         p50_s: stats::percentile(&samples, 50.0),
+        p90_s: stats::percentile(&samples, 90.0),
         min_s: samples.iter().cloned().fold(f64::MAX, f64::min),
         std_s: stats::std_dev(&samples),
     }
@@ -151,6 +157,7 @@ mod tests {
         assert!(t.mean_s > 0.0);
         assert!(t.min_s <= t.mean_s);
         assert!(t.min_s <= t.p50_s);
+        assert!(t.p50_s <= t.p90_s);
     }
 
     #[test]
@@ -177,6 +184,10 @@ mod tests {
         assert_eq!(case.get("reps").unwrap().as_usize().unwrap(), 3);
         assert!(case.get("mean_ms").unwrap().as_f64().unwrap() >= 0.0);
         assert!(case.get("p50_ms").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(
+            case.get("p90_ms").unwrap().as_f64().unwrap()
+                >= case.get("p50_ms").unwrap().as_f64().unwrap()
+        );
         let _ = std::fs::remove_file(&path);
     }
 }
