@@ -1,8 +1,17 @@
 //! Resilience bench: MTBF-sweep goodput for DHP and the baselines, plus
-//! the zero-drift gate — a zero-fault (quiet-injector) run must be
-//! bit-identical to a session with no injector at all. Any drift means
-//! the fault machinery leaks into the fault-free path, and the bench
-//! exits non-zero so CI catches it.
+//! three self-gating invariant checks — any violation exits non-zero so
+//! CI catches it:
+//!
+//! 1. Zero-drift (boundary): a zero-fault (quiet-injector) run must be
+//!    bit-identical to a session with no injector at all.
+//! 2. Zero-drift (event kernel): the same quiet run on the
+//!    discrete-event kernel (`within_step_faults(true)`) must also be
+//!    bit-identical — the kernel is a pure re-ordering of the same
+//!    arithmetic when no fault arrives.
+//! 3. Mid-wave charging: a scripted mid-wave `RankFailure`, replayed on
+//!    both paths, must charge strictly less lost work on the event
+//!    kernel (partial-wave re-execution) than on the boundary path
+//!    (whole `work_since_ckpt` replay).
 //!
 //! Usage:
 //!   cargo bench --bench resilience              # full sweep
@@ -13,12 +22,14 @@
 
 use std::path::Path;
 
-use dhp::cluster::FaultConfig;
+use dhp::cluster::{FaultConfig, FaultEvent, FaultInjector, TimedFault};
 use dhp::config::presets::by_name;
 use dhp::config::TrainStage;
 use dhp::data::datasets::DatasetKind;
 use dhp::experiments::harness::ExpContext;
-use dhp::experiments::resilience::{compute, run_policy_under_faults};
+use dhp::experiments::resilience::{
+    compute, run_policy_under_faults, run_policy_under_faults_within_step,
+};
 use dhp::util::json::{self, Json};
 
 fn main() {
@@ -34,7 +45,7 @@ fn main() {
     .with_gbs(gbs);
     ctx.seed = seed;
 
-    // Zero-drift gate: quiet injector vs no injector, digest-for-digest.
+    // Gate 1 — zero-drift: quiet injector vs no injector, digest-for-digest.
     let dhp = ctx.dhp();
     let quiet = run_policy_under_faults(
         &ctx,
@@ -59,24 +70,87 @@ fn main() {
     }
     println!("[bench] zero-fault path is bit-identical to the fault-free path");
 
+    // Gate 2 — zero-drift on the event kernel: the quiet run replayed
+    // through the discrete-event executor must not move a single bit.
+    let quiet_ws = run_policy_under_faults_within_step(
+        &ctx,
+        &dhp,
+        FaultConfig::quiet(seed),
+        steps.min(4),
+    );
+    if quiet_ws.digest != bare_digest {
+        eprintln!(
+            "[bench] EVENT-KERNEL DRIFT: quiet within-step digest {:#018x} != \
+             injector-free digest {:#018x}",
+            quiet_ws.digest, bare_digest
+        );
+        std::process::exit(1);
+    }
+    println!("[bench] quiet event kernel is bit-identical to the reference path");
+
+    // Gate 3 — mid-wave charging: the same scripted failure trace on
+    // both paths; the event kernel must charge strictly less lost work.
+    let trace = vec![
+        Vec::new(),
+        vec![TimedFault {
+            at_frac: 0.45,
+            event: FaultEvent::RankFailure { rank: 2 },
+        }],
+    ];
+    let run_trace = |within: bool| -> (f64, usize) {
+        let mut session = ctx
+            .session_builder_for(Box::new(ctx.dhp()))
+            .fault_injector(FaultInjector::scripted_timed(
+                ctx.replicas(),
+                trace.clone(),
+            ))
+            .within_step_faults(within)
+            .build();
+        let mut sampler = ctx.sampler();
+        let mut lost = 0.0;
+        let mut interrupted = 0usize;
+        for _ in 0..3 {
+            let report = session.step(&sampler.sample_batch(ctx.gbs));
+            lost += report.lost_work_s;
+            interrupted += report.iteration.interrupted_waves;
+        }
+        (lost, interrupted)
+    };
+    let (ev_lost, ev_interrupted) = run_trace(true);
+    let (bd_lost, _) = run_trace(false);
+    if ev_lost >= bd_lost || ev_interrupted == 0 {
+        eprintln!(
+            "[bench] MID-WAVE CHARGING VIOLATION: event-kernel lost work \
+             {ev_lost:.3}s (interrupted {ev_interrupted}) must be strictly \
+             below the boundary replay's {bd_lost:.3}s"
+        );
+        std::process::exit(1);
+    }
+    println!(
+        "[bench] mid-wave failure charges {ev_lost:.3}s vs boundary {bd_lost:.3}s"
+    );
+
     let mtbfs: &[f64] = if quick { &[0.0, 8.0] } else { &[0.0, 50.0, 20.0, 8.0] };
     let rows = compute(&ctx, mtbfs, steps, seed);
     println!(
-        "{:<14} {:>12} {:>8} {:>8} {:>13} {:>18}",
-        "policy", "mtbf", "useful", "failed", "recovery (s)", "goodput (steps/s)"
+        "{:<14} {:>12} {:>9} {:>8} {:>8} {:>13} {:>10} {:>18}",
+        "policy", "mtbf", "faults", "useful", "failed", "recovery (s)",
+        "lost (s)", "goodput (steps/s)"
     );
     for r in &rows {
         println!(
-            "{:<14} {:>12} {:>8} {:>8} {:>13.1} {:>18.4}",
+            "{:<14} {:>12} {:>9} {:>8} {:>8} {:>13.1} {:>10.1} {:>18.4}",
             r.policy,
             if r.mtbf_steps <= 0.0 {
                 "none".to_string()
             } else {
                 format!("{:.0}", r.mtbf_steps)
             },
+            if r.within_step { "mid-wave" } else { "boundary" },
             r.useful_steps,
             r.failed_steps,
             r.recovery_s,
+            r.lost_work_s,
             r.goodput_steps_per_s
         );
     }
@@ -93,10 +167,12 @@ fn main() {
             json::obj(vec![
                 ("policy", json::s(&r.policy)),
                 ("mtbf_steps", json::num(r.mtbf_steps)),
+                ("within_step", Json::Bool(r.within_step)),
                 ("useful_steps", json::num(r.useful_steps as f64)),
                 ("failed_steps", json::num(r.failed_steps as f64)),
                 ("recovery_s", json::num(r.recovery_s)),
                 ("straggle_s", json::num(r.straggle_s)),
+                ("lost_work_s", json::num(r.lost_work_s)),
                 ("goodput_steps_per_s", json::num(r.goodput_steps_per_s)),
             ])
         })
@@ -106,6 +182,8 @@ fn main() {
         ("quick", Json::Bool(quick)),
         ("steps", json::num(steps as f64)),
         ("zero_drift_ok", Json::Bool(true)),
+        ("within_step_zero_drift_ok", Json::Bool(true)),
+        ("mid_wave_charges_less_ok", Json::Bool(true)),
         ("cells", json::arr(cells)),
     ]);
     match std::fs::write(&out, doc.to_string_pretty()) {

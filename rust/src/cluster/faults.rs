@@ -84,6 +84,49 @@ impl FaultEvent {
     }
 }
 
+/// A fault event tagged with WHERE inside its step it lands: `at_frac`
+/// ∈ [0, 1) positions the arrival on the step's nominal (fault-free)
+/// execution span. The step-granular path ignores the tag (faults apply
+/// at the boundary); the within-step event kernel multiplies it by the
+/// quiet makespan to get the virtual arrival time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimedFault {
+    /// Arrival position as a fraction of the step's nominal span.
+    pub at_frac: f64,
+    /// The fault that arrives there.
+    pub event: FaultEvent,
+}
+
+impl TimedFault {
+    /// Hash the semantic content (fraction by bits) into a digest.
+    pub fn digest_into(&self, h: &mut impl Hasher) {
+        self.at_frac.to_bits().hash(h);
+        self.event.digest_into(h);
+    }
+}
+
+/// Standalone digest of one [`FaultEvent`] (the canonical-order
+/// tie-break key for equal-`at_frac` arrivals).
+fn event_digest(ev: &FaultEvent) -> u64 {
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    ev.digest_into(&mut h);
+    h.finish()
+}
+
+/// Deterministic arrival fraction for the `index`-th fault of `step`:
+/// a pure hash of (step, index, event content) fed through the
+/// SplitMix64 generator — NOT the injector's stochastic stream. Both
+/// execution paths therefore see the SAME fault set from the same seed
+/// (the stream advances identically), and the within-step path derives
+/// its arrival instants without perturbing any draw.
+pub fn arrival_frac(step: u64, index: usize, event: &FaultEvent) -> f64 {
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    step.hash(&mut h);
+    index.hash(&mut h);
+    event.digest_into(&mut h);
+    Rng::new(h.finish()).uniform()
+}
+
 /// Fault-rate configuration. All rates are per training step; zero
 /// disables that fault class. [`FaultConfig::quiet`] disables everything,
 /// which the session guarantees is behaviorally identical to running
@@ -157,6 +200,11 @@ pub struct FaultInjector {
     /// A fixed per-step trace overriding the stochastic draws (tests,
     /// incident replay).
     script: Option<Vec<Vec<FaultEvent>>>,
+    /// A fixed per-step TIMED trace: like `script`, but each event
+    /// carries its within-step arrival fraction (the within-step
+    /// golden-replay tests). At most one of `script`/`script_timed` is
+    /// set.
+    script_timed: Option<Vec<Vec<TimedFault>>>,
 }
 
 impl FaultInjector {
@@ -169,6 +217,7 @@ impl FaultInjector {
             rng: Rng::new(cfg.seed),
             down_until: BTreeMap::new(),
             script: None,
+            script_timed: None,
         }
     }
 
@@ -181,6 +230,17 @@ impl FaultInjector {
     pub fn scripted(replicas: usize, trace: Vec<Vec<FaultEvent>>) -> Self {
         let mut inj = FaultInjector::new(replicas, FaultConfig::quiet(0));
         inj.script = Some(trace);
+        inj
+    }
+
+    /// Injector replaying a fixed TIMED trace: `trace[s]` is delivered
+    /// at step `s` with each event's within-step arrival fraction.
+    /// [`FaultInjector::advance`] on such an injector strips the
+    /// fractions, so the SAME trace can drive a step-granular session —
+    /// the differential comparison the within-step acceptance test runs.
+    pub fn scripted_timed(replicas: usize, trace: Vec<Vec<TimedFault>>) -> Self {
+        let mut inj = FaultInjector::new(replicas, FaultConfig::quiet(0));
+        inj.script_timed = Some(trace);
         inj
     }
 
@@ -201,6 +261,14 @@ impl FaultInjector {
     pub fn advance(&mut self, step: u64) -> Vec<FaultEvent> {
         if let Some(script) = &self.script {
             return script.get(step as usize).cloned().unwrap_or_default();
+        }
+        if let Some(script) = &self.script_timed {
+            // Step-granular consumer of a timed trace: same events,
+            // fractions stripped (faults collapse to the boundary).
+            return script
+                .get(step as usize)
+                .map(|evs| evs.iter().map(|t| t.event.clone()).collect())
+                .unwrap_or_default();
         }
         // Quiet configs touch neither the RNG nor the down-set, so a
         // quiet injector is trace-identical to no injector at all.
@@ -269,6 +337,41 @@ impl FaultInjector {
             }
         }
         events
+    }
+
+    /// [`FaultInjector::advance`] with within-step arrival instants:
+    /// the event source for the session's event-driven execution path.
+    ///
+    /// Timed scripts replay their fractions verbatim; everything else
+    /// (untimed scripts and stochastic draws) is mapped through the
+    /// pure [`arrival_frac`] hash, so a stochastic injector feeds BOTH
+    /// execution paths the same event stream from the same seed.
+    ///
+    /// Events return in CANONICAL order — sorted by
+    /// `(at_frac, event digest)` — so a permuted-but-equal-time scripted
+    /// trace produces the identical event sequence (the tie-break
+    /// stability half of the golden-replay test).
+    pub fn advance_timed(&mut self, step: u64) -> Vec<TimedFault> {
+        let mut timed: Vec<TimedFault> = match &self.script_timed {
+            Some(script) => {
+                script.get(step as usize).cloned().unwrap_or_default()
+            }
+            None => self
+                .advance(step)
+                .into_iter()
+                .enumerate()
+                .map(|(i, event)| TimedFault {
+                    at_frac: arrival_frac(step, i, &event),
+                    event,
+                })
+                .collect(),
+        };
+        timed.sort_by(|a, b| {
+            a.at_frac
+                .total_cmp(&b.at_frac)
+                .then_with(|| event_digest(&a.event).cmp(&event_digest(&b.event)))
+        });
+        timed
     }
 }
 
@@ -385,6 +488,108 @@ mod tests {
         }
         // Beyond the script: quiet.
         assert!(inj.advance(99).is_empty());
+    }
+
+    #[test]
+    fn timed_script_strips_fractions_for_the_step_granular_path() {
+        let trace = vec![
+            vec![],
+            vec![
+                TimedFault {
+                    at_frac: 0.25,
+                    event: FaultEvent::RankFailure { rank: 1 },
+                },
+                TimedFault {
+                    at_frac: 0.75,
+                    event: FaultEvent::Straggler { rank: 2, slowdown: 2.0 },
+                },
+            ],
+        ];
+        let mut inj = FaultInjector::scripted_timed(4, trace.clone());
+        assert!(inj.advance(0).is_empty());
+        assert_eq!(
+            inj.advance(1),
+            vec![
+                FaultEvent::RankFailure { rank: 1 },
+                FaultEvent::Straggler { rank: 2, slowdown: 2.0 },
+            ]
+        );
+        assert!(inj.advance(9).is_empty());
+        // The timed view replays fractions verbatim.
+        let mut timed = FaultInjector::scripted_timed(4, trace);
+        assert!(timed.advance_timed(0).is_empty());
+        let evs = timed.advance_timed(1);
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].at_frac, 0.25);
+        assert_eq!(evs[1].at_frac, 0.75);
+    }
+
+    #[test]
+    fn stochastic_timed_stream_matches_the_untimed_stream() {
+        // Same seed: advance_timed must deliver exactly the events
+        // advance delivers (fractions are hash-derived, not drawn).
+        let cfg = stormy(0xAB1E);
+        let mut a = FaultInjector::new(8, cfg);
+        let mut b = FaultInjector::new(8, cfg);
+        let mut saw_fault = false;
+        for step in 0..100 {
+            let plain = a.advance(step);
+            let timed: Vec<FaultEvent> = b
+                .advance_timed(step)
+                .into_iter()
+                .map(|t| t.event)
+                .collect();
+            saw_fault |= !plain.is_empty();
+            // advance_timed canonicalizes order; compare as multisets
+            // via the sorted digest.
+            let mut plain_keys: Vec<u64> =
+                plain.iter().map(event_digest).collect();
+            let mut timed_keys: Vec<u64> =
+                timed.iter().map(event_digest).collect();
+            plain_keys.sort_unstable();
+            timed_keys.sort_unstable();
+            assert_eq!(plain_keys, timed_keys, "step {step} event sets differ");
+            timed.clear();
+        }
+        assert!(saw_fault, "stormy config must emit something in 100 steps");
+        // And the fraction assignment is a pure function: replay equal.
+        let mut c = FaultInjector::new(8, cfg);
+        let mut d = FaultInjector::new(8, cfg);
+        for step in 0..100 {
+            assert_eq!(c.advance_timed(step), d.advance_timed(step));
+        }
+    }
+
+    #[test]
+    fn equal_time_arrivals_canonicalize_regardless_of_script_order() {
+        let a = TimedFault {
+            at_frac: 0.5,
+            event: FaultEvent::RankFailure { rank: 1 },
+        };
+        let b = TimedFault {
+            at_frac: 0.5,
+            event: FaultEvent::Preemption { ranks: vec![3], duration_steps: 2 },
+        };
+        let mut fwd =
+            FaultInjector::scripted_timed(8, vec![vec![a.clone(), b.clone()]]);
+        let mut rev = FaultInjector::scripted_timed(8, vec![vec![b, a]]);
+        assert_eq!(
+            fwd.advance_timed(0),
+            rev.advance_timed(0),
+            "equal-time events must sort canonically"
+        );
+    }
+
+    #[test]
+    fn arrival_frac_is_pure_and_in_range() {
+        let ev = FaultEvent::RankFailure { rank: 3 };
+        let f = arrival_frac(7, 0, &ev);
+        assert_eq!(f, arrival_frac(7, 0, &ev), "pure function of inputs");
+        assert!((0.0..1.0).contains(&f));
+        // Different step/index/event → (overwhelmingly) different spot.
+        assert_ne!(f, arrival_frac(8, 0, &ev));
+        assert_ne!(f, arrival_frac(7, 1, &ev));
+        assert_ne!(f, arrival_frac(7, 0, &FaultEvent::RankFailure { rank: 4 }));
     }
 
     #[test]

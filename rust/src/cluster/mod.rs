@@ -15,8 +15,10 @@
 //! * per-iteration data-parallel gradient synchronization,
 //! * per-wave makespan/idle accounting (Fig. 2's "idle gaps").
 
+pub mod event;
 pub mod faults;
 pub mod sim;
 
-pub use faults::{FaultConfig, FaultEvent, FaultInjector};
+pub use event::{EventKind, EventQueue, EventRecord, EventTimeline};
+pub use faults::{arrival_frac, FaultConfig, FaultEvent, FaultInjector, TimedFault};
 pub use sim::{ClusterSim, CommKind, IterationReport, WaveReport};

@@ -76,6 +76,17 @@ pub struct IterationReport {
     pub straggle_s: f64,
     /// Total tokens processed.
     pub tokens: u64,
+    /// Compute seconds discarded to mid-step fault interruption (partial
+    /// waves re-executed, torn checkpoint writes). Always 0.0 on the
+    /// step-granular path — only the within-step event kernel
+    /// ([`crate::session::DhpSession`] with `within_step_faults(true)`)
+    /// charges it, and always as `t − wave_start` per interrupted wave
+    /// rather than the whole step.
+    pub lost_work_s: f64,
+    /// Number of in-flight waves interrupted by mid-step faults (each one
+    /// contributed to `lost_work_s` and was re-executed on its survivor
+    /// plan). Always 0 on the step-granular path.
+    pub interrupted_waves: usize,
 }
 
 impl IterationReport {
@@ -346,7 +357,94 @@ impl ClusterSim {
             iter_time_s: exec + grad_sync + reconfig,
             straggle_s: straggle,
             tokens,
+            lost_work_s: 0.0,
+            interrupted_waves: 0,
         }
+    }
+
+    /// Re-place a wave plan onto the surviving mesh after mid-step rank
+    /// loss (the within-step event kernel's partial-wave re-execution).
+    ///
+    /// Groups keep their sequence assignment but drop ranks that are no
+    /// longer free on the mesh (taken down by a failure or occupied by a
+    /// fence/preemption). A fully-dead group's sequences are re-homed to
+    /// the lowest free rank not already used by a surviving group (as a
+    /// degree-1 group), or — when no spare rank exists — folded into the
+    /// first surviving group. Estimate fields (`est_time_s`, `ring_bw`
+    /// refreshed; `est_makespan_s` carried) are best-effort: execution
+    /// uses ground-truth [`ClusterSim::execute_plan`] times, so staleness
+    /// only affects telemetry, never the charged makespan.
+    ///
+    /// Returns `None` when every group's rank set is still fully live —
+    /// the quiet common case, so callers keep the original plan (and its
+    /// pool keys) untouched, preserving bit-identity with the
+    /// step-granular reference path.
+    pub fn survivor_plan(&self, plan: &PlacedPlan) -> Option<PlacedPlan> {
+        let any_dead = plan
+            .groups
+            .iter()
+            .any(|g| g.ranks.iter().any(|&r| !self.mesh.is_rank_free(r)));
+        if !any_dead {
+            return None;
+        }
+        let mut groups: Vec<crate::scheduler::PlacedGroup> =
+            Vec::with_capacity(plan.groups.len());
+        let mut orphans: Vec<(Vec<usize>, crate::cost::WorkloadAgg)> =
+            Vec::new();
+        for g in &plan.groups {
+            let retained: Vec<RankId> = g
+                .ranks
+                .iter()
+                .copied()
+                .filter(|&r| self.mesh.is_rank_free(r))
+                .collect();
+            if retained.is_empty() {
+                orphans.push((g.seq_idxs.clone(), g.agg));
+            } else if retained.len() == g.ranks.len() {
+                groups.push(g.clone());
+            } else {
+                let ring_bw = self.mesh.ring_bandwidth(&retained);
+                groups.push(crate::scheduler::PlacedGroup {
+                    degree: retained.len(),
+                    seq_idxs: g.seq_idxs.clone(),
+                    agg: g.agg,
+                    est_time_s: g.est_time_s,
+                    ranks: retained,
+                    ring_bw,
+                });
+            }
+        }
+        for (seq_idxs, agg) in orphans {
+            let used: std::collections::BTreeSet<RankId> = groups
+                .iter()
+                .flat_map(|g| g.ranks.iter().copied())
+                .collect();
+            let home = (0..self.mesh.replicas)
+                .find(|&r| self.mesh.is_rank_free(r) && !used.contains(&r));
+            if let Some(r) = home {
+                let ring_bw = self.mesh.ring_bandwidth(&[r]);
+                groups.push(crate::scheduler::PlacedGroup {
+                    degree: 1,
+                    seq_idxs,
+                    agg,
+                    est_time_s: 0.0,
+                    ranks: vec![r],
+                    ring_bw,
+                });
+            } else if let Some(first) = groups.first_mut() {
+                first.seq_idxs.extend(seq_idxs);
+            }
+            // No surviving group and no spare rank: the mesh cannot run
+            // this wave at all — the session marks such steps failed
+            // before execution, so dropping the work here is unreachable
+            // in practice.
+        }
+        Some(PlacedPlan {
+            groups,
+            est_makespan_s: plan.est_makespan_s,
+            search_makespan_s: plan.search_makespan_s,
+            replayed_groups: 0,
+        })
     }
 }
 
@@ -573,6 +671,67 @@ mod tests {
         assert_eq!(s.slowdowns(), &[(2usize, 1.0)]);
         s.set_slowdown(2, 3.0);
         assert_eq!(s.slowdowns(), &[(2usize, 3.0)]);
+    }
+
+    #[test]
+    fn survivor_plan_drops_dead_ranks_and_rehomes_orphans() {
+        let mut s = sim(8);
+        let sch = dhp_scheduler(&s);
+        let mut sampler = DatasetSampler::new(DatasetKind::OpenVid, 83);
+        let seqs = sampler.sample_batch(24);
+        let schedule = sch.schedule(&seqs);
+        let plan = &schedule.waves[0];
+        // Fully-live mesh: no re-placement, callers keep the original.
+        assert!(s.survivor_plan(plan).is_none());
+
+        // Kill one rank of some multi-rank group: that group shrinks,
+        // untouched groups survive verbatim, and the wave still covers
+        // every sequence exactly once.
+        let victim_group = plan
+            .groups
+            .iter()
+            .position(|g| g.ranks.len() > 1)
+            .expect("schedule should place at least one CP group");
+        let dead = plan.groups[victim_group].ranks[0];
+        s.mesh.occupy(&[dead]);
+        let shrunk = s.survivor_plan(plan).expect("dead rank forces re-place");
+        assert!(shrunk
+            .groups
+            .iter()
+            .all(|g| g.ranks.iter().all(|&r| s.mesh.is_rank_free(r))));
+        assert!(shrunk.groups.iter().all(|g| g.degree == g.ranks.len()));
+        let mut orig_idxs: Vec<usize> =
+            plan.groups.iter().flat_map(|g| g.seq_idxs.clone()).collect();
+        let mut new_idxs: Vec<usize> = shrunk
+            .groups
+            .iter()
+            .flat_map(|g| g.seq_idxs.clone())
+            .collect();
+        orig_idxs.sort_unstable();
+        new_idxs.sort_unstable();
+        assert_eq!(orig_idxs, new_idxs, "no sequence lost or duplicated");
+        // The survivor plan executes (ground truth, no estimates needed).
+        let w = s.execute_plan(&seqs, &shrunk, CommKind::RingCp);
+        assert!(w.makespan_s > 0.0);
+
+        // Kill an entire group: its sequences re-home to a free rank (or
+        // fold into a survivor), still covering everything.
+        let all_of: Vec<RankId> = plan.groups[victim_group].ranks.clone();
+        for &r in &all_of[1..] {
+            s.mesh.occupy(&[r]);
+        }
+        let rehomed = s.survivor_plan(plan).expect("whole group dead");
+        let mut re_idxs: Vec<usize> = rehomed
+            .groups
+            .iter()
+            .flat_map(|g| g.seq_idxs.clone())
+            .collect();
+        re_idxs.sort_unstable();
+        assert_eq!(orig_idxs, re_idxs, "orphaned sequences must re-home");
+        assert!(rehomed
+            .groups
+            .iter()
+            .all(|g| g.ranks.iter().all(|&r| s.mesh.is_rank_free(r))));
     }
 
     #[test]

@@ -49,6 +49,13 @@ pub struct ResilienceRow {
     /// the same (ctx, policy, fault seed) must match bit-for-bit, and a
     /// quiet config must match an injector-free session exactly.
     pub digest: u64,
+    /// True when the cell executed on the discrete-event kernel
+    /// (faults land mid-step at their arrival fraction); false for the
+    /// step-granular reference path (faults land at step boundaries).
+    pub within_step: bool,
+    /// Total lost work charged (re-executed wave fractions on the event
+    /// path; whole `work_since_ckpt` replays on the boundary path).
+    pub lost_work_s: f64,
 }
 
 /// Run `policy` for `steps` steps under `cfg`'s fault trace, entirely
@@ -62,9 +69,33 @@ pub fn run_policy_under_faults(
     cfg: FaultConfig,
     steps: usize,
 ) -> ResilienceRow {
+    run_policy_mode(ctx, policy, cfg, steps, false)
+}
+
+/// [`run_policy_under_faults`] on the discrete-event kernel: the same
+/// protocol with `within_step_faults(true)`, so each fault lands at its
+/// within-step arrival fraction and only the interrupted partial wave
+/// is re-executed (vs the boundary path's whole-step replay).
+pub fn run_policy_under_faults_within_step(
+    ctx: &ExpContext,
+    policy: &dyn SchedulePolicy,
+    cfg: FaultConfig,
+    steps: usize,
+) -> ResilienceRow {
+    run_policy_mode(ctx, policy, cfg, steps, true)
+}
+
+fn run_policy_mode(
+    ctx: &ExpContext,
+    policy: &dyn SchedulePolicy,
+    cfg: FaultConfig,
+    steps: usize,
+    within_step: bool,
+) -> ResilienceRow {
     let mut session = ctx
         .session_builder_for(policy.clone_policy())
         .fault_injector(FaultInjector::new(ctx.replicas(), cfg))
+        .within_step_faults(within_step)
         .build();
     let mut sampler = ctx.sampler();
     let mut useful = 0usize;
@@ -72,6 +103,7 @@ pub fn run_policy_under_faults(
     let mut total_time_s = 0.0;
     let mut recovery_s = 0.0;
     let mut straggle_s = 0.0;
+    let mut lost_work_s = 0.0;
     let mut digest: u64 = 0;
     let mut last_iter_s = 0.0;
     for _ in 0..steps {
@@ -79,6 +111,7 @@ pub fn run_policy_under_faults(
         digest = digest.rotate_left(1) ^ report.digest();
         recovery_s += report.recovery_time_s;
         straggle_s += report.iteration.straggle_s;
+        lost_work_s += report.lost_work_s;
         if report.failed.is_some() {
             failed += 1;
             total_time_s +=
@@ -103,13 +136,17 @@ pub fn run_policy_under_faults(
             0.0
         },
         digest,
+        within_step,
+        lost_work_s,
     }
 }
 
 /// Sweep goodput over `mtbfs` (0 = fault-free) for DHP and all three
-/// baselines (tuned per the paper's protocol). Every policy sees the
-/// SAME fault trace at each MTBF (same seed), so cells differ only in
-/// how the policy absorbs the faults.
+/// baselines (tuned per the paper's protocol), plus a DHP cell on the
+/// discrete-event kernel at each MTBF. Every policy sees the SAME fault
+/// trace at each MTBF (same seed), so cells differ only in how the
+/// policy absorbs the faults — and, for the two DHP cells, in whether
+/// faults land mid-wave or at the step boundary.
 pub fn compute(
     ctx: &ExpContext,
     mtbfs: &[f64],
@@ -130,6 +167,9 @@ pub fn compute(
         for policy in policies {
             rows.push(run_policy_under_faults(ctx, policy, cfg, steps));
         }
+        rows.push(run_policy_under_faults_within_step(
+            ctx, &set.dhp, cfg, steps,
+        ));
     }
     rows
 }
@@ -158,9 +198,11 @@ pub fn run(args: &Args) -> Result<()> {
         &[
             "MTBF (steps)",
             "policy",
+            "faults",
             "useful",
             "failed",
             "recovery (s)",
+            "lost work (s)",
             "goodput (steps/s)",
         ],
     );
@@ -172,9 +214,11 @@ pub fn run(args: &Args) -> Result<()> {
                 format!("{:.0}", r.mtbf_steps)
             },
             r.policy.clone(),
+            if r.within_step { "mid-wave" } else { "boundary" }.to_string(),
             r.useful_steps.to_string(),
             r.failed_steps.to_string(),
             format!("{:.1}", r.recovery_s),
+            format!("{:.1}", r.lost_work_s),
             format!("{:.4}", r.goodput_steps_per_s),
         ]);
     }
@@ -237,6 +281,32 @@ mod tests {
         assert_eq!(
             faulted.digest, digest,
             "a quiet injector must be zero-drift vs no injector"
+        );
+    }
+
+    #[test]
+    fn within_step_quiet_matches_the_step_granular_cell() {
+        // The event-kernel cell under a quiet injector must be
+        // digest-identical to the boundary cell: the discrete-event
+        // execution is a pure re-ordering of the same arithmetic.
+        let ctx = test_ctx();
+        let dhp = ctx.dhp();
+        let ev = run_policy_under_faults_within_step(
+            &ctx,
+            &dhp,
+            FaultConfig::quiet(3),
+            4,
+        );
+        let st = run_policy_under_faults(&ctx, &dhp, FaultConfig::quiet(3), 4);
+        assert!(ev.within_step && !st.within_step);
+        assert_eq!(
+            ev.digest, st.digest,
+            "quiet event-kernel cell drifted from the step-granular cell"
+        );
+        assert_eq!(ev.lost_work_s, 0.0, "quiet run charged lost work");
+        assert_eq!(
+            ev.goodput_steps_per_s.to_bits(),
+            st.goodput_steps_per_s.to_bits()
         );
     }
 

@@ -87,7 +87,8 @@ use anyhow::{ensure, Result};
 
 use crate::baselines::{ScheduleError, SchedulePolicy};
 use crate::cluster::{
-    ClusterSim, CommKind, FaultEvent, FaultInjector, IterationReport,
+    ClusterSim, CommKind, EventTimeline, FaultEvent, FaultInjector,
+    IterationReport, TimedFault,
 };
 use crate::data::batch::GlobalBatch;
 use crate::data::batch::MicroBatchPlanner;
@@ -104,6 +105,8 @@ use crate::train::CheckpointCostModel;
 use crate::parallel::GroupPool;
 #[allow(unused_imports)] // doc links
 use crate::scheduler::Scheduler;
+
+mod within_step;
 
 /// A mid-run mesh-ownership change delivered by an external resource
 /// manager (elastic co-tenancy): apply between steps via
@@ -196,8 +199,26 @@ pub struct StepReport {
     /// straggler fencing). 0 on fault-free steps.
     pub recovery_time_s: f64,
     /// Simulated periodic-checkpoint save charge (nonzero only on steps
-    /// where the checkpoint cadence fires).
+    /// where the checkpoint cadence fires — or, on the within-step path,
+    /// where a torn checkpoint write is re-issued).
     pub checkpoint_time_s: f64,
+    /// Virtual-time event log of the within-step execution kernel:
+    /// wave start/finish, fault arrivals, wave interruptions, recovery
+    /// stalls, checkpoint write begin/end/torn, gradient sync. Empty on
+    /// the step-granular path. Only *fault-driven* records enter
+    /// [`StepReport::digest`] (see
+    /// [`EventTimeline::digest_into`]), so a quiet within-step run
+    /// digests bit-identically to the step-granular reference.
+    pub timeline: EventTimeline,
+    /// Simulated compute seconds discarded to faults this step. On the
+    /// step-granular path a failure replays everything since the last
+    /// checkpoint (`work_since_ckpt`); on the within-step path only the
+    /// interrupted partial waves (`t − wave_start`) and torn checkpoint
+    /// writes are lost — completed waves persist in sharded survivor
+    /// state. Comparing the two on the same fault trace is this PR's
+    /// acceptance regression. Already charged inside
+    /// [`StepReport::recovery_time_s`]; this field attributes it.
+    pub lost_work_s: f64,
 }
 
 impl StepReport {
@@ -238,6 +259,8 @@ impl StepReport {
         it.reconfig_serial_s.to_bits().hash(&mut h);
         it.iter_time_s.to_bits().hash(&mut h);
         it.straggle_s.to_bits().hash(&mut h);
+        it.lost_work_s.to_bits().hash(&mut h);
+        it.interrupted_waves.hash(&mut h);
         for w in &it.waves {
             w.makespan_s.to_bits().hash(&mut h);
             w.idle_fraction.to_bits().hash(&mut h);
@@ -253,6 +276,8 @@ impl StepReport {
         self.pool_buffer_bytes.hash(&mut h);
         self.recovery_time_s.to_bits().hash(&mut h);
         self.checkpoint_time_s.to_bits().hash(&mut h);
+        self.lost_work_s.to_bits().hash(&mut h);
+        self.timeline.digest_into(&mut h);
         self.faults.len().hash(&mut h);
         for f in &self.faults {
             f.digest_into(&mut h);
@@ -290,6 +315,7 @@ pub struct SessionBuilder {
     ckpt_interval: u64,
     ckpt_cost: Option<CheckpointCostModel>,
     fence_threshold: Option<u32>,
+    within_step: bool,
 }
 
 impl SessionBuilder {
@@ -312,6 +338,7 @@ impl SessionBuilder {
             ckpt_interval: 10,
             ckpt_cost: None,
             fence_threshold: None,
+            within_step: false,
         }
     }
 
@@ -393,6 +420,23 @@ impl SessionBuilder {
         self
     }
 
+    /// Feed injector draws through the discrete-event execution kernel
+    /// so faults land *within* the step at a virtual arrival time: a
+    /// `RankFailure` at virtual time `t` interrupts exactly the wave in
+    /// flight, re-executes only that wave on its survivor plan, and
+    /// charges `t − wave_start` of lost work instead of the whole-step
+    /// `work_since_ckpt` replay the default boundary path charges
+    /// (completed waves persist in sharded survivor state). Every
+    /// [`StepReport`] then carries the virtual-time
+    /// [`StepReport::timeline`]. With a quiet injector this path is
+    /// digest-bit-identical to the step-granular reference — the
+    /// zero-drift invariant the resilience bench enforces. Default off
+    /// (boundary semantics).
+    pub fn within_step_faults(mut self, on: bool) -> Self {
+        self.within_step = on;
+        self
+    }
+
     /// Spawn the scheduling thread and assemble the session.
     pub fn build(self) -> DhpSession {
         let ckpt_cost = self
@@ -439,6 +483,11 @@ impl SessionBuilder {
             fenced: BTreeSet::new(),
             pending_faults: Vec::new(),
             pending_recovery_s: 0.0,
+            within_step: self.within_step,
+            pending_timed: Vec::new(),
+            pending_lost_work_s: 0.0,
+            last_ckpt_done: None,
+            pending_ckpt_write: None,
         }
     }
 }
@@ -508,6 +557,26 @@ pub struct DhpSession {
     pending_faults: Vec<FaultEvent>,
     /// Recovery charge accrued at the upcoming step's boundary.
     pending_recovery_s: f64,
+    /// Route injector draws through the discrete-event kernel
+    /// ([`SessionBuilder::within_step_faults`]).
+    within_step: bool,
+    /// Within-step mode: timed fault draws for the upcoming step,
+    /// stashed at the boundary and delivered to the event kernel at
+    /// execution time (canonical arrival order).
+    pending_timed: Vec<TimedFault>,
+    /// Lost-work attribution accrued at the upcoming step's boundary
+    /// (the `work_since_ckpt` replay a boundary-mode failure charges;
+    /// already inside `pending_recovery_s` — attribution only).
+    pending_lost_work_s: f64,
+    /// Id (checkpointing step index) of the last checkpoint whose write
+    /// COMPLETED on the virtual timeline — what a torn write falls back
+    /// to. Within-step mode only.
+    last_ckpt_done: Option<u64>,
+    /// An open checkpoint write window `(id, write_seconds)`: the save
+    /// the cadence issued at the end of a step physically writes during
+    /// the NEXT step's virtual timeline, where a failure can tear it.
+    /// Within-step mode only.
+    pending_ckpt_write: Option<(u64, f64)>,
 }
 
 impl DhpSession {
@@ -647,6 +716,19 @@ impl DhpSession {
             Some(injector) => injector,
             None => return,
         };
+        if self.within_step {
+            // Within-step mode: nothing is applied at the boundary — the
+            // draws (with virtual arrival times) are stashed for the
+            // event kernel, which applies each fault's state change at
+            // its arrival instant during execution. The schedule solves
+            // on the PRE-fault mesh (the fault has not happened yet when
+            // the solve runs); the NEXT step's solve sees the survivors.
+            let timed = injector.advance_timed(self.next_step);
+            self.injector = Some(injector);
+            self.pending_faults = timed.iter().map(|t| t.event.clone()).collect();
+            self.pending_timed = timed;
+            return;
+        }
         let events = injector.advance(self.next_step);
         self.injector = Some(injector);
         let mut recovery = 0.0;
@@ -677,6 +759,7 @@ impl DhpSession {
                         recovery += self.ckpt_cost.restore_time_s()
                             + torn as f64 * GROUP_CREATE_COST_S
                             + self.work_since_ckpt_s;
+                        self.pending_lost_work_s += self.work_since_ckpt_s;
                         self.work_since_ckpt_s = 0.0;
                         // No compute span survives a restore to hide the
                         // next step's prewarm behind.
@@ -814,9 +897,13 @@ impl DhpSession {
         // Keep any later prefetched step flowing in the background.
         self.pump();
 
-        // Boundary faults (if any) ride on this step's report.
+        // Boundary faults (if any) ride on this step's report; in
+        // within-step mode the timed draws instead flow into the event
+        // kernel below and the boundary charges are zero.
         let faults = std::mem::take(&mut self.pending_faults);
         let recovery_time_s = std::mem::take(&mut self.pending_recovery_s);
+        let timed = std::mem::take(&mut self.pending_timed);
+        let boundary_lost_s = std::mem::take(&mut self.pending_lost_work_s);
 
         let schedule_latency_s: f64 =
             pending.received.iter().map(|b| b.schedule_latency_s).sum();
@@ -848,6 +935,14 @@ impl DhpSession {
             // so any schedule that did solve is discarded untouched.
             let schedule_time_s = pending.sched_span_s + t_drain.elapsed().as_secs_f64();
             self.prev_compute_s = 0.0;
+            // Within-step mode: nothing executes, so there is no virtual
+            // timeline to land the faults on — apply their state changes
+            // degenerately at t = 0 (the charges must not be lost or the
+            // next solve would see a stale mesh). An open checkpoint
+            // write window stays pending: the write makes no progress
+            // while nothing executes.
+            let (timeline, degenerate_recovery_s) =
+                self.apply_timed_faults_degenerate(&timed);
             return Some(StepReport {
                 step: pending.step,
                 schedules: Vec::new(),
@@ -869,6 +964,8 @@ impl DhpSession {
                     iter_time_s: 0.0,
                     straggle_s: 0.0,
                     tokens: 0,
+                    lost_work_s: 0.0,
+                    interrupted_waves: 0,
                 },
                 idle_fraction: 0.0,
                 evictions: 0,
@@ -877,8 +974,10 @@ impl DhpSession {
                 pool_buffer_bytes: self.mpu.pool_buffer_bytes(),
                 faults,
                 failed: Some(err),
-                recovery_time_s,
+                recovery_time_s: recovery_time_s + degenerate_recovery_s,
                 checkpoint_time_s: 0.0,
+                timeline,
+                lost_work_s: boundary_lost_s,
             });
         }
         // Executor preparation is part of the scheduling phase: per-rank
@@ -924,10 +1023,26 @@ impl DhpSession {
         // accounting) while an eviction-forced re-creation still counts
         // as a charged miss.
         self.mpu.pool_mut().set_passive_hits(true);
-        let pool = self.mpu.pool_mut();
-        let mut iteration =
-            self.sim
-                .execute_iteration_overlapped(&scheduled, self.comm, pool, 0.0);
+        let (mut iteration, timeline, within_recovery_s, torn_ckpt, had_failure) =
+            if self.within_step {
+                let out = self.execute_within_step(&scheduled, &timed);
+                (
+                    out.iteration,
+                    out.timeline,
+                    out.recovery_s,
+                    out.torn_ckpt,
+                    out.had_failure,
+                )
+            } else {
+                let pool = self.mpu.pool_mut();
+                let iteration = self.sim.execute_iteration_overlapped(
+                    &scheduled,
+                    self.comm,
+                    pool,
+                    0.0,
+                );
+                (iteration, EventTimeline::new(), 0.0, None, false)
+            };
         self.mpu.pool_mut().set_passive_hits(false);
         let serial = prewarm_serial_s + iteration.reconfig_serial_s;
         let charged = (serial - prewarm_slack_s.max(0.0)).max(0.0);
@@ -935,18 +1050,38 @@ impl DhpSession {
         iteration.reconfig_time_s = charged;
         iteration.iter_time_s = iteration.exec_time_s + iteration.grad_sync_s + charged;
         self.prev_compute_s = iteration.exec_time_s + iteration.grad_sync_s;
+        if had_failure {
+            // Same rule as the boundary path: no compute span survives a
+            // mid-step restore to hide the next step's prewarm behind.
+            self.prev_compute_s = 0.0;
+        }
         self.executed += 1;
         // This step's progress is at risk until the next checkpoint; the
         // cadence is injector-independent so a fault-free faulted run
         // and a no-injector run stay bit-identical.
         self.work_since_ckpt_s += iteration.iter_time_s;
-        let checkpoint_time_s =
-            if self.ckpt_interval > 0 && self.executed % self.ckpt_interval == 0 {
-                self.work_since_ckpt_s = 0.0;
-                self.ckpt_cost.save_time_s()
-            } else {
-                0.0
-            };
+        let cadence =
+            self.ckpt_interval > 0 && self.executed % self.ckpt_interval == 0;
+        let checkpoint_time_s = if cadence {
+            self.work_since_ckpt_s = 0.0;
+            let save = self.ckpt_cost.save_time_s();
+            if self.within_step {
+                // The save issued now physically writes during the NEXT
+                // step's virtual timeline, where a failure can tear it.
+                self.pending_ckpt_write = Some((pending.step, save));
+            }
+            save
+        } else if let Some(torn_id) = torn_ckpt {
+            // A failure tore this step's in-flight checkpoint write:
+            // re-issue the save (charged again — the first charge bought
+            // a write that never completed) with the same id; it opens a
+            // fresh window over the next step.
+            let save = self.ckpt_cost.save_time_s();
+            self.pending_ckpt_write = Some((torn_id, save));
+            save
+        } else {
+            0.0
+        };
 
         let (mut groups_placed, mut groups_replayed) = (0usize, 0usize);
         for (_, s) in &scheduled {
@@ -983,12 +1118,14 @@ impl DhpSession {
             pool: pool_stats,
             pool_groups: self.mpu.pool_size(),
             pool_buffer_bytes: self.mpu.pool_buffer_bytes(),
+            lost_work_s: boundary_lost_s + iteration.lost_work_s,
             iteration,
             schedules,
             faults,
             failed: None,
-            recovery_time_s,
+            recovery_time_s: recovery_time_s + within_recovery_s,
             checkpoint_time_s,
+            timeline,
         })
     }
 

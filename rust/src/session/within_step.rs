@@ -1,0 +1,846 @@
+//! The within-step discrete-event execution path of [`DhpSession`]
+//! (builder opt-in [`super::SessionBuilder::within_step_faults`]).
+//!
+//! The step-granular reference path (`execute_iteration_overlapped`)
+//! executes a step as an opaque span and applies faults at the next
+//! boundary, charging a failure the whole `work_since_ckpt` replay.
+//! This module replays the SAME execution as a discrete-event timeline —
+//! wave start/finish per placed plan, fault arrivals at hash-derived
+//! virtual times, an overlapped checkpoint write window, gradient sync —
+//! so a `RankFailure` at virtual time `t` interrupts exactly the wave
+//! in flight, re-executes only that wave on its survivor plan
+//! ([`crate::cluster::ClusterSim::survivor_plan`]), and charges lost
+//! work as `t − wave_start`. Completed waves and steps persist in
+//! sharded survivor state (the MegaScale-style wave-commit model), so
+//! they are never replayed — the source of the strictly-smaller lost
+//! work this PR's acceptance regression pins down.
+//!
+//! Bit-identity with the reference under a quiet injector is BY
+//! CONSTRUCTION: the kernel replicates the reference path's pool
+//! acquisition order (all of a micro-batch's waves acquired, in wave
+//! order, before its first wave executes), its `exec += makespan` fold
+//! order, and its reconfiguration measurement (pool create-time delta),
+//! and performs no extra arithmetic on the quiet path. The differential
+//! property test in `tests/property_invariants.rs` enforces it.
+
+use crate::cluster::{
+    EventKind, EventQueue, EventTimeline, FaultEvent, IterationReport,
+    TimedFault, WaveReport,
+};
+use crate::data::sequence::Sequence;
+use crate::parallel::group::GROUP_CREATE_COST_S;
+use crate::parallel::RankId;
+use crate::scheduler::{PlacedPlan, Schedule};
+
+use super::DhpSession;
+
+/// What one within-step execution produced, beyond the iteration report
+/// itself: the virtual-time event log, the recovery wall charge accrued
+/// at fault arrivals, whether a checkpoint write was torn (and must be
+/// re-issued), and whether any rank failure landed (which zeroes the
+/// prewarm-overlap budget, as on the boundary path).
+pub(super) struct WithinStepOutcome {
+    /// The executed iteration (reconfig fields pre-recharge, exactly as
+    /// `execute_iteration_overlapped` returns them).
+    pub(super) iteration: IterationReport,
+    /// Every event the kernel processed or synthesized, in pop order.
+    pub(super) timeline: EventTimeline,
+    /// Restore + re-warm stalls + re-done partial work, charged into the
+    /// step's `recovery_time_s`.
+    pub(super) recovery_s: f64,
+    /// `Some(id)` when a failure tore the in-flight checkpoint write:
+    /// the session re-issues that save after this step.
+    pub(super) torn_ckpt: Option<u64>,
+    /// A `RankFailure` was applied (mesh shrank and state was restored).
+    pub(super) had_failure: bool,
+}
+
+/// The wave currently executing on the virtual timeline.
+struct InFlight {
+    mb: usize,
+    wave: usize,
+    start_s: f64,
+    finish_seq: u64,
+    report: WaveReport,
+}
+
+impl DhpSession {
+    /// Execute one scheduled step through the discrete-event kernel.
+    /// `timed` are this step's injector draws with hash-derived arrival
+    /// fractions ([`crate::cluster::FaultInjector::advance_timed`]),
+    /// mapped onto the quiet nominal span of the step.
+    pub(super) fn execute_within_step(
+        &mut self,
+        scheduled: &[(Vec<Sequence>, Schedule)],
+        timed: &[TimedFault],
+    ) -> WithinStepOutcome {
+        let reconfig_before = self.mpu.pool_stats().create_time_s;
+        // Live plans: start as the schedule's placed plans, re-placed by
+        // survivor_plan when a mid-step fault kills ranks they use.
+        let mut live: Vec<Vec<PlacedPlan>> = scheduled
+            .iter()
+            .map(|(_, s)| s.waves.clone())
+            .collect();
+        let order: Vec<(usize, usize)> = scheduled
+            .iter()
+            .enumerate()
+            .flat_map(|(mi, (_, s))| (0..s.waves.len()).map(move |wi| (mi, wi)))
+            .collect();
+        let tokens: u64 = scheduled
+            .iter()
+            .map(|(seqs, _)| seqs.iter().map(|s| s.len()).sum::<u64>())
+            .sum();
+
+        let mut queue = EventQueue::new();
+        let mut timeline = EventTimeline::new();
+
+        // A checkpoint save issued at the previous step's cadence
+        // physically writes during THIS step's virtual timeline.
+        let mut window: Option<(u64, u64)> = None; // (id, end event seq)
+        if let Some((id, write_s)) = self.pending_ckpt_write.take() {
+            queue.push(0.0, EventKind::CkptBegin { id });
+            let end_seq = queue.push(write_s, EventKind::CkptEnd { id });
+            window = Some((id, end_seq));
+        }
+
+        // Map arrival fractions onto the quiet nominal span. Computed
+        // only when faults are pending, so the quiet path performs no
+        // extra execute_plan calls (cost parity with the reference).
+        if !timed.is_empty() {
+            let mut nominal = self.sim.grad_sync_time();
+            for &(mi, wi) in &order {
+                nominal += self
+                    .sim
+                    .execute_plan(&scheduled[mi].0, &live[mi][wi], self.comm)
+                    .makespan_s;
+            }
+            for t in timed {
+                queue.push(
+                    t.at_frac * nominal,
+                    EventKind::FaultArrival(t.event.clone()),
+                );
+            }
+        }
+
+        if let Some(&(mi, wi)) = order.first() {
+            queue.push(0.0, EventKind::WaveStart { mb: mi, wave: wi });
+        } else {
+            let span = self.sim.grad_sync_time();
+            queue.push(0.0, EventKind::GradSync { span_s: span });
+        }
+
+        let mut in_flight: Option<InFlight> = None;
+        let mut acquired_mb = 0usize;
+        let mut pos = 0usize;
+        let (mut exec, mut straggle) = (0.0f64, 0.0f64);
+        let mut waves: Vec<WaveReport> = Vec::new();
+        let (mut lost, mut recovery) = (0.0f64, 0.0f64);
+        let mut interrupted = 0usize;
+        let mut torn_ckpt: Option<u64> = None;
+        let mut had_failure = false;
+
+        while let Some(rec) = queue.pop() {
+            let now = rec.time_s;
+            timeline.log(rec.time_s, rec.seq, rec.kind.clone());
+            match rec.kind {
+                EventKind::WaveStart { mb, wave } => {
+                    if mb == acquired_mb {
+                        // First wave of this micro-batch starting:
+                        // refresh every wave against the (possibly
+                        // shrunken) mesh FIRST — acquiring a dead-rank
+                        // plan would re-create invalidated groups — then
+                        // acquire the whole micro-batch's groups in wave
+                        // order. Quiet, this is byte-for-byte the
+                        // reference path's acquisition pattern.
+                        for plan in live[mb].iter_mut() {
+                            if let Some(new) = self.sim.survivor_plan(plan) {
+                                *plan = new;
+                            }
+                        }
+                        for plan in &live[mb] {
+                            self.mpu.pool_mut().acquire_wave(
+                                plan.groups.iter().map(|g| g.pool_key()),
+                            );
+                        }
+                        acquired_mb += 1;
+                    } else if let Some(new) =
+                        self.sim.survivor_plan(&live[mb][wave])
+                    {
+                        // A fault since this micro-batch's acquisition
+                        // killed ranks this wave uses: re-place and
+                        // establish the survivor groups (a charged pool
+                        // miss — honest re-creation) before executing.
+                        self.mpu.pool_mut().acquire_wave(
+                            new.groups.iter().map(|g| g.pool_key()),
+                        );
+                        live[mb][wave] = new;
+                    }
+                    let report = self.sim.execute_plan(
+                        &scheduled[mb].0,
+                        &live[mb][wave],
+                        self.comm,
+                    );
+                    let finish_seq = queue.push(
+                        now + report.makespan_s,
+                        EventKind::WaveFinish {
+                            mb,
+                            wave,
+                            makespan_s: report.makespan_s,
+                        },
+                    );
+                    in_flight = Some(InFlight {
+                        mb,
+                        wave,
+                        start_s: now,
+                        finish_seq,
+                        report,
+                    });
+                }
+                EventKind::WaveFinish { .. } => {
+                    let fl = in_flight
+                        .take()
+                        .expect("wave finish without an in-flight wave");
+                    exec += fl.report.makespan_s;
+                    straggle += fl.report.straggle_s;
+                    waves.push(fl.report);
+                    pos += 1;
+                    if let Some(&(mi, wi)) = order.get(pos) {
+                        queue.push(
+                            now,
+                            EventKind::WaveStart { mb: mi, wave: wi },
+                        );
+                    } else {
+                        let span = self.sim.grad_sync_time();
+                        queue.push(now, EventKind::GradSync { span_s: span });
+                    }
+                }
+                EventKind::FaultArrival(ev) => {
+                    let (taken, stall, was_failure) =
+                        self.apply_fault_state(&ev);
+                    had_failure |= was_failure;
+                    recovery += stall;
+                    if was_failure {
+                        // The failed rank's checkpoint shard dies with
+                        // it: the in-flight write can never complete, so
+                        // any restore falls back to the previous
+                        // COMPLETED checkpoint and the partial write is
+                        // wasted wall.
+                        if let Some((id, end_seq)) = window.take() {
+                            queue.cancel(end_seq);
+                            let seq = queue.alloc_seq();
+                            timeline.log(
+                                now,
+                                seq,
+                                EventKind::CkptTorn {
+                                    id,
+                                    restore_from: self.last_ckpt_done,
+                                    lost_write_s: now,
+                                },
+                            );
+                            lost += now;
+                            recovery += now;
+                            torn_ckpt = Some(id);
+                        }
+                    }
+                    // Interrupt the in-flight wave iff the fault took
+                    // ranks it is executing on; unrelated repair runs
+                    // asynchronously and does not displace the timeline.
+                    let hit = in_flight.as_ref().is_some_and(|fl| {
+                        live[fl.mb][fl.wave].groups.iter().any(|g| {
+                            g.ranks.iter().any(|r| taken.contains(r))
+                        })
+                    });
+                    if hit {
+                        let fl = in_flight.take().expect("hit checked Some");
+                        queue.cancel(fl.finish_seq);
+                        let lost_w = now - fl.start_s;
+                        lost += lost_w;
+                        // The discarded partial run is wall the cluster
+                        // actually spent: charge it (plus the stall)
+                        // into recovery, mirroring how the boundary path
+                        // charges replayed work.
+                        recovery += lost_w;
+                        interrupted += 1;
+                        let seq = queue.alloc_seq();
+                        timeline.log(
+                            now,
+                            seq,
+                            EventKind::WaveInterrupted {
+                                mb: fl.mb,
+                                wave: fl.wave,
+                                lost_s: lost_w,
+                            },
+                        );
+                        let seq = queue.alloc_seq();
+                        timeline.log(
+                            now,
+                            seq,
+                            EventKind::RecoveryStall { stall_s: stall },
+                        );
+                        queue.push(
+                            now + stall,
+                            EventKind::WaveStart {
+                                mb: fl.mb,
+                                wave: fl.wave,
+                            },
+                        );
+                    }
+                }
+                EventKind::CkptEnd { id } => {
+                    self.last_ckpt_done = Some(id);
+                    window = None;
+                }
+                // Already logged above; no state transition.
+                EventKind::CkptBegin { .. }
+                | EventKind::GradSync { .. }
+                | EventKind::WaveInterrupted { .. }
+                | EventKind::RecoveryStall { .. }
+                | EventKind::CkptTorn { .. } => {}
+            }
+        }
+
+        let reconfig_serial =
+            self.mpu.pool_stats().create_time_s - reconfig_before;
+        let grad_sync = self.sim.grad_sync_time();
+        let iteration = IterationReport {
+            waves,
+            exec_time_s: exec,
+            grad_sync_s: grad_sync,
+            reconfig_time_s: reconfig_serial,
+            reconfig_serial_s: reconfig_serial,
+            iter_time_s: exec + grad_sync + reconfig_serial,
+            straggle_s: straggle,
+            tokens,
+            lost_work_s: lost,
+            interrupted_waves: interrupted,
+        };
+        WithinStepOutcome {
+            iteration,
+            timeline,
+            recovery_s: recovery,
+            torn_ckpt,
+            had_failure,
+        }
+    }
+
+    /// Apply one fault's STATE transition (mesh shrink/re-admit, pool
+    /// invalidation, fencing, slowdown install) and return
+    /// `(ranks taken, stall seconds, was a rank failure)`. Shared by the
+    /// event kernel (which applies it at the arrival instant) and the
+    /// degenerate failed-step path (which applies it at t = 0). The
+    /// transitions mirror the boundary path's `apply_faults` exactly,
+    /// EXCEPT that a failure does not replay `work_since_ckpt`:
+    /// wave-commit semantics keep completed work alive in sharded
+    /// survivor state, so only restore + re-warm stall here (the
+    /// interrupted partial wave is charged by the caller).
+    fn apply_fault_state(
+        &mut self,
+        ev: &FaultEvent,
+    ) -> (Vec<RankId>, f64, bool) {
+        let mut taken: Vec<RankId> = Vec::new();
+        let mut stall = 0.0f64;
+        let mut was_failure = false;
+        match ev {
+            FaultEvent::Recovery { ranks } => {
+                let back: Vec<RankId> = ranks
+                    .iter()
+                    .copied()
+                    .filter(|&r| {
+                        self.downed.remove(&r)
+                            && !self.mpu.mesh.is_rank_free(r)
+                    })
+                    .collect();
+                if !back.is_empty() {
+                    self.commit_occupancy(&[], &back);
+                }
+            }
+            FaultEvent::RankFailure { rank } => {
+                if self.take_down(*rank) {
+                    let torn = self.commit_occupancy(&[*rank], &[]);
+                    self.downed.insert(*rank);
+                    taken.push(*rank);
+                    was_failure = true;
+                    stall += self.ckpt_cost.restore_time_s()
+                        + torn as f64 * GROUP_CREATE_COST_S;
+                }
+            }
+            FaultEvent::Preemption { ranks, .. } => {
+                for &r in ranks {
+                    if self.take_down(r) {
+                        let torn = self.commit_occupancy(&[r], &[]);
+                        self.downed.insert(r);
+                        taken.push(r);
+                        stall += torn as f64 * GROUP_CREATE_COST_S;
+                    }
+                }
+            }
+            FaultEvent::Straggler { rank, slowdown } => {
+                let r = *rank;
+                if r < self.mpu.mesh.replicas && self.mpu.mesh.is_rank_free(r)
+                {
+                    self.straggle_counts[r] += 1;
+                    let chronic = match self.fence_threshold {
+                        Some(t) => self.straggle_counts[r] >= t,
+                        None => false,
+                    };
+                    if chronic && self.mpu.mesh.free_replicas() > 1 {
+                        let torn = self.commit_occupancy(&[r], &[]);
+                        self.fenced.insert(r);
+                        taken.push(r);
+                        stall += torn as f64 * GROUP_CREATE_COST_S;
+                    } else {
+                        // Installed mid-step: stretches waves that START
+                        // after this instant (in-flight waves committed
+                        // their makespan at start).
+                        self.sim.set_slowdown(r, *slowdown);
+                    }
+                }
+            }
+        }
+        (taken, stall, was_failure)
+    }
+
+    /// Failed-step fallback: nothing executes, so there is no virtual
+    /// timeline to land the faults on — apply each one's state change at
+    /// t = 0 (arrival order) so the next solve sees the post-fault mesh
+    /// and the restore/re-warm stalls are not lost. An open checkpoint
+    /// write window is left pending (the write makes no progress while
+    /// nothing executes). Returns the (arrivals-only) timeline and the
+    /// recovery charge.
+    pub(super) fn apply_timed_faults_degenerate(
+        &mut self,
+        timed: &[TimedFault],
+    ) -> (EventTimeline, f64) {
+        let mut timeline = EventTimeline::new();
+        let mut queue = EventQueue::new(); // seq allocator only
+        let mut recovery = 0.0f64;
+        for t in timed {
+            let seq = queue.alloc_seq();
+            timeline.log(0.0, seq, EventKind::FaultArrival(t.event.clone()));
+            let (_taken, stall, _was_failure) =
+                self.apply_fault_state(&t.event);
+            recovery += stall;
+        }
+        (timeline, recovery)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{DhpSession, SessionBuilder, StepReport};
+    use crate::cluster::{
+        ClusterSim, EventKind, FaultConfig, FaultEvent, FaultInjector,
+        TimedFault,
+    };
+    use crate::config::presets::by_name;
+    use crate::config::{ClusterConfig, TrainStage};
+    use crate::cost::{CostCoeffs, CostModel, HardwareSpec, MemoryModel};
+    use crate::data::datasets::{DatasetKind, DatasetSampler, TokenizerSpec};
+    use crate::scheduler::Scheduler;
+    use crate::train::CheckpointCostModel;
+
+    /// High-res video tokenization (matches the session tests' regime).
+    fn sampler(kind: DatasetKind, seed: u64) -> DatasetSampler {
+        DatasetSampler::new(kind, seed).with_spec(TokenizerSpec {
+            fps: 2.0,
+            tokens_per_frame: 256.0,
+            text_min: 32,
+            text_max: 512,
+        })
+    }
+
+    /// Paper regime: one replica = TP×PP = 4 NPUs, 2 replicas/node.
+    fn paper_regime(replicas: usize) -> (CostModel, ClusterConfig) {
+        let mut cluster = ClusterConfig::default().with_npus(replicas * 4);
+        cluster.tp = 2;
+        cluster.pp = 2;
+        let preset = by_name("InternVL3-8B").unwrap();
+        let hw = HardwareSpec {
+            peak_flops: 376e12 * 4.0,
+            ..HardwareSpec::default()
+        };
+        let cost = CostModel {
+            coeffs: CostCoeffs::analytic(&preset, TrainStage::Full, &hw),
+            memory: MemoryModel {
+                e_bytes: 8192.0 * preset.act_bytes_per_token() + 2e9,
+                m_states: 2e9,
+                m_token: preset.act_bytes_per_token(),
+            },
+        };
+        (cost, cluster)
+    }
+
+    fn dhp_builder(replicas: usize) -> SessionBuilder {
+        let (cost, cluster) = paper_regime(replicas);
+        let preset = by_name("InternVL3-8B").unwrap();
+        let scheduler =
+            Scheduler::new(cost, crate::parallel::DeviceMesh::new(&cluster));
+        let sim = ClusterSim::new(preset, TrainStage::Full, cluster);
+        DhpSession::builder(Box::new(scheduler), sim)
+    }
+
+    fn batches(n: usize, gbs: usize, seed: u64) -> Vec<Vec<crate::data::sequence::Sequence>> {
+        let mut s = sampler(DatasetKind::OpenVid, seed);
+        (0..n).map(|_| s.sample_batch(gbs)).collect()
+    }
+
+    fn digests(reports: &[StepReport]) -> Vec<u64> {
+        reports.iter().map(|r| r.digest()).collect()
+    }
+
+    #[test]
+    fn quiet_within_step_is_bit_identical_to_step_granular() {
+        // The backbone invariant: a quiet injector through the event
+        // kernel reproduces the step-granular path's digests bit for
+        // bit — makespan, reconfig charging, pool counters, everything.
+        let bats = batches(4, 24, 0xD1FF);
+        let quiet = FaultInjector::new(8, FaultConfig::quiet(7));
+        let mut ev = dhp_builder(8)
+            .fault_injector(quiet.clone())
+            .within_step_faults(true)
+            .build();
+        let mut refr = dhp_builder(8).fault_injector(quiet).build();
+        for b in &bats {
+            let re = ev.step(b);
+            let rr = refr.step(b);
+            assert!(
+                !re.timeline.is_empty(),
+                "event kernel must log the quiet timeline"
+            );
+            assert!(rr.timeline.is_empty(), "reference logs no timeline");
+            assert_eq!(re.iteration.interrupted_waves, 0);
+            assert_eq!(re.lost_work_s, 0.0);
+            assert_eq!(
+                re.digest(),
+                rr.digest(),
+                "quiet event kernel drifted from the reference at step {}",
+                re.step
+            );
+        }
+    }
+
+    #[test]
+    fn golden_replay_same_trace_and_permuted_trace_match() {
+        // Deterministic replay: same seed + same scripted trace ⇒
+        // identical serialized event logs and digest sequences across
+        // fresh sessions; a permuted-but-equal-time trace also matches
+        // (the queue's (time, seq) tie-break + canonical arrival sort).
+        let a = TimedFault {
+            at_frac: 0.4,
+            event: FaultEvent::RankFailure { rank: 2 },
+        };
+        let b = TimedFault {
+            at_frac: 0.4,
+            event: FaultEvent::Straggler { rank: 5, slowdown: 1.8 },
+        };
+        let trace = vec![vec![], vec![a.clone(), b.clone()], vec![]];
+        let permuted = vec![vec![], vec![b, a], vec![]];
+        let bats = batches(3, 24, 0x601D);
+        let run = |trace: Vec<Vec<TimedFault>>| {
+            let mut s = dhp_builder(8)
+                .fault_injector(FaultInjector::scripted_timed(8, trace))
+                .within_step_faults(true)
+                .build();
+            let reports: Vec<StepReport> =
+                bats.iter().map(|b| s.step(b)).collect();
+            let logs: Vec<String> = reports
+                .iter()
+                .map(|r| r.timeline.to_json().to_string_pretty())
+                .collect();
+            (digests(&reports), logs)
+        };
+        let (d1, l1) = run(trace.clone());
+        let (d2, l2) = run(trace);
+        let (d3, l3) = run(permuted);
+        assert_eq!(d1, d2, "same trace must replay bit-identically");
+        assert_eq!(l1, l2, "same trace must serialize identically");
+        assert_eq!(d1, d3, "equal-time permutation must not change digests");
+        assert_eq!(l1, l3, "equal-time permutation must not change the log");
+    }
+
+    #[test]
+    fn mid_wave_failure_charges_strictly_less_than_boundary_replay() {
+        // THE acceptance regression: on the same scripted trace, the
+        // event kernel's partial-wave charge must be strictly below the
+        // PR 6 whole-step `work_since_ckpt` replay.
+        let trace = vec![
+            vec![],
+            vec![TimedFault {
+                at_frac: 0.45,
+                event: FaultEvent::RankFailure { rank: 2 },
+            }],
+        ];
+        let bats = batches(2, 24, 0xACCE);
+        let mut ev = dhp_builder(8)
+            .fault_injector(FaultInjector::scripted_timed(8, trace.clone()))
+            .within_step_faults(true)
+            .build();
+        let mut bd = dhp_builder(8)
+            .fault_injector(FaultInjector::scripted_timed(8, trace))
+            .build();
+        let ev_reports: Vec<StepReport> = bats.iter().map(|b| ev.step(b)).collect();
+        let bd_reports: Vec<StepReport> = bats.iter().map(|b| bd.step(b)).collect();
+        // Both saw the same fault set on their step-1 report.
+        assert_eq!(ev_reports[1].faults, bd_reports[1].faults);
+        let ev_lost = ev_reports[1].lost_work_s;
+        let bd_lost = bd_reports[1].lost_work_s;
+        assert!(bd_lost > 0.0, "boundary mode must replay work since ckpt");
+        assert!(ev_lost > 0.0, "a mid-wave kill must lose the partial wave");
+        assert!(
+            ev_lost < bd_lost,
+            "partial-wave charge ({ev_lost}) must be strictly below the \
+             whole-step replay ({bd_lost})"
+        );
+        // And the event kernel actually interrupted a wave mid-flight.
+        assert!(ev_reports[1].iteration.interrupted_waves >= 1);
+        assert!(ev_reports[1]
+            .timeline
+            .records()
+            .iter()
+            .any(|r| matches!(r.kind, EventKind::WaveInterrupted { .. })));
+        // Both modes still make progress afterwards (mesh shrank by 1).
+        assert_eq!(ev.downed_ranks(), vec![2]);
+        assert_eq!(bd.downed_ranks(), vec![2]);
+    }
+
+    #[test]
+    fn recovery_at_same_instant_as_failure_is_deterministic() {
+        // Edge: a preemption's repair (Recovery) expiring the same
+        // virtual instant a failure lands. Canonical equal-time ordering
+        // makes the outcome a pure function of the trace content.
+        let p = TimedFault {
+            at_frac: 0.2,
+            event: FaultEvent::Preemption { ranks: vec![3], duration_steps: 1 },
+        };
+        let same_t_recover = TimedFault {
+            at_frac: 0.6,
+            event: FaultEvent::Recovery { ranks: vec![3] },
+        };
+        let same_t_fail = TimedFault {
+            at_frac: 0.6,
+            event: FaultEvent::RankFailure { rank: 1 },
+        };
+        let trace = vec![
+            vec![p],
+            vec![same_t_recover.clone(), same_t_fail.clone()],
+            vec![],
+        ];
+        let permuted_step: Vec<TimedFault> = vec![same_t_fail, same_t_recover];
+        let bats = batches(3, 24, 0x7155);
+        let run = |t1: Vec<TimedFault>| {
+            let mut s = dhp_builder(8)
+                .fault_injector(FaultInjector::scripted_timed(
+                    8,
+                    vec![trace[0].clone(), t1, vec![]],
+                ))
+                .within_step_faults(true)
+                .build();
+            let reports: Vec<StepReport> =
+                bats.iter().map(|b| s.step(b)).collect();
+            (digests(&reports), s.downed_ranks())
+        };
+        let (d1, down1) = run(trace[1].clone());
+        let (d2, down2) = run(permuted_step);
+        assert_eq!(d1, d2, "same-instant events must order canonically");
+        assert_eq!(down1, down2);
+        // Rank 3 recovered (preempted then repaired), rank 1 stayed down.
+        assert_eq!(down1, vec![1]);
+    }
+
+    #[test]
+    fn fenced_rank_is_not_readmitted_by_midwave_recovery() {
+        // Edge: Recovery arriving mid-wave for a rank that was fenced as
+        // a chronic straggler must NOT re-admit it.
+        let slow = |frac: f64| TimedFault {
+            at_frac: frac,
+            event: FaultEvent::Straggler { rank: 4, slowdown: 2.5 },
+        };
+        let trace = vec![
+            vec![slow(0.3)],
+            vec![slow(0.3)], // second strike → fenced at threshold 2
+            vec![TimedFault {
+                at_frac: 0.5,
+                event: FaultEvent::Recovery { ranks: vec![4] },
+            }],
+        ];
+        let bats = batches(3, 24, 0xFE2C);
+        let mut s = dhp_builder(8)
+            .fault_injector(FaultInjector::scripted_timed(8, trace))
+            .within_step_faults(true)
+            .straggler_fence_threshold(2)
+            .build();
+        for b in &bats {
+            s.step(b);
+        }
+        assert_eq!(s.fenced_ranks(), vec![4], "chronic straggler fenced");
+        assert!(
+            !s.mesh().is_rank_free(4),
+            "mid-wave Recovery must not re-admit a fenced rank"
+        );
+        assert!(s.downed_ranks().is_empty());
+    }
+
+    #[test]
+    fn back_to_back_failures_within_one_repair_window() {
+        // Edge: two failures inside one step (same repair window) — the
+        // second interrupts the re-executed survivor wave again; both
+        // charge partial-wave lost work and the session survives.
+        let trace = vec![
+            vec![],
+            vec![
+                TimedFault {
+                    at_frac: 0.3,
+                    event: FaultEvent::RankFailure { rank: 1 },
+                },
+                TimedFault {
+                    at_frac: 0.7,
+                    event: FaultEvent::RankFailure { rank: 2 },
+                },
+            ],
+        ];
+        let bats = batches(2, 24, 0xB2B);
+        let mut s = dhp_builder(8)
+            .fault_injector(FaultInjector::scripted_timed(8, trace))
+            .within_step_faults(true)
+            .build();
+        let r0 = s.step(&bats[0]);
+        let r1 = s.step(&bats[1]);
+        assert!(r0.failed.is_none() && r1.failed.is_none());
+        assert_eq!(s.downed_ranks(), vec![1, 2]);
+        let arrivals = r1
+            .timeline
+            .records()
+            .iter()
+            .filter(|r| matches!(r.kind, EventKind::FaultArrival(_)))
+            .count();
+        assert_eq!(arrivals, 2, "both failures must land on the timeline");
+        assert!(r1.iteration.interrupted_waves >= 1);
+        assert!(r1.lost_work_s > 0.0);
+        assert!(r1.recovery_time_s > r1.lost_work_s, "restore + re-warm on top");
+        // The step still commits all its work on survivor plans.
+        assert!(r1.iteration.exec_time_s > 0.0);
+        assert_eq!(
+            r1.iteration.waves.len(),
+            r1.schedules.iter().map(|s| s.waves.len()).sum::<usize>(),
+            "every scheduled wave eventually commits"
+        );
+    }
+
+    #[test]
+    fn torn_checkpoint_restores_from_previous_completed_write() {
+        // Edge: a failure lands while a checkpoint write is streaming.
+        // The torn write must fall back to the PREVIOUS completed
+        // checkpoint and be re-issued.
+        let trace = vec![
+            vec![],
+            vec![],
+            vec![],
+            vec![],
+            // Step 4: the step-3 cadence checkpoint (id 3) is writing;
+            // tear it right away.
+            vec![TimedFault {
+                at_frac: 0.0,
+                event: FaultEvent::RankFailure { rank: 2 },
+            }],
+            vec![],
+        ];
+        let bats = batches(6, 24, 0xC4B7);
+        let mut s = dhp_builder(8)
+            .fault_injector(FaultInjector::scripted_timed(8, trace))
+            .within_step_faults(true)
+            .checkpoint_interval(2)
+            // A long write so the window is still open when the fault
+            // lands (and spans enough of the step to be realistic).
+            .checkpoint_cost(CheckpointCostModel {
+                state_bytes: 96e9,
+                write_bw: 40e9,
+                read_bw: 40e9,
+                restart_overhead_s: 5.0,
+            })
+            .build();
+        let reports: Vec<StepReport> = bats.iter().map(|b| s.step(b)).collect();
+        // Step 1 fires the cadence (2 executed steps): id 1 writes over
+        // step 2 and completes; step 3 fires cadence again: id 3 writes
+        // over step 4 where the failure tears it.
+        let torn: Vec<&StepReport> = reports
+            .iter()
+            .filter(|r| {
+                r.timeline
+                    .records()
+                    .iter()
+                    .any(|e| matches!(e.kind, EventKind::CkptTorn { .. }))
+            })
+            .collect();
+        assert_eq!(torn.len(), 1, "exactly one torn write");
+        let rec = torn[0]
+            .timeline
+            .records()
+            .iter()
+            .find(|e| matches!(e.kind, EventKind::CkptTorn { .. }))
+            .unwrap();
+        match rec.kind {
+            EventKind::CkptTorn { id, restore_from, .. } => {
+                assert_eq!(id, 3, "the step-3 checkpoint tore");
+                assert_eq!(
+                    restore_from,
+                    Some(1),
+                    "restore falls back to the completed step-1 write"
+                );
+            }
+            _ => unreachable!(),
+        }
+        // The torn save is re-issued: step 4 charges a save outside the
+        // cadence, and the re-issued write completes during step 5.
+        assert!(torn[0].checkpoint_time_s > 0.0, "re-issued save charged");
+        let last = &reports[5];
+        assert!(
+            last.timeline.records().iter().any(
+                |e| matches!(e.kind, EventKind::CkptEnd { id } if id == 3)
+            ),
+            "the re-issued step-3 checkpoint completes in step 5"
+        );
+    }
+
+    #[test]
+    fn quiet_timeline_serializes_and_orders_monotonically() {
+        // The timeline is a valid, monotone event log: times never go
+        // backwards, wave starts/finishes alternate per position, and
+        // the JSON serialization round-trips through util/json.
+        let bats = batches(1, 24, 0x0DE2);
+        let mut s = dhp_builder(8)
+            .fault_injector(FaultInjector::new(8, FaultConfig::quiet(7)))
+            .within_step_faults(true)
+            .build();
+        let r = s.step(&bats[0]);
+        let recs = r.timeline.records();
+        assert!(!recs.is_empty());
+        for pair in recs.windows(2) {
+            assert!(
+                pair[1].time_s >= pair[0].time_s,
+                "virtual clock must be monotone"
+            );
+        }
+        let starts = recs
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::WaveStart { .. }))
+            .count();
+        let finishes = recs
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::WaveFinish { .. }))
+            .count();
+        assert_eq!(starts, finishes, "quiet: every start commits");
+        assert_eq!(
+            starts,
+            r.schedules.iter().map(|s| s.waves.len()).sum::<usize>()
+        );
+        assert_eq!(
+            recs.iter()
+                .filter(|e| matches!(e.kind, EventKind::GradSync { .. }))
+                .count(),
+            1
+        );
+        let json = r.timeline.to_json().to_string_pretty();
+        let parsed = crate::util::json::Json::parse(&json).unwrap();
+        assert_eq!(parsed.as_arr().unwrap().len(), recs.len());
+    }
+}

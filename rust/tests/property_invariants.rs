@@ -618,3 +618,61 @@ fn schedules_respect_memory_constraint_eq3() {
         Ok(())
     });
 }
+
+#[test]
+fn quiet_event_kernel_is_digest_identical_to_step_granular() {
+    // ISSUE-8 acceptance: over random clusters, batch sizes, fault
+    // seeds, and pool capacities, the discrete-event execution kernel
+    // (`within_step_faults(true)`) with a quiet injector produces
+    // bit-identical `StepReport::digest()` sequences to the retained
+    // step-granular path. Any divergence means the event kernel's
+    // re-ordering of the same arithmetic leaked into the numbers.
+    use dhp::cluster::{FaultConfig, FaultInjector};
+    use dhp::experiments::harness::ExpContext;
+    use dhp::parallel::PoolCapacity;
+
+    forall(8, 0xA117, |rng| {
+        let npus = *rng.choose(&[16usize, 32]);
+        let gbs = rng.range_usize(8, 33);
+        let seed = rng.next_u64();
+        let cap = match rng.range_usize(0, 3) {
+            0 => PoolCapacity::Unbounded,
+            1 => PoolCapacity::MaxGroups(rng.range_usize(2, 8)),
+            _ => PoolCapacity::BufferBytes(rng.range_u64(1 << 27, 1 << 31)),
+        };
+        let mut ctx = ExpContext::new(
+            by_name("InternVL3-2B").unwrap(),
+            DatasetKind::OpenVid,
+            npus,
+            TrainStage::Full,
+        )
+        .with_gbs(gbs);
+        ctx.seed = seed;
+        let steps = 3usize;
+        let digests = |within: bool| -> Vec<u64> {
+            let mut session = ctx
+                .session_builder_for(Box::new(ctx.dhp()))
+                .pool_capacity(cap)
+                .fault_injector(FaultInjector::new(
+                    ctx.replicas(),
+                    FaultConfig::quiet(seed),
+                ))
+                .within_step_faults(within)
+                .build();
+            let mut sampler = ctx.sampler();
+            (0..steps)
+                .map(|_| session.step(&sampler.sample_batch(ctx.gbs)).digest())
+                .collect()
+        };
+        let ev = digests(true);
+        let st = digests(false);
+        if ev != st {
+            return Err(format!(
+                "event kernel drifted from the step-granular path: \
+                 {ev:#x?} vs {st:#x?} \
+                 (npus {npus}, gbs {gbs}, cap {cap:?}, seed {seed:#x})"
+            ));
+        }
+        Ok(())
+    });
+}

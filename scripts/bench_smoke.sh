@@ -54,10 +54,17 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
 cargo bench --bench solver_micro -- --quick
 
-# Resilience gate (ISSUE-6): the quick MTBF sweep runs DHP and every
-# baseline through the session facade under seeded fault traces, and the
-# bench itself exits non-zero if the zero-fault (quiet-injector) goodput
-# path is not bit-identical to a session with no injector at all.
+# Resilience gate (ISSUE-6 + ISSUE-8): the quick MTBF sweep runs DHP and
+# every baseline through the session facade under seeded fault traces.
+# The bench itself exits non-zero if any of its three invariants break:
+#   1. zero-fault (quiet-injector) goodput is bit-identical to a session
+#      with no injector at all;
+#   2. the same quiet run on the discrete-event kernel
+#      (within_step_faults) is ALSO bit-identical — the event queue is a
+#      pure re-ordering of the same arithmetic;
+#   3. a scripted mid-wave RankFailure charges strictly less lost work
+#      on the event kernel (partial-wave re-execution) than the boundary
+#      path's whole-step replay.
 cargo bench --bench resilience -- --quick
 
 echo
@@ -67,6 +74,36 @@ cat BENCH_solver_micro.json
 echo
 echo "=== BENCH_resilience.json ==="
 cat BENCH_resilience.json
+
+# ISSUE-8 record-shape gate: the resilience record must carry the
+# event-kernel cells (within_step=true rows with a lost_work_s field)
+# and both new gate verdicts — a record without them means the bench
+# silently regressed to the boundary-only sweep.
+echo
+python3 - BENCH_resilience.json <<'PYEOF'
+import json
+import sys
+
+with open(sys.argv[1]) as f:
+    doc = json.load(f)
+
+failed = False
+for flag in ("zero_drift_ok", "within_step_zero_drift_ok", "mid_wave_charges_less_ok"):
+    if doc.get(flag) is not True:
+        print(f"[bench-resilience] FAIL: gate flag {flag!r} missing or false")
+        failed = True
+cells = doc.get("cells", [])
+ws = [c for c in cells if c.get("within_step") is True]
+if not ws:
+    print("[bench-resilience] FAIL: no within_step=true cells in the record")
+    failed = True
+if any("lost_work_s" not in c for c in cells):
+    print("[bench-resilience] FAIL: cells missing lost_work_s")
+    failed = True
+if not failed:
+    print(f"[bench-resilience] OK: {len(ws)}/{len(cells)} event-kernel cells, all gates green")
+sys.exit(1 if failed else 0)
+PYEOF
 
 # ISSUE-7 scale-tier gate: the 1024/4096-replica cases must exist (a
 # silently dropped case would read as "still fast"), and the npus=1024
