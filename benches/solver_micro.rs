@@ -41,7 +41,10 @@ fn main() {
         );
         let mut sampler = ctx.sampler();
         let seqs = sampler.sample_batch(gbs);
-        let sch = ctx.dhp();
+        // Reuse OFF: these cases re-solve one fixed batch, which the
+        // ISSUE-9 schedule cache would short-circuit after the first
+        // rep — the search, not the cache probe, is what they measure.
+        let sch = ctx.dhp().with_solver_reuse(false);
         let memory = ctx.memory();
         let n = ctx.replicas();
 
@@ -95,10 +98,98 @@ fn main() {
         );
         let mut sampler = ctx.sampler();
         let seqs = sampler.sample_batch(gbs);
-        let sch = ctx.dhp();
+        // Reuse OFF here too: repeated reps of one batch must keep
+        // measuring the cold search (the 1 ms p90 budget's subject).
+        let sch = ctx.dhp().with_solver_reuse(false);
         report.bench(&format!("schedule_gbs{gbs}_npus{npus}"), sch_w, sch_r, || {
             std::hint::black_box(sch.schedule(&seqs));
         });
+    }
+
+    // ISSUE-9 steady-state tier: a correlated 32-batch stream through ONE
+    // reuse-enabled scheduler — the number the cross-step reuse layers
+    // exist to move. Three of every four steps replay the base batch
+    // (exact-hit cache territory); every fourth draws a fresh same-size
+    // batch from the same distribution (cache miss, warm-start-seeded
+    // search). Per-step wall times are partitioned by reuse provenance
+    // and reported alongside a reuse-disabled twin replaying the
+    // identical stream (the cold baseline the ≥5× exact-hit acceptance
+    // criterion compares against).
+    {
+        let npus = 1024usize;
+        let gbs = 2048usize;
+        let steps = if quick { 12 } else { 32 };
+        let ctx = ExpContext::new(
+            by_name("InternVL3-8B").unwrap(),
+            DatasetKind::OpenVid,
+            npus,
+            TrainStage::Full,
+        );
+        let mut sampler = ctx.sampler();
+        let base = sampler.sample_batch(gbs);
+        let stream: Vec<_> = (0..steps)
+            .map(|step| {
+                if step > 0 && step % 4 == 0 {
+                    sampler.sample_batch(gbs)
+                } else {
+                    base.clone()
+                }
+            })
+            .collect();
+        let sch = ctx.dhp();
+        let cold_twin = ctx.dhp().with_solver_reuse(false);
+        let mut all = Vec::with_capacity(steps);
+        let mut hit = Vec::new();
+        let mut warm = Vec::new();
+        let mut cold = Vec::new();
+        let mut twin = Vec::with_capacity(steps);
+        let (mut warm_pruned, mut cold_pruned) = (Vec::new(), Vec::new());
+        for batch in &stream {
+            let out = std::hint::black_box(sch.schedule(batch));
+            all.push(out.solve_time_s);
+            match out.stats.label() {
+                "hit" => hit.push(out.solve_time_s),
+                "warm" => {
+                    warm.push(out.solve_time_s);
+                    warm_pruned.push(out.stats.pruned_frac());
+                }
+                _ => {
+                    cold.push(out.solve_time_s);
+                    cold_pruned.push(out.stats.pruned_frac());
+                }
+            }
+            let ref_out = std::hint::black_box(cold_twin.schedule(batch));
+            twin.push(ref_out.solve_time_s);
+        }
+        report.record_samples(&format!("schedule_steady_stream_npus{npus}"), &all);
+        report.record_samples(
+            &format!("schedule_steady_stream_npus{npus}_hit"),
+            &hit,
+        );
+        report.record_samples(
+            &format!("schedule_steady_stream_npus{npus}_warm"),
+            &warm,
+        );
+        report.record_samples(
+            &format!("schedule_steady_stream_npus{npus}_coldref"),
+            &twin,
+        );
+        let mean = |v: &[f64]| {
+            if v.is_empty() {
+                0.0
+            } else {
+                v.iter().sum::<f64>() / v.len() as f64
+            }
+        };
+        println!(
+            "  steady-stream provenance: {} hit / {} warm / {} cold; \
+             mean pruned frac warm {:.3} vs cold {:.3}",
+            hit.len(),
+            warm.len(),
+            cold.len(),
+            mean(&warm_pruned),
+            mean(&cold_pruned),
+        );
     }
 
     // Pure DP at K'=64 groups / N=16 ranks (the O(K'N²) → O(K'N log N)

@@ -140,6 +140,14 @@ impl SchedulePolicy for Scheduler {
         // occupied or out of range) are skipped by the placer, while
         // still-free blocks keep replaying into pooled groups.
         self.mesh = mesh.clone();
+        // The exact-hit schedule cache does NOT survive: the pipeline
+        // delivers this call as an ordered `SyncMesh` control message,
+        // so invalidating here guarantees no solve after a mesh event
+        // can be served a placement drafted for the old occupancy. The
+        // warm-start seed is kept — it is re-validated against the
+        // fresh fabric snapshot on every use
+        // ([`crate::scheduler::schedule_cache`]).
+        self.invalidate_schedule_cache();
     }
 
     fn clone_policy(&self) -> Box<dyn SchedulePolicy> {

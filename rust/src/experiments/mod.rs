@@ -38,11 +38,19 @@ pub fn reproduce(args: &Args) -> Result<()> {
             "fig6" => end_to_end::run(args, crate::config::TrainStage::Full),
             "tab1" => overhead::run_gbs(args),
             "tab2" => overhead::run_npus(args),
+            // Tables 1-2 plus the ISSUE-9 cold-vs-steady-state solver
+            // comparison: what the solver costs on a correlated batch
+            // stream with the cross-step reuse layers on vs forced off.
+            "overhead" => {
+                overhead::run_gbs(args)?;
+                overhead::run_npus(args)?;
+                overhead::run_reuse_comparison(args)
+            }
             "tab3" => estimator::run(args),
             "tab4" => case_study::run(args),
             "resilience" => resilience::run(args),
             other => bail!(
-                "unknown experiment {other:?}: expected fig1|fig2|fig4|fig5|fig6|tab1|tab2|tab3|tab4|resilience|all"
+                "unknown experiment {other:?}: expected fig1|fig2|fig4|fig5|fig6|tab1|tab2|tab3|tab4|overhead|resilience|all"
             ),
         }
     };

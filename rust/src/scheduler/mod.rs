@@ -83,12 +83,23 @@
 //!    packing is reused verbatim while every placement's feasibility
 //!    threshold stays under the next work cap) instead of running BFD
 //!    from scratch per target.
+//! 6. **Cross-step solver reuse** ([`schedule_cache`], ISSUE-9) — the
+//!    solver is also *temporally* incremental: an exact-hit schedule
+//!    cache serves recurring batch shapes without touching the search
+//!    pool (bit-identical to re-solving), cache misses seed the
+//!    search's incumbent with the re-costed previous plan so mechanism
+//!    4's pruning fires from candidate 0 (a post-search guard keeps the
+//!    selection bit-identical to the cold search), and an opt-in
+//!    ε-bounded fast path can skip the search entirely when the
+//!    previous plan provably lands within `(1+ε)` of a batch-global
+//!    lower bound.
 
 pub mod dp;
 pub mod fabric;
 pub mod packing;
 pub mod pipeline;
 pub mod plan;
+pub mod schedule_cache;
 pub mod scratch;
 pub mod search_pool;
 
@@ -109,8 +120,11 @@ pub use plan::{
     format_degree_multiset, place_plan, PlacedGroup, PlacedPlan, Plan,
     PlannedGroup,
 };
+pub use schedule_cache::SolveStats;
 pub use scratch::{solver_threads, SolverScratch};
 pub use search_pool::SearchPool;
+
+use schedule_cache::ReuseState;
 
 /// Degree admissibility policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -164,6 +178,11 @@ pub struct Schedule {
     /// the uniform reference oracle it is the seed's heuristic estimate,
     /// exactly comparable against the retained reference solver.
     pub search_est_time_s: f64,
+    /// Cross-step reuse provenance ([`schedule_cache`]): exact cache
+    /// hit, warm-started search, ε fast path, or cold — plus candidate
+    /// and pruning counters. Telemetry only; deliberately excluded from
+    /// [`crate::session::StepReport::digest`].
+    pub stats: SolveStats,
 }
 
 impl Schedule {
@@ -287,6 +306,19 @@ pub struct Scheduler {
     /// pipeline attaches its own per-scheduling-thread pool via
     /// [`Scheduler::set_search_pool`].
     search_pool: Option<Arc<SearchPool>>,
+    /// Cross-step reuse state ([`schedule_cache`]): the exact-hit
+    /// schedule cache plus the previous winning plan (the warm-start
+    /// seed). Shared across clones, like `hint`, so a policy wrapper
+    /// keeps reuse continuity; locked only for probes/inserts, never
+    /// across a search.
+    reuse: Arc<Mutex<ReuseState>>,
+    /// Master switch for cross-step reuse
+    /// ([`Scheduler::with_solver_reuse`]); on by default.
+    reuse_enabled: bool,
+    /// ε of the opt-in bounded-suboptimality fast path
+    /// ([`Scheduler::with_reuse_epsilon`]); `None` (default) keeps
+    /// every solve exact.
+    epsilon: Option<f64>,
 }
 
 impl Clone for Scheduler {
@@ -298,6 +330,9 @@ impl Clone for Scheduler {
             fabric: self.fabric,
             hint: Arc::clone(&self.hint),
             search_pool: self.search_pool.clone(),
+            reuse: Arc::clone(&self.reuse),
+            reuse_enabled: self.reuse_enabled,
+            epsilon: self.epsilon,
         }
     }
 }
@@ -313,6 +348,9 @@ impl Scheduler {
             fabric: FabricKind::default(),
             hint: Arc::new(Mutex::new(PlacementHint::default())),
             search_pool: None,
+            reuse: Arc::new(Mutex::new(ReuseState::default())),
+            reuse_enabled: true,
+            epsilon: None,
         }
     }
 
@@ -413,8 +451,13 @@ impl Scheduler {
     pub fn schedule(&self, seqs: &[Sequence]) -> Schedule {
         let t0 = Instant::now();
         let fabric = self.snapshot_fabric();
-        let draft = self.plan_search(seqs, &fabric);
+        // Cross-step reuse front (ISSUE-9, [`schedule_cache`]): exact-
+        // hit cache probe → opt-in ε fast path → warm-start-seeded
+        // (guarded, exact) search. Placement always runs fresh below —
+        // only the pre-placement search is ever skipped or seeded.
+        let (draft, stats) = self.plan_with_reuse(seqs, &fabric);
         let mut out = self.realize(draft, true);
+        out.stats = stats;
         out.solve_time_s = t0.elapsed().as_secs_f64();
         out
     }
@@ -452,6 +495,7 @@ impl Scheduler {
             search_est_time_s: draft.est_time_s,
             waves,
             solve_time_s: 0.0,
+            stats: SolveStats::default(),
         }
     }
 
@@ -538,61 +582,104 @@ impl Scheduler {
     }
 
     /// The parallel outer search over all candidates (see module docs).
-    fn plan_search(&self, seqs: &[Sequence], fabric: &FabricModel) -> Draft {
+    ///
+    /// `seed` is the warm-start incumbent ([`schedule_cache`]): the
+    /// re-costed estimate of the previous step's plan — a *feasible*
+    /// solution for this batch, hence an admissible upper bound —
+    /// pre-loaded into the atomic incumbent so the sound strict-`>`
+    /// pruning fires from candidate 0 instead of ramping up. The result
+    /// stays bit-identical to the unseeded search via the acceptance
+    /// guard below: when the seeded best lands at or under the seed,
+    /// the incumbent never dipped below the cold optimum, so the cold
+    /// winner was never pruned and the `(est, index)` selection is
+    /// unchanged; otherwise (the previous plan under-cut every
+    /// candidate — the only regime where seeding could prune the cold
+    /// winner) the search re-runs once, unseeded.
+    fn plan_search(
+        &self,
+        seqs: &[Sequence],
+        fabric: &FabricModel,
+        seed: Option<f64>,
+    ) -> (Draft, SolveStats) {
         if seqs.is_empty() {
-            return Draft::default();
+            return (Draft::default(), SolveStats::default());
         }
         assert!(
             fabric.capacity() > 0,
             "no free replicas to schedule {} sequences onto",
             seqs.len()
         );
-        // Candidate construction packs every target once (for fingerprint
-        // dedupe) on the calling thread; its scratch returns to the pool
-        // before the workers draw theirs.
-        let candidates = {
-            let mut scratch = SolverScratch::acquire();
-            let out = self.candidates(seqs, fabric, &mut scratch.pack);
-            scratch.release();
-            out
-        };
         let model_fp = self.cost.coeffs.fingerprint();
-        let workers = solver_threads().min(candidates.len()).max(1);
-        let mut results: Vec<(usize, Draft)> = if workers <= 1 {
-            // Sequential path: claim indices off a local counter with a
-            // local incumbent — the reference discipline the pool
-            // reproduces.
-            let next = AtomicUsize::new(0);
-            // Incumbent best estimate as f64 bits: non-negative IEEE-754
-            // floats order identically to their bit patterns, so a
-            // lock-free `fetch_min` maintains the minimum.
-            let incumbent = AtomicU64::new(f64::INFINITY.to_bits());
-            self.run_candidates(seqs, &candidates, fabric, model_fp, &next, &incumbent)
-        } else {
-            // Persistent pool: the attached (pipeline-owned) pool if one
-            // was set, else the lazily-created process-global one — no
-            // per-solve thread spawn on either path.
-            let helpers = workers - 1;
-            match &self.search_pool {
-                Some(pool) => {
-                    pool.search(self, seqs, fabric, model_fp, candidates, helpers)
+        let mut seed = seed;
+        loop {
+            // Candidate construction packs every target once (for
+            // fingerprint dedupe) on the calling thread; its scratch
+            // returns to the pool before the workers draw theirs.
+            // Rebuilt per attempt: claimed `Candidate::Target` packings
+            // are consumed (`take()`n) by the search.
+            let candidates = {
+                let mut scratch = SolverScratch::acquire();
+                let out = self.candidates(seqs, fabric, &mut scratch.pack);
+                scratch.release();
+                out
+            };
+            let n_candidates = candidates.len();
+            let seed_bits = seed.unwrap_or(f64::INFINITY).to_bits();
+            let workers = solver_threads().min(candidates.len()).max(1);
+            let mut results: Vec<(usize, Draft)> = if workers <= 1 {
+                // Sequential path: claim indices off a local counter with
+                // a local incumbent — the reference discipline the pool
+                // reproduces.
+                let next = AtomicUsize::new(0);
+                // Incumbent best estimate as f64 bits: non-negative
+                // IEEE-754 floats order identically to their bit
+                // patterns, so a lock-free `fetch_min` maintains the
+                // minimum.
+                let incumbent = AtomicU64::new(seed_bits);
+                self.run_candidates(seqs, &candidates, fabric, model_fp, &next, &incumbent)
+            } else {
+                // Persistent pool: the attached (pipeline-owned) pool if
+                // one was set, else the lazily-created process-global one
+                // — no per-solve thread spawn on either path.
+                let helpers = workers - 1;
+                match &self.search_pool {
+                    Some(pool) => pool.search(
+                        self, seqs, fabric, model_fp, candidates, helpers, seed_bits,
+                    ),
+                    None => SearchPool::global().search(
+                        self, seqs, fabric, model_fp, candidates, helpers, seed_bits,
+                    ),
                 }
-                None => SearchPool::global()
-                    .search(self, seqs, fabric, model_fp, candidates, helpers),
+            };
+            // Deterministic selection regardless of worker timing: best
+            // estimate, ties to the lowest candidate index (the seed's
+            // sequential first-wins order). A pruned candidate's lower
+            // bound strictly exceeded a then-current incumbent ≥ the
+            // final best, so pruning never removes a potential winner.
+            results.sort_by(|a, b| {
+                a.1.est_time_s
+                    .partial_cmp(&b.1.est_time_s)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.0.cmp(&b.0))
+            });
+            let solved = results.len();
+            let best = results.into_iter().next().map(|(_, s)| s);
+            let stats = SolveStats {
+                warm_started: seed.is_some(),
+                candidates: n_candidates,
+                pruned: n_candidates.saturating_sub(solved),
+                ..SolveStats::default()
+            };
+            match (seed, best) {
+                // Warm-start acceptance guard (see doc comment): seeded
+                // best at or under the admissible upper bound ⇒ exact.
+                (Some(u), Some(b)) if b.est_time_s <= u => return (b, stats),
+                // The seed under-cut every candidate; re-run unseeded
+                // for exactness.
+                (Some(_), _) => seed = None,
+                (None, b) => return (b.unwrap_or_default(), stats),
             }
-        };
-        // Deterministic selection regardless of worker timing: best
-        // estimate, ties to the lowest candidate index (the seed's
-        // sequential first-wins order). A pruned candidate's lower bound
-        // strictly exceeded a then-current incumbent ≥ the final best, so
-        // pruning never removes a potential winner.
-        results.sort_by(|a, b| {
-            a.1.est_time_s
-                .partial_cmp(&b.1.est_time_s)
-                .unwrap_or(std::cmp::Ordering::Equal)
-                .then(a.0.cmp(&b.0))
-        });
-        results.into_iter().next().map(|(_, s)| s).unwrap_or_default()
+        }
     }
 
     /// Worker loop: pull candidate indices off the shared queue until

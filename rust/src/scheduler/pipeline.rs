@@ -211,6 +211,14 @@ impl SchedulePipeline {
                                 }
                                 mpu.mesh = m.clone();
                             }
+                            // Ordered invalidation: `sync_mesh` both
+                            // re-snapshots the policy's mesh AND clears
+                            // the scheduler's exact-hit schedule cache
+                            // ([`crate::scheduler::schedule_cache`]) in
+                            // this same control message, so every batch
+                            // submitted after a mesh event is re-solved
+                            // — a stale cached placement onto a now-
+                            // occupied rank would be a correctness bug.
                             policy.sync_mesh(&m);
                             continue;
                         }

@@ -1,0 +1,896 @@
+//! Cross-step solver reuse (ISSUE-9): the schedule cache, warm-start
+//! incumbent seeding, and the opt-in ε-bounded fast path.
+//!
+//! Consecutive micro-batches in a training stream are strongly
+//! correlated — the data loader draws from one distribution, the mesh
+//! rarely changes between steps, and the cost model never does. The
+//! solver nevertheless used to treat every `schedule()` call as its
+//! first. This module makes [`Scheduler::schedule`] temporally
+//! incremental in three layers, ordered by strength of guarantee:
+//!
+//! 1. **Exact-hit schedule cache** (exact): a bounded LRU keyed on the
+//!    canonical batch content plus every input the solve depends on
+//!    (fabric fingerprint + capacity, mesh occupancy, cost-model
+//!    fingerprint, degree policy, fabric kind). A hit returns the
+//!    cached pre-placement [`Draft`] — remapped to the current batch's
+//!    indices and re-placed against the *current* mesh and hint — so
+//!    the result is bit-identical to re-solving while skipping the
+//!    entire outer search. The cache stores drafts, not placed
+//!    schedules, precisely so placement (which depends on the mutable
+//!    cross-step [`crate::parallel::mesh::PlacementHint`]) always runs
+//!    fresh.
+//! 2. **Warm-start incumbent seeding** (exact): on a miss, the previous
+//!    step's winning plan is re-costed under the current fabric
+//!    snapshot (memoized [`super::scratch::CostCache`] evaluations, no
+//!    placement) and, if still feasible, its cost `U` seeds the
+//!    search's atomic incumbent before any candidate runs. A feasible
+//!    solution's cost is an admissible upper bound, so the sound
+//!    strict-`>` pruning fires from candidate 0. A post-search guard
+//!    keeps this exact: the seeded result is accepted only when its
+//!    best estimate is ≤ `U` — in that regime the incumbent was always
+//!    ≥ the cold optimum, so the cold winner was never pruned and the
+//!    deterministic `(est, index)` selection is unchanged; otherwise
+//!    (the previous plan beat every candidate, so `U` under-cut the
+//!    cold optimum) the search re-runs unseeded.
+//! 3. **ε-bounded fast path** (bounded suboptimality, opt-in via
+//!    [`Scheduler::with_reuse_epsilon`], off by default): when the
+//!    re-costed previous plan lands within `(1+ε)` of a sound
+//!    batch-global lower bound, the search is skipped entirely and the
+//!    mapped plan is reused. Every use is counted in telemetry
+//!    ([`SolveStats::fast_path`]); fast-path results are never
+//!    inserted into the exact cache.
+//!
+//! # Canonicalization
+//!
+//! The solver consumes sequences only through their `(vision_tokens,
+//! text_tokens)` content — `Sequence::id` and `duration_s` never enter
+//! packing, the DP, or the cost model — and every content-order-
+//! sensitive step (BFD packing, LPT grid assignment) sorts by length
+//! descending with ties broken by ascending batch index. The canonical
+//! form of a batch is therefore its content list *in that sort order*:
+//! two batches with equal canonical lists are solved through identical
+//! arithmetic, differing only in the original-index labels, so a cached
+//! draft transfers by mapping canonical rank → current index. Batches
+//! whose equal multisets interleave distinct `(vision, text)` splits at
+//! a shared total length sort differently and deliberately get distinct
+//! keys — the index tie-break makes those solves order-dependent, and
+//! the cache must never serve a result re-solving wouldn't reproduce.
+
+use crate::cost::WorkloadAgg;
+use crate::data::sequence::Sequence;
+use crate::parallel::mesh::DeviceMesh;
+
+use super::scratch::mix;
+use super::{
+    DegreePolicy, Draft, FabricKind, FabricModel, Plan, PlannedGroup,
+    Scheduler, SolverScratch,
+};
+
+/// How many distinct solves the per-scheduler cache retains. Training
+/// streams revisit a handful of recurring micro-batch shapes (and the
+/// trainer's fixed-geometry stream exactly one), so a small bound keeps
+/// the exact-compare probe cheap while covering the steady state.
+const CACHE_CAPACITY: usize = 32;
+
+/// Provenance and search telemetry of one `schedule()` call — carried
+/// on every [`super::Schedule`] and aggregated into
+/// [`crate::session::StepReport`] / the trainer CSV. Telemetry only:
+/// never folded into semantic digests.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SolveStats {
+    /// Served from the exact-hit schedule cache (bit-identical to
+    /// re-solving; the outer search never ran).
+    pub cache_hit: bool,
+    /// The outer search ran with its incumbent seeded by the re-costed
+    /// previous plan AND the seeded result passed the exactness guard.
+    pub warm_started: bool,
+    /// The ε-bounded fast path reused the previous plan without
+    /// searching (only possible when an ε is configured).
+    pub fast_path: bool,
+    /// Outer-search candidates considered (0 on the hit/fast paths).
+    pub candidates: usize,
+    /// Candidates skipped by incumbent pruning or inadmissibility.
+    pub pruned: usize,
+}
+
+impl SolveStats {
+    /// Fraction of candidates the incumbent pruning (plus
+    /// inadmissibility) eliminated before DP work; 0 when no search ran.
+    pub fn pruned_frac(&self) -> f64 {
+        if self.candidates == 0 {
+            0.0
+        } else {
+            self.pruned as f64 / self.candidates as f64
+        }
+    }
+
+    /// Compact provenance label for tables and the trainer CSV.
+    pub fn label(&self) -> &'static str {
+        if self.cache_hit {
+            "hit"
+        } else if self.fast_path {
+            "fast"
+        } else if self.warm_started {
+            "warm"
+        } else {
+            "cold"
+        }
+    }
+}
+
+/// The canonical batch order: length descending, ties by ascending
+/// index — exactly the comparator BFD packing and the LPT grid anchors
+/// sort by, so position `k` of this permutation is "the k-th sequence
+/// as the solver consumes them".
+pub(super) fn canonical_order(seqs: &[Sequence]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..seqs.len()).collect();
+    order.sort_by(|&a, &b| seqs[b].len().cmp(&seqs[a].len()).then(a.cmp(&b)));
+    order
+}
+
+fn canonical_lens(seqs: &[Sequence], order: &[usize]) -> Vec<(u64, u64)> {
+    order
+        .iter()
+        .map(|&i| (seqs[i].vision_tokens, seqs[i].text_tokens))
+        .collect()
+}
+
+/// Occupancy identity of the mesh a solve places onto. The fabric
+/// fingerprint is deliberately *semantic* (it ignores occupancy that
+/// flips no bandwidth answer — see [`FabricModel::fingerprint`]), but a
+/// cached draft's placement context is the concrete free-rank set, so
+/// the cache key must include it: [`super::Scheduler::sync_mesh`]
+/// clears the cache on every ordered mesh re-snapshot, and this
+/// fingerprint is defense-in-depth for bare schedulers whose mesh is
+/// mutated directly between calls.
+fn mesh_occupancy_fp(mesh: &DeviceMesh) -> u64 {
+    let mut h = mix(0x0CC5_0CC5 ^ (mesh.replicas as u64).rotate_left(32));
+    for r in 0..mesh.replicas {
+        if !mesh.is_rank_free(r) {
+            h = mix(h ^ (r as u64 + 1));
+        }
+    }
+    h
+}
+
+/// Everything a solve's draft depends on. Two calls with equal keys run
+/// identical search arithmetic (see the module docs), so serving one's
+/// draft for the other is exact. Compared field-by-field on probe — the
+/// 64-bit pre-filter hash only narrows the scan; a collision is never
+/// served.
+#[derive(Debug, Clone, PartialEq)]
+pub(super) struct CacheKey {
+    /// Canonical `(vision, text)` content list (packing order).
+    lens: Vec<(u64, u64)>,
+    /// Semantic fabric identity (bandwidth answers).
+    fabric_fp: u64,
+    /// Rank budget N of the snapshot (not part of `fabric_fp`).
+    capacity: usize,
+    /// Concrete mesh occupancy (placement context).
+    mesh_fp: u64,
+    /// Cost-model coefficient identity.
+    model_fp: u64,
+    /// Degree admissibility policy.
+    policy: DegreePolicy,
+    /// Which bandwidth oracle produced the snapshot.
+    fabric_kind: FabricKind,
+}
+
+impl CacheKey {
+    fn new(
+        sch: &Scheduler,
+        seqs: &[Sequence],
+        order: &[usize],
+        fabric: &FabricModel,
+    ) -> Self {
+        CacheKey {
+            lens: canonical_lens(seqs, order),
+            fabric_fp: fabric.fingerprint(),
+            capacity: fabric.capacity(),
+            mesh_fp: mesh_occupancy_fp(&sch.mesh),
+            model_fp: sch.cost.coeffs.fingerprint(),
+            policy: sch.policy,
+            fabric_kind: sch.fabric,
+        }
+    }
+
+    fn hash(&self) -> u64 {
+        let mut h = mix(
+            self.fabric_fp
+                ^ self.model_fp.rotate_left(17)
+                ^ self.mesh_fp.rotate_left(41)
+                ^ (self.capacity as u64).rotate_left(7),
+        );
+        h = mix(
+            h ^ match self.policy {
+                DegreePolicy::AnyInteger => 0xA11,
+                DegreePolicy::PowerOfTwo => 0xF02,
+            } ^ match self.fabric_kind {
+                FabricKind::MeshBacked => 0x4D00,
+                FabricKind::Uniform => 0x5500,
+            },
+        );
+        for &(v, t) in &self.lens {
+            h = mix(h ^ v ^ t.rotate_left(21));
+        }
+        h
+    }
+}
+
+/// Bounded LRU over `(key → canonical draft)`. Entries are stored
+/// most-recently-used last; probes scan the (≤ [`CACHE_CAPACITY`])
+/// entries with a hash pre-filter and an exact key compare.
+#[derive(Debug, Default)]
+pub(super) struct ScheduleCache {
+    entries: Vec<(u64, CacheKey, Draft)>,
+    hits: u64,
+    misses: u64,
+}
+
+impl ScheduleCache {
+    fn get(&mut self, hash: u64, key: &CacheKey) -> Option<Draft> {
+        match self
+            .entries
+            .iter()
+            .position(|(h, k, _)| *h == hash && k == key)
+        {
+            Some(pos) => {
+                self.hits += 1;
+                // Move to MRU position; the clone is cheap relative to
+                // the search it replaces.
+                let entry = self.entries.remove(pos);
+                let draft = entry.2.clone();
+                self.entries.push(entry);
+                Some(draft)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    fn insert(&mut self, hash: u64, key: CacheKey, draft: Draft) {
+        if let Some(pos) = self
+            .entries
+            .iter()
+            .position(|(h, k, _)| *h == hash && *k == key)
+        {
+            self.entries.remove(pos);
+        }
+        self.entries.push((hash, key, draft));
+        if self.entries.len() > CACHE_CAPACITY {
+            self.entries.remove(0); // evict LRU
+        }
+    }
+
+    fn clear(&mut self) {
+        self.entries.clear();
+    }
+
+    #[cfg(test)]
+    fn len(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+/// The previous step's winning plan, kept in canonical-rank index space
+/// so it can be re-mapped onto any same-size batch.
+#[derive(Debug, Clone)]
+struct PrevSolve {
+    /// Canonical content list of the batch it was solved for (retained
+    /// for debugging; the mapping itself only needs the count).
+    #[allow(dead_code)]
+    lens: Vec<(u64, u64)>,
+    draft: Draft,
+}
+
+/// Per-scheduler (shared across clones, like the placement hint)
+/// cross-step reuse state: the exact-hit cache plus the warm-start
+/// seed. The mutex is held only for probes and inserts — never across
+/// a search.
+#[derive(Debug, Default)]
+pub(super) struct ReuseState {
+    cache: ScheduleCache,
+    prev: Option<PrevSolve>,
+}
+
+/// Map a canonical-rank draft onto concrete batch indices through the
+/// canonical order (`rank → order[rank]`).
+fn remap_draft(mut draft: Draft, order: &[usize]) -> Draft {
+    for plan in &mut draft.waves {
+        for g in &mut plan.groups {
+            for idx in &mut g.seq_idxs {
+                *idx = order[*idx];
+            }
+        }
+    }
+    draft
+}
+
+/// Inverse of [`remap_draft`]: rewrite concrete indices as canonical
+/// ranks (`index → rank_of[index]`) for storage.
+fn canonicalize_draft(mut draft: Draft, order: &[usize]) -> Draft {
+    let mut rank_of = vec![0usize; order.len()];
+    for (rank, &i) in order.iter().enumerate() {
+        rank_of[i] = rank;
+    }
+    for plan in &mut draft.waves {
+        for g in &mut plan.groups {
+            for idx in &mut g.seq_idxs {
+                *idx = rank_of[*idx];
+            }
+        }
+    }
+    draft
+}
+
+impl Scheduler {
+    /// Enable or disable cross-step solver reuse (the exact-hit cache,
+    /// warm-start seeding, and the ε fast path) wholesale. On by
+    /// default; disabling forces every `schedule()` call down the cold
+    /// search — the reference discipline for the bit-identity property
+    /// tests and for benchmarks that re-solve one batch repeatedly and
+    /// must keep measuring the search, not the cache.
+    pub fn with_solver_reuse(mut self, enabled: bool) -> Self {
+        self.reuse_enabled = enabled;
+        self
+    }
+
+    /// Opt into the ε-bounded fast path: when the re-costed previous
+    /// plan lands within `(1 + epsilon)` of a sound batch-global lower
+    /// bound for the *current* batch, the outer search is skipped and
+    /// the plan reused — the returned schedule's search objective is
+    /// then guaranteed within `(1 + epsilon)` of the optimum. Off by
+    /// default (`None`); every use is counted in
+    /// [`SolveStats::fast_path`]. Requires `epsilon ≥ 0`.
+    pub fn with_reuse_epsilon(mut self, epsilon: f64) -> Self {
+        assert!(
+            epsilon >= 0.0 && epsilon.is_finite(),
+            "reuse epsilon must be finite and non-negative"
+        );
+        self.epsilon = Some(epsilon);
+        self
+    }
+
+    /// Drop every cached solve (the exact-hit cache). Called from
+    /// [`crate::baselines::SchedulePolicy::sync_mesh`] so the pipeline's
+    /// ordered `SyncMesh` control message invalidates the scheduling
+    /// thread's cache in the same breath that re-snapshots the mesh —
+    /// a stale cached placement onto a now-occupied rank would be a
+    /// correctness bug. The warm-start seed survives: it is re-costed
+    /// and feasibility-checked against the fresh fabric snapshot on
+    /// every use, which is exactly what lets elastic-recovery re-solves
+    /// start from the pre-fault plan.
+    pub fn invalidate_schedule_cache(&self) {
+        self.reuse
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .cache
+            .clear();
+    }
+
+    /// Cumulative (hits, misses) of the exact-hit schedule cache.
+    pub fn schedule_cache_stats(&self) -> (u64, u64) {
+        let st = self.reuse.lock().unwrap_or_else(|e| e.into_inner());
+        (st.cache.hits, st.cache.misses)
+    }
+
+    /// The reuse-aware front of the solve: exact-hit cache probe, then
+    /// the ε fast path, then the warm-start-seeded (guarded, exact)
+    /// search. Returns the chosen pre-placement draft plus provenance.
+    pub(super) fn plan_with_reuse(
+        &self,
+        seqs: &[Sequence],
+        fabric: &FabricModel,
+    ) -> (Draft, SolveStats) {
+        if !self.reuse_enabled || seqs.is_empty() {
+            return self.plan_search(seqs, fabric, None);
+        }
+        let order = canonical_order(seqs);
+        let key = CacheKey::new(self, seqs, &order, fabric);
+        let hash = key.hash();
+        // Probe and snapshot under one short critical section; the lock
+        // is NOT held across the search (search workers clone `self`,
+        // and a bare scheduler's submitting thread re-enters this type).
+        let prev = {
+            let mut st = self.reuse.lock().unwrap_or_else(|e| e.into_inner());
+            if let Some(draft) = st.cache.get(hash, &key) {
+                let stats = SolveStats {
+                    cache_hit: true,
+                    ..SolveStats::default()
+                };
+                return (remap_draft(draft, &order), stats);
+            }
+            st.prev.clone()
+        };
+        let recosted = prev.and_then(|p| self.recost_prev(&p, seqs, &order, fabric));
+        if let (Some(eps), Some((u, mapped))) = (self.epsilon, &recosted) {
+            let lb = self.batch_lower_bound(seqs, fabric);
+            if *u <= lb * (1.0 + eps) {
+                // Bounded-suboptimality reuse: optimum ≥ lb ≥ U/(1+ε).
+                // Never inserted into the exact cache.
+                let stats = SolveStats {
+                    fast_path: true,
+                    ..SolveStats::default()
+                };
+                return (mapped.clone(), stats);
+            }
+        }
+        let seed = recosted.map(|(u, _)| u);
+        let (draft, stats) = self.plan_search(seqs, fabric, seed);
+        {
+            let mut st = self.reuse.lock().unwrap_or_else(|e| e.into_inner());
+            let canonical = canonicalize_draft(draft.clone(), &order);
+            st.prev = Some(PrevSolve {
+                lens: key.lens.clone(),
+                draft: canonical.clone(),
+            });
+            st.cache.insert(hash, key, canonical);
+        }
+        (draft, stats)
+    }
+
+    /// Re-cost the previous winning plan under the current batch and
+    /// fabric snapshot: map canonical rank `k` to the current batch's
+    /// k-th canonical sequence, rebuild each group's aggregate, and
+    /// verify the plan is still feasible (degrees admissible and within
+    /// the rank budget, per-wave rank sums within capacity, group
+    /// memory fits). Returns the achievable cost `U` — an admissible
+    /// upper bound on the current optimum — and the mapped draft
+    /// (costed at the snapshot's `bw_for_degree`, the search-objective
+    /// lineage). `None` when the batch size changed or any feasibility
+    /// check fails.
+    fn recost_prev(
+        &self,
+        prev: &PrevSolve,
+        seqs: &[Sequence],
+        order: &[usize],
+        fabric: &FabricModel,
+    ) -> Option<(f64, Draft)> {
+        if prev.draft.waves.is_empty()
+            || prev.draft.waves.iter().map(|w| w.groups.iter().map(|g| g.seq_idxs.len()).sum::<usize>()).sum::<usize>()
+                != seqs.len()
+        {
+            return None;
+        }
+        let mut scratch = SolverScratch::acquire();
+        let out = self.recost_prev_in(prev, seqs, order, fabric, &mut scratch);
+        scratch.release();
+        out
+    }
+
+    fn recost_prev_in(
+        &self,
+        prev: &PrevSolve,
+        seqs: &[Sequence],
+        order: &[usize],
+        fabric: &FabricModel,
+        scratch: &mut SolverScratch,
+    ) -> Option<(f64, Draft)> {
+        let n = fabric.capacity();
+        let model_fp = self.cost.coeffs.fingerprint();
+        let fabric_fp = fabric.fingerprint();
+        let mut draft = Draft::default();
+        for plan in &prev.draft.waves {
+            let mut mapped = Plan::default();
+            let mut wave_ranks = 0usize;
+            for g in &plan.groups {
+                let d = g.degree;
+                if d == 0 || d > n || !self.policy.admits(d) {
+                    return None;
+                }
+                wave_ranks += d;
+                let mut agg = WorkloadAgg::default();
+                let mut tokens = 0u64;
+                let mut idxs = Vec::with_capacity(g.seq_idxs.len());
+                for &rank in &g.seq_idxs {
+                    let i = *order.get(rank)?;
+                    let s = &seqs[i];
+                    agg.add(s);
+                    tokens += s.len();
+                    idxs.push(i);
+                }
+                if !self.cost.memory.fits(tokens, d) {
+                    return None;
+                }
+                let t = scratch.cache.t_total(
+                    model_fp,
+                    fabric_fp,
+                    &self.cost,
+                    &agg,
+                    d,
+                    fabric.bw_for_degree(d),
+                );
+                mapped.est_makespan_s = mapped.est_makespan_s.max(t);
+                mapped.groups.push(PlannedGroup {
+                    degree: d,
+                    seq_idxs: idxs,
+                    agg,
+                    est_time_s: t,
+                });
+            }
+            if wave_ranks > n {
+                return None;
+            }
+            draft.est_time_s += mapped.est_makespan_s;
+            draft.waves.push(mapped);
+        }
+        Some((draft.est_time_s, draft))
+    }
+
+    /// A sound lower bound on ANY schedule's search objective for this
+    /// batch, computable before packing (the ε fast path's yardstick):
+    /// the larger of
+    ///
+    /// * the aggregate-work bound — `t_compute` is linear in the
+    ///   aggregate, so summing the per-wave work bounds of any wave
+    ///   partition gives `t_compute(Σ_batch agg, N)` regardless of how
+    ///   the batch splits into waves (1e-9 shave as in
+    ///   [`Scheduler::lower_bound`]);
+    /// * the single-sequence communication floor — a sequence whose
+    ///   memory-forced minimum degree (policy-rounded) is ≥ 2 sits in a
+    ///   group with at least its own aggregate and at least that
+    ///   degree, and `T ≥ T_cm` with `t_comm` monotone in both, so its
+    ///   floor at the fabric's best bandwidth bounds that group's time
+    ///   — and any single group's time bounds the total.
+    fn batch_lower_bound(&self, seqs: &[Sequence], fabric: &FabricModel) -> f64 {
+        let n = fabric.capacity();
+        let mut v_star = 0.0f64;
+        for d in 2..=n {
+            let v = fabric.max_bw_for_degree(d);
+            if v > v_star {
+                v_star = v;
+            }
+        }
+        let mut agg = WorkloadAgg::default();
+        let mut comm_floor = 0.0f64;
+        for s in seqs {
+            agg.add(s);
+            let dm = self
+                .policy
+                .min_admissible(self.cost.memory.min_degree(s.len()))
+                .min(n)
+                .max(1);
+            if dm >= 2 && v_star > 0.0 {
+                let single = WorkloadAgg::of(std::slice::from_ref(s));
+                let f = self.cost.t_comm(&single, dm, v_star) * (1.0 - 1e-9);
+                if f > comm_floor {
+                    comm_floor = f;
+                }
+            }
+        }
+        (self.cost.t_compute(&agg, n) * (1.0 - 1e-9)).max(comm_floor)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::by_name;
+    use crate::config::{ClusterConfig, TrainStage};
+    use crate::cost::{CostCoeffs, CostModel, HardwareSpec, MemoryModel};
+    use crate::data::datasets::{DatasetKind, DatasetSampler, TokenizerSpec};
+    use crate::parallel::mesh::DeviceMesh;
+    use crate::util::quickcheck::forall;
+    use crate::util::rng::Rng;
+
+    fn sampler(kind: DatasetKind, seed: u64) -> DatasetSampler {
+        DatasetSampler::new(kind, seed).with_spec(TokenizerSpec {
+            fps: 2.0,
+            tokens_per_frame: 256.0,
+            text_min: 32,
+            text_max: 512,
+        })
+    }
+
+    fn scheduler(replicas: usize) -> Scheduler {
+        let mut cluster = ClusterConfig::default().with_npus(replicas * 4);
+        cluster.tp = 2;
+        cluster.pp = 2;
+        let preset = by_name("InternVL3-8B").unwrap();
+        let hw = HardwareSpec {
+            peak_flops: 376e12 * 4.0,
+            ..HardwareSpec::default()
+        };
+        let cost = CostModel {
+            coeffs: CostCoeffs::analytic(&preset, TrainStage::Full, &hw),
+            memory: MemoryModel {
+                e_bytes: 8192.0 * preset.act_bytes_per_token() + 2e9,
+                m_states: 2e9,
+                m_token: preset.act_bytes_per_token(),
+            },
+        };
+        Scheduler::new(cost, DeviceMesh::new(&cluster))
+    }
+
+    fn assert_bit_identical(a: &super::super::Schedule, b: &super::super::Schedule, ctx: &str) {
+        assert_eq!(a.waves, b.waves, "{ctx}: waves diverged");
+        assert_eq!(
+            a.est_time_s.to_bits(),
+            b.est_time_s.to_bits(),
+            "{ctx}: est drifted"
+        );
+        assert_eq!(
+            a.search_est_time_s.to_bits(),
+            b.search_est_time_s.to_bits(),
+            "{ctx}: search est drifted"
+        );
+    }
+
+    #[test]
+    fn lru_is_bounded_and_promotes_hits() {
+        let sch = scheduler(8);
+        let mesh = &sch.mesh;
+        let fabric = FabricModel::mesh_backed(mesh, None);
+        let mut cache = ScheduleCache::default();
+        let mk_key = |tokens: u64| {
+            let seqs = vec![Sequence::new(0, tokens, 64)];
+            let order = canonical_order(&seqs);
+            CacheKey::new(&sch, &seqs, &order, &fabric)
+        };
+        for t in 0..(CACHE_CAPACITY as u64 + 8) {
+            let key = mk_key(1000 + t);
+            let hash = key.hash();
+            cache.insert(hash, key, Draft::default());
+        }
+        assert_eq!(cache.len(), CACHE_CAPACITY);
+        // The oldest 8 were evicted; a survivor probes positively and is
+        // promoted to MRU (it then survives one more insert).
+        let survivor = mk_key(1000 + 8);
+        assert!(cache.get(survivor.hash(), &survivor).is_some());
+        let evicted = mk_key(1000);
+        assert!(cache.get(evicted.hash(), &evicted).is_none());
+        let fresh = mk_key(9999);
+        cache.insert(fresh.hash(), fresh, Draft::default());
+        assert!(cache.get(survivor.hash(), &survivor).is_some());
+        cache.clear();
+        assert_eq!(cache.len(), 0);
+    }
+
+    #[test]
+    fn repeat_batch_is_a_cache_hit_and_bit_identical() {
+        // Tentpole layer 1 on the nose: the second identical call must
+        // be served from the cache AND be bit-identical to what a
+        // reuse-disabled twin (same call history) re-solves.
+        let sch = scheduler(16);
+        let cold = scheduler(16).with_solver_reuse(false);
+        let mut s = sampler(DatasetKind::OpenVid, 77);
+        let seqs = s.sample_batch(48);
+        let first = sch.schedule(&seqs);
+        assert!(!first.stats.cache_hit, "first solve cannot hit");
+        let _ = cold.schedule(&seqs);
+        let again = sch.schedule(&seqs);
+        let again_cold = cold.schedule(&seqs);
+        assert!(again.stats.cache_hit, "identical re-solve must hit");
+        assert_eq!(again.stats.candidates, 0, "hit must skip the search");
+        assert_bit_identical(&again, &again_cold, "hit vs re-solve");
+        let (hits, misses) = sch.schedule_cache_stats();
+        assert_eq!((hits, misses), (1, 1));
+    }
+
+    #[test]
+    fn property_cache_hit_is_bit_identical_to_resolving() {
+        // Satellite (a): across random batches, fabrics (occupancy),
+        // and input permutations, a reuse-enabled scheduler must return
+        // exactly what a reuse-disabled twin with the same call history
+        // returns — hits, warm starts, and permuted replays included.
+        forall(12, 0x9E05E, |rng| {
+            let npus = *rng.choose(&[8usize, 16, 32]);
+            let mut reuse = scheduler(npus);
+            let mut cold = scheduler(npus).with_solver_reuse(false);
+            if rng.range_usize(0, 3) == 0 {
+                // A fragmented mesh: occupy one rank of every other node.
+                let occ: Vec<usize> = (0..npus).step_by(4).collect();
+                reuse.mesh.occupy(&occ);
+                cold.mesh.occupy(&occ);
+            }
+            let kind = *rng.choose(&DatasetKind::all());
+            let mut s = sampler(kind, rng.next_u64());
+            let base = s.sample_batch(rng.range_usize(2, 48));
+            // A replay schedule mixing: fresh solve, exact replay,
+            // permuted replay — both schedulers see the same stream.
+            let mut perm = base.clone();
+            rng.shuffle(&mut perm);
+            for (round, batch) in
+                [&base, &base, &perm, &base].iter().enumerate()
+            {
+                let a = reuse.schedule(batch);
+                let b = cold.schedule(batch);
+                if a.waves != b.waves
+                    || a.est_time_s.to_bits() != b.est_time_s.to_bits()
+                    || a.search_est_time_s.to_bits()
+                        != b.search_est_time_s.to_bits()
+                {
+                    return Err(format!(
+                        "round {round} diverged (npus={npus}, kind={kind:?}, \
+                         label={})",
+                        a.stats.label()
+                    ));
+                }
+                a.validate(batch, npus).map_err(|e| e.to_string())?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_warm_start_matches_cold_search() {
+        // Satellite (b): jittered same-count streams — the regime where
+        // warm-start seeding (not the exact cache) carries the reuse —
+        // must leave est bits, degrees, and placement unchanged vs the
+        // cold search.
+        let mut warm_seen = false;
+        forall(10, 0x3A97, |rng| {
+            let npus = *rng.choose(&[8usize, 16]);
+            let reuse = scheduler(npus);
+            let cold = scheduler(npus).with_solver_reuse(false);
+            let kind = *rng.choose(&DatasetKind::all());
+            let count = rng.range_usize(4, 40);
+            for step in 0..4 {
+                // Same count each step, fresh contents: cache misses,
+                // warm-start eligible.
+                let mut s = sampler(kind, rng.next_u64());
+                let batch = s.sample_batch(count);
+                let a = reuse.schedule(&batch);
+                let b = cold.schedule(&batch);
+                warm_seen |= a.stats.warm_started;
+                if step > 0 && a.stats.cache_hit {
+                    return Err("fresh contents must not exact-hit".into());
+                }
+                if a.waves != b.waves
+                    || a.est_time_s.to_bits() != b.est_time_s.to_bits()
+                    || a.search_est_time_s.to_bits()
+                        != b.search_est_time_s.to_bits()
+                {
+                    return Err(format!(
+                        "step {step} diverged under {} (npus={npus}, \
+                         kind={kind:?}, count={count})",
+                        a.stats.label()
+                    ));
+                }
+            }
+            Ok(())
+        });
+        // Not every draw warm-starts (re-mapped feasibility can fail),
+        // but a whole run where seeding never engaged tests nothing.
+        assert!(warm_seen, "no case ever warm-started");
+    }
+
+    #[test]
+    fn cache_isolates_fabric_and_model_states() {
+        // Satellite (c), mirroring scratch::cache_isolates_fabric_states:
+        // a key must never cross-serve across occupancy or cost-model
+        // changes, even when the batch is identical.
+        let mut sch = scheduler(16);
+        let mut s = sampler(DatasetKind::OpenVid, 5150);
+        let seqs = s.sample_batch(24);
+        let first = sch.schedule(&seqs);
+        assert!(!first.stats.cache_hit);
+        // Occupancy change (bandwidth answers flip: 3 of 4 slots taken
+        // on every node). The cached entry must not be served.
+        let occ: Vec<usize> = (0..16).filter(|r| r % 4 != 3).collect();
+        sch.mesh.occupy(&occ);
+        let fragged = sch.schedule(&seqs);
+        assert!(
+            !fragged.stats.cache_hit,
+            "occupancy change must miss the cache"
+        );
+        let mut cold = scheduler(16).with_solver_reuse(false);
+        cold.mesh.occupy(&occ);
+        assert_bit_identical(&fragged, &cold.schedule(&seqs), "post-occupy");
+        for wave in &fragged.waves {
+            for g in &wave.groups {
+                for &r in &g.ranks {
+                    assert!(r % 4 == 3, "occupied rank {r} placed from stale state");
+                }
+            }
+        }
+        sch.mesh.release(&occ);
+        // Cost-model change: perturb a coefficient — the fingerprint
+        // moves, so the original entry must not be served either.
+        let before_fp = sch.cost.coeffs.fingerprint();
+        sch.cost.coeffs.alpha1 *= 2.0;
+        assert_ne!(
+            before_fp,
+            sch.cost.coeffs.fingerprint(),
+            "test needs a model change the fingerprint can see"
+        );
+        let remodeled = sch.schedule(&seqs);
+        assert!(
+            !remodeled.stats.cache_hit,
+            "cost-model change must miss the cache"
+        );
+    }
+
+    #[test]
+    fn epsilon_fast_path_is_opt_in_bounded_and_counted() {
+        // Off by default: a default-config stream never takes it.
+        let sch = scheduler(16);
+        let mut s = sampler(DatasetKind::OpenVid, 404);
+        for _ in 0..4 {
+            let batch = s.sample_batch(24);
+            assert!(!sch.schedule(&batch).stats.fast_path);
+        }
+        // With an enormous ε, a same-count follow-up step takes the
+        // fast path as soon as the re-mapped previous plan is feasible
+        // — and must still produce a valid, coverage-complete schedule
+        // whose objective respects the ε bound.
+        let eager = scheduler(16).with_reuse_epsilon(1e9);
+        let mut s = sampler(DatasetKind::OpenVid, 405);
+        let first = eager.schedule(&s.sample_batch(24));
+        assert!(!first.stats.fast_path, "no previous plan to reuse yet");
+        let mut fast: Option<(Vec<Sequence>, super::super::Schedule)> = None;
+        for _ in 0..6 {
+            let batch = s.sample_batch(24);
+            let out = eager.schedule(&batch);
+            if out.stats.fast_path {
+                fast = Some((batch, out));
+                break;
+            }
+        }
+        let (batch, second) =
+            fast.expect("ε=1e9 never accepted a feasible re-mapped plan");
+        assert_eq!(second.stats.candidates, 0, "fast path skips the search");
+        second.validate(&batch, 16).unwrap();
+        let fabric = eager.snapshot_fabric();
+        let lb = eager.batch_lower_bound(&batch, &fabric);
+        assert!(
+            second.search_est_time_s <= lb * (1.0 + 1e9),
+            "fast-path objective {} exceeds (1+ε)·lb {}",
+            second.search_est_time_s,
+            lb * (1.0 + 1e9)
+        );
+        // The fast-path result must NOT have been inserted into the
+        // exact cache: re-solving its batch must miss the cache.
+        let third = eager.schedule(&batch);
+        assert!(
+            !third.stats.cache_hit,
+            "ε-approximate result leaked into the exact cache"
+        );
+    }
+
+    #[test]
+    fn batch_lower_bound_never_exceeds_solved_estimate() {
+        // The fast path's yardstick must be admissible: never above the
+        // search's own optimum, across random batches and occupancy.
+        forall(20, 0xFA57, |rng| {
+            let npus = *rng.choose(&[8usize, 16, 32]);
+            let sch = scheduler(npus).with_solver_reuse(false);
+            let kind = *rng.choose(&DatasetKind::all());
+            let mut s = sampler(kind, rng.next_u64());
+            let batch = s.sample_batch(rng.range_usize(1, 48));
+            let fabric = sch.snapshot_fabric();
+            let lb = sch.batch_lower_bound(&batch, &fabric);
+            let solved = sch.schedule(&batch);
+            if lb > solved.search_est_time_s {
+                return Err(format!(
+                    "unsound batch bound {lb} > solved {} (npus={npus}, \
+                     kind={kind:?})",
+                    solved.search_est_time_s
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sync_mesh_clears_the_cache_but_keeps_the_warm_seed() {
+        use crate::baselines::SchedulePolicy;
+        let mut sch = scheduler(16);
+        let mut s = sampler(DatasetKind::OpenVid, 808);
+        let seqs = s.sample_batch(24);
+        let _ = sch.schedule(&seqs);
+        let mesh = sch.mesh.clone();
+        SchedulePolicy::sync_mesh(&mut sch, &mesh);
+        let after = sch.schedule(&seqs);
+        assert!(
+            !after.stats.cache_hit,
+            "sync_mesh must invalidate the exact cache"
+        );
+        assert!(
+            after.stats.warm_started || after.stats.candidates > 0,
+            "the search must actually re-run after invalidation"
+        );
+    }
+}

@@ -194,6 +194,15 @@ impl SearchPool {
     /// `helpers` workers, participate from the calling thread, and block
     /// until every candidate is claimed and processed. Returns the
     /// per-candidate drafts exactly as the scoped-thread search did.
+    ///
+    /// `seed_bits` initializes the incumbent — `f64::INFINITY.to_bits()`
+    /// for a cold search, or a warm-start upper bound's bits (the
+    /// re-costed previous plan, see
+    /// [`crate::scheduler::schedule_cache`]). Because the seed is a
+    /// feasible solution's cost, the strict-`>` pruning stays sound;
+    /// `plan_search`'s acceptance guard keeps the final selection
+    /// bit-identical to the cold search.
+    #[allow(clippy::too_many_arguments)]
     pub(in crate::scheduler) fn search(
         &self,
         sch: &Scheduler,
@@ -202,6 +211,7 @@ impl SearchPool {
         model_fp: u64,
         candidates: Vec<Candidate>,
         helpers: usize,
+        seed_bits: u64,
     ) -> Vec<(usize, Draft)> {
         let total = candidates.len();
         if total == 0 {
@@ -214,7 +224,7 @@ impl SearchPool {
             model_fp,
             candidates,
             next: AtomicUsize::new(0),
-            incumbent: AtomicU64::new(f64::INFINITY.to_bits()),
+            incumbent: AtomicU64::new(seed_bits),
             state: Mutex::new(JobState {
                 pending: total,
                 results: Vec::with_capacity(total),

@@ -155,6 +155,25 @@ pub struct StepReport {
     /// Per-rank data-dispatch entries built for this step (the
     /// executor-preparation work the scheduling phase pays for).
     pub dispatch_items: usize,
+    /// Micro-batches served from the exact-hit schedule cache
+    /// ([`crate::scheduler::schedule_cache`]) — bit-identical reuse, no
+    /// search ran. Telemetry: excluded from [`StepReport::digest`]
+    /// (reuse provenance never changes semantic content).
+    pub solve_cache_hits: usize,
+    /// Micro-batches whose outer search ran warm-started (incumbent
+    /// seeded by the re-costed previous plan, exactness-guarded).
+    /// Telemetry: excluded from [`StepReport::digest`].
+    pub solve_warm_starts: usize,
+    /// Micro-batches that took the opt-in ε-bounded fast path (0 in
+    /// every default-config run). Telemetry: excluded from
+    /// [`StepReport::digest`].
+    pub solve_fast_paths: usize,
+    /// Mean pruned-candidate fraction over the micro-batches whose
+    /// outer search actually ran (cold or warm-started; 0 when every
+    /// micro-batch was a hit/fast-path). Warm starts push this up —
+    /// the seeded incumbent prunes from candidate 0. Telemetry:
+    /// excluded from [`StepReport::digest`].
+    pub solve_pruned_frac: f64,
     /// Semantic identity of the fabric oracle this step was solved under
     /// ([`FabricModel::fingerprint`]): changes exactly when a mesh event
     /// (or any occupancy change) alters some bandwidth answer.
@@ -913,6 +932,28 @@ impl DhpSession {
         // refused (the failed-step path below reports it too).
         let solver_time_s: f64 =
             pending.received.iter().map(|b| b.solve_time_s).sum();
+        // Cross-step reuse telemetry, aggregated over the micro-batches
+        // that produced a schedule (computed before the drain below
+        // consumes `received`, so the failed-step report carries it too).
+        let (mut solve_cache_hits, mut solve_warm_starts, mut solve_fast_paths) =
+            (0usize, 0usize, 0usize);
+        let (mut pruned_sum, mut searched_mbs) = (0.0f64, 0usize);
+        for sb in &pending.received {
+            if let Ok(s) = &sb.schedule {
+                solve_cache_hits += s.stats.cache_hit as usize;
+                solve_warm_starts += s.stats.warm_started as usize;
+                solve_fast_paths += s.stats.fast_path as usize;
+                if s.stats.candidates > 0 {
+                    pruned_sum += s.stats.pruned_frac();
+                    searched_mbs += 1;
+                }
+            }
+        }
+        let solve_pruned_frac = if searched_mbs == 0 {
+            0.0
+        } else {
+            pruned_sum / searched_mbs as f64
+        };
         let n_mbs = pending.mbs.len();
         let mut failed: Option<ScheduleError> = None;
         let mut scheduled: Vec<(Vec<Sequence>, Schedule)> = Vec::with_capacity(n_mbs);
@@ -951,6 +992,10 @@ impl DhpSession {
                 schedule_latency_s,
                 solver_time_s,
                 dispatch_items: 0,
+                solve_cache_hits,
+                solve_warm_starts,
+                solve_fast_paths,
+                solve_pruned_frac,
                 fabric_fingerprint: self.fabric_fingerprint(),
                 groups_placed: 0,
                 groups_replayed: 0,
@@ -1105,6 +1150,10 @@ impl DhpSession {
             schedule_latency_s,
             solver_time_s,
             dispatch_items,
+            solve_cache_hits,
+            solve_warm_starts,
+            solve_fast_paths,
+            solve_pruned_frac,
             fabric_fingerprint: self.fabric_fingerprint(),
             groups_placed,
             groups_replayed,
@@ -1409,6 +1458,60 @@ mod tests {
         assert_eq!(session.mesh().free_replicas(), 8);
         let r2 = session.step(&batch);
         assert!(r2.iteration.iter_time_s > 0.0);
+    }
+
+    #[test]
+    fn mesh_event_between_identical_batches_forces_a_resolve() {
+        // ISSUE-9 acceptance: the pipeline's ordered SyncMesh message
+        // must invalidate the scheduling thread's exact-hit schedule
+        // cache — serving a stale cached placement onto a now-occupied
+        // rank would be a correctness bug, not a perf bug.
+        let mut session = dhp_session(8);
+        let mut sampler = sampler(DatasetKind::OpenVid, 0x5CA1E);
+        let batch = sampler.sample_batch(24);
+
+        let r0 = session.step(&batch);
+        assert!(r0.failed.is_none());
+        // Identical batch, unchanged mesh: the steady state the cache
+        // exists for — every micro-batch is an exact hit.
+        let r1 = session.step(&batch);
+        assert!(r1.failed.is_none());
+        assert!(
+            r1.solve_cache_hits > 0,
+            "identical re-submitted batch never hit the schedule cache"
+        );
+        assert_eq!(
+            r1.solve_fast_paths, 0,
+            "ε fast path must be off by default"
+        );
+
+        // Occupy between two identical batches: the SyncMesh control
+        // message must clear the cache, so the same batch re-solves
+        // against the shrunken mesh and never lands on occupied ranks.
+        let occupied = vec![0usize, 5];
+        session
+            .apply(&[MeshEvent::Occupy(occupied.clone())])
+            .unwrap();
+        let r2 = session.step(&batch);
+        assert!(r2.failed.is_none());
+        assert_eq!(
+            r2.solve_cache_hits, 0,
+            "a mesh event must invalidate the schedule cache"
+        );
+        for schedule in &r2.schedules {
+            for wave in &schedule.waves {
+                for g in &wave.groups {
+                    for &r in &g.ranks {
+                        assert!(
+                            !occupied.contains(&r),
+                            "stale cached placement: rank {r} is occupied"
+                        );
+                    }
+                }
+            }
+        }
+        // Telemetry stays coherent through the façade.
+        assert!((0.0..=1.0).contains(&r2.solve_pruned_frac));
     }
 
     #[test]

@@ -112,6 +112,20 @@ pub struct StepRecord {
     pub pool_evictions: u64,
     /// Cumulative communication-group pool hit-rate after this step.
     pub pool_hit_rate: f64,
+    /// Micro-batches served from the exact-hit schedule cache
+    /// ([`dhp::scheduler::schedule_cache`]). The CSV's `solve_cache`
+    /// column renders this with the other reuse counters as
+    /// `hits:warms:fasts`.
+    pub solve_cache_hits: usize,
+    /// Micro-batches whose outer search ran warm-started (incumbent
+    /// seeded by the re-costed previous plan).
+    pub solve_warm_starts: usize,
+    /// Micro-batches that took the opt-in ε fast path (always 0 under
+    /// the trainer's default exact configuration).
+    pub solve_fast_paths: usize,
+    /// Mean pruned-candidate fraction over the micro-batches whose
+    /// search actually ran — the CSV's `solve_pruned_frac` column.
+    pub solve_pruned_frac: f64,
 }
 
 /// Full run report.
@@ -215,7 +229,8 @@ pub fn run(cfg: &TrainerConfig) -> Result<TrainReport> {
                 f,
                 "step,loss,grad_norm,step_s,sim_makespan_s,sched_latency_s,\
                  solver_time_s,reconfig_serial_s,reconfig_charged_s,\
-                 replay_rate,pool_evictions,pool_hit_rate"
+                 replay_rate,pool_evictions,pool_hit_rate,solve_cache,\
+                 solve_pruned_frac"
             )?;
             Some(f)
         }
@@ -271,12 +286,16 @@ pub fn run(cfg: &TrainerConfig) -> Result<TrainReport> {
             replay_rate: report.replay_rate,
             pool_evictions: report.evictions,
             pool_hit_rate: report.pool.hit_rate(),
+            solve_cache_hits: report.solve_cache_hits,
+            solve_warm_starts: report.solve_warm_starts,
+            solve_fast_paths: report.solve_fast_paths,
+            solve_pruned_frac: report.solve_pruned_frac,
         };
         prev_compute_s = compute_s;
         if let Some(f) = log_file.as_mut() {
             writeln!(
                 f,
-                "{},{:.6},{:.4},{:.4},{:.6},{:.6},{:.6},{:.6},{:.6},{:.4},{},{:.4}",
+                "{},{:.6},{:.4},{:.4},{:.6},{:.6},{:.6},{:.6},{:.6},{:.4},{},{:.4},{}:{}:{},{:.4}",
                 rec.step,
                 rec.loss,
                 rec.grad_norm,
@@ -288,7 +307,11 @@ pub fn run(cfg: &TrainerConfig) -> Result<TrainReport> {
                 rec.reconfig_charged_s,
                 rec.replay_rate,
                 rec.pool_evictions,
-                rec.pool_hit_rate
+                rec.pool_hit_rate,
+                rec.solve_cache_hits,
+                rec.solve_warm_starts,
+                rec.solve_fast_paths,
+                rec.solve_pruned_frac
             )?;
         }
         if step % 10 == 0 || step + 1 == cfg.steps {

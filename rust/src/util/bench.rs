@@ -71,14 +71,36 @@ pub fn time<F: FnMut()>(name: &str, warmup: usize, reps: usize, mut f: F) -> Tim
         f();
         samples.push(t0.elapsed().as_secs_f64());
     }
+    from_samples(name, &samples)
+}
+
+/// Build a [`Timing`] from externally collected per-iteration samples
+/// (seconds). For cases whose iterations are NOT interchangeable
+/// repetitions of one closure — e.g. a steady-state stream where each
+/// step solves a *different* correlated batch and the per-step wall
+/// times are gathered by the driver — so the standard
+/// warmup-plus-identical-reps protocol of [`time`] does not apply.
+/// Empty `samples` yield a zeroed timing with `reps == 0`.
+pub fn from_samples(name: &str, samples: &[f64]) -> Timing {
+    if samples.is_empty() {
+        return Timing {
+            name: name.to_string(),
+            reps: 0,
+            mean_s: 0.0,
+            p50_s: 0.0,
+            p90_s: 0.0,
+            min_s: 0.0,
+            std_s: 0.0,
+        };
+    }
     Timing {
         name: name.to_string(),
         reps: samples.len(),
-        mean_s: stats::mean(&samples),
-        p50_s: stats::percentile(&samples, 50.0),
-        p90_s: stats::percentile(&samples, 90.0),
+        mean_s: stats::mean(samples),
+        p50_s: stats::percentile(samples, 50.0),
+        p90_s: stats::percentile(samples, 90.0),
         min_s: samples.iter().cloned().fold(f64::MAX, f64::min),
-        std_s: stats::std_dev(&samples),
+        std_s: stats::std_dev(samples),
     }
 }
 
@@ -102,6 +124,14 @@ impl BenchReport {
     /// Time one case and collect + print its summary line.
     pub fn bench<F: FnMut()>(&mut self, name: &str, warmup: usize, reps: usize, f: F) {
         let t = time(name, warmup, reps, f);
+        println!("  {}", t.summary());
+        self.timings.push(t);
+    }
+
+    /// Collect + print a case from externally gathered per-iteration
+    /// samples (seconds) — see [`from_samples`].
+    pub fn record_samples(&mut self, name: &str, samples: &[f64]) {
+        let t = from_samples(name, samples);
         println!("  {}", t.summary());
         self.timings.push(t);
     }
@@ -165,6 +195,23 @@ mod tests {
         let mut r = BenchReport::new("unit");
         r.bench("noop", 0, 2, || {});
         r.finish();
+    }
+
+    #[test]
+    fn from_samples_matches_the_timed_protocol_stats() {
+        let samples = [0.004, 0.001, 0.002, 0.003, 0.010];
+        let t = from_samples("stream", &samples);
+        assert_eq!(t.reps, 5);
+        assert!((t.mean_s - 0.004).abs() < 1e-12);
+        assert_eq!(t.min_s, 0.001);
+        assert!(t.p50_s <= t.p90_s);
+        let empty = from_samples("empty", &[]);
+        assert_eq!(empty.reps, 0);
+        assert_eq!(empty.mean_s, 0.0);
+        let mut r = BenchReport::new("unit_samples");
+        r.record_samples("stream", &samples);
+        assert_eq!(r.timings().len(), 1);
+        assert_eq!(r.timings()[0].reps, 5);
     }
 
     #[test]

@@ -22,6 +22,11 @@
 # (missing = the bench rotted, fail loudly). The npus=1024 case is also
 # checked against the paper's 1 ms solver budget on p90 — warn-only
 # until a committed baseline exists, a hard gate once it does.
+#
+# ISSUE-9 steady-state case: `schedule_steady_stream_npus1024` (a
+# correlated 32-batch stream through one reuse-enabled scheduler — the
+# cold-vs-cache/warm-start comparison lives in its `_hit` / `_warm` /
+# `_coldref` sub-cases) must also be present.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -117,7 +122,14 @@ import json
 import os
 import sys
 
-REQUIRED = ["schedule_gbs2048_npus1024", "schedule_gbs8192_npus4096"]
+REQUIRED = [
+    "schedule_gbs2048_npus1024",
+    "schedule_gbs8192_npus4096",
+    # ISSUE-9: the steady-state correlated-stream case (cross-step
+    # solver reuse). Its _hit/_warm/_coldref sub-cases carry the
+    # cold-vs-steady-state comparison.
+    "schedule_steady_stream_npus1024",
+]
 BUDGET_CASE = "schedule_gbs2048_npus1024"
 BUDGET_MS = 1.0
 
