@@ -1,0 +1,135 @@
+//! Cluster-day bench: replay a seeded multi-tenant job trace through
+//! every allocator-policy × session-scheduler cell, plus two
+//! self-gating invariant checks — any violation exits non-zero so CI
+//! catches it:
+//!
+//! 1. Determinism: every cell replayed twice must be digest- and
+//!    byte-identical (the shared virtual clock's `(time, job_id)`
+//!    discipline).
+//! 2. Departure scenario: on the pinned trace where one job's
+//!    departure re-admits a queued job, the queued job's goodput under
+//!    best-fit + DHP must measurably beat first-fit + DHP (the whole
+//!    node vs cross-node grant).
+//!
+//! Usage:
+//!   cargo bench --bench cluster_day              # full day
+//!   cargo bench --bench cluster_day -- --quick   # CI smoke
+//!
+//! Both modes persist per-cell utilization/SLO rows to
+//! `BENCH_cluster_day.json` at the repo root (see
+//! scripts/bench_smoke.sh).
+
+use std::path::Path;
+
+use dhp::cluster_service::AllocPolicy;
+use dhp::experiments::cluster_day::{
+    compute, day_trace, departure_trace, queued_job_goodput, summary_table,
+};
+use dhp::util::json::{self, Json};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let seed = 0xC1_D4Bu64;
+
+    // Gate 1 — determinism: both traces, every cell, replayed twice.
+    let dep_a = compute(&departure_trace()).expect("departure cells");
+    let dep_b = compute(&departure_trace()).expect("departure cells");
+    let day_a = compute(&day_trace(seed, quick)).expect("day cells");
+    let day_b = compute(&day_trace(seed, quick)).expect("day cells");
+    for (a, b) in dep_a.iter().zip(&dep_b).chain(day_a.iter().zip(&day_b)) {
+        if a.report.digest != b.report.digest
+            || a.report.render() != b.report.render()
+        {
+            eprintln!(
+                "[bench] DETERMINISM VIOLATION: {}/{} digests {:#018x} vs \
+                 {:#018x}",
+                a.alloc.name(),
+                a.scheduler.name(),
+                a.report.digest,
+                b.report.digest
+            );
+            std::process::exit(1);
+        }
+    }
+    println!("[bench] every cell replays bit-identically");
+
+    // Gate 2 — the departure scenario's allocator effect.
+    let ff = queued_job_goodput(&dep_a, AllocPolicy::FirstFit);
+    let bf = queued_job_goodput(&dep_a, AllocPolicy::BestFit);
+    if !(ff > 0.0 && bf > ff * 1.05) {
+        eprintln!(
+            "[bench] DEPARTURE-SCENARIO VIOLATION: queued-job goodput \
+             best-fit {bf:.4} must beat first-fit {ff:.4} by >5%"
+        );
+        std::process::exit(1);
+    }
+    println!(
+        "[bench] queued job goodput: first-fit {:.4} vs best-fit {:.4} \
+         steps/s ({:+.1}%)",
+        ff,
+        bf,
+        (bf / ff - 1.0) * 100.0
+    );
+
+    print!("{}", summary_table("Departure scenario", &dep_a).render());
+    print!(
+        "{}",
+        summary_table(&format!("Cluster day (seed {seed:#x})"), &day_a)
+            .render()
+    );
+
+    // Persist the trajectory record at the repo root.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap_or_else(|| Path::new("."))
+        .to_path_buf();
+    let out = root.join("BENCH_cluster_day.json");
+    let cell_rows = |cells: &[dhp::experiments::cluster_day::CellResult]| {
+        cells
+            .iter()
+            .map(|c| {
+                json::obj(vec![
+                    ("alloc_policy", json::s(c.alloc.name())),
+                    ("scheduler", json::s(c.scheduler.name())),
+                    (
+                        "mean_utilization",
+                        json::num(c.report.mean_utilization()),
+                    ),
+                    (
+                        "mean_fragmentation",
+                        json::num(c.report.mean_fragmentation()),
+                    ),
+                    (
+                        "mean_queue_wait_steps",
+                        json::num(c.report.mean_queue_wait_steps()),
+                    ),
+                    (
+                        "completed_jobs",
+                        json::num(c.report.completed_jobs() as f64),
+                    ),
+                    ("jobs", json::num(c.report.jobs.len() as f64)),
+                    (
+                        "total_goodput_steps_per_s",
+                        json::num(c.report.total_goodput_steps_per_s()),
+                    ),
+                    ("digest", json::s(&format!("{:016x}", c.report.digest))),
+                ])
+            })
+            .collect::<Vec<Json>>()
+    };
+    let doc = json::obj(vec![
+        ("bench", json::s("cluster_day")),
+        ("quick", Json::Bool(quick)),
+        ("seed", json::num(seed as f64)),
+        ("determinism_ok", Json::Bool(true)),
+        ("departure_scenario_ok", Json::Bool(true)),
+        ("queued_job_goodput_first_fit", json::num(ff)),
+        ("queued_job_goodput_best_fit", json::num(bf)),
+        ("departure_cells", json::arr(cell_rows(&dep_a))),
+        ("day_cells", json::arr(cell_rows(&day_a))),
+    ]);
+    match std::fs::write(&out, doc.to_string_pretty()) {
+        Ok(()) => println!("[bench] wrote {}", out.display()),
+        Err(e) => eprintln!("[bench] failed to write {}: {e}", out.display()),
+    }
+}

@@ -101,8 +101,12 @@ impl SchedulePolicy for MegatronStaticCp {
     fn schedule(&self, seqs: &[Sequence]) -> Result<Schedule, ScheduleError> {
         // The static grid plans all `replicas` ranks; anything less free
         // and the placement below would overrun the mesh's free budget.
+        // The mesh itself may be LARGER than the grid (a multi-tenant
+        // cluster where this job's grant is a slice of the shared mesh):
+        // placement runs on free ranks only, so all the grid needs is
+        // `replicas` free slots.
         let free = self.mesh.free_replicas();
-        if free < self.replicas || self.mesh.replicas != self.replicas {
+        if free < self.replicas {
             return Err(ScheduleError::MeshShrunk {
                 policy: self.name(),
                 need: self.replicas,

@@ -270,18 +270,30 @@ impl ClusterSim {
     }
 
     /// ZeRO-style gradient synchronization per optimizer step: a
-    /// reduce-scatter + all-gather over the slowest (inter-node) fabric,
-    /// 2·P·(N−1)/N bytes in half precision. Identical for every policy.
+    /// reduce-scatter + all-gather over the slowest fabric the ring
+    /// actually crosses, 2·P·(N−1)/N bytes in half precision. Identical
+    /// for every policy.
+    ///
+    /// The ring spans this session's *free* ranks, not the raw cluster:
+    /// under co-tenancy (other jobs occupying part of the shared mesh)
+    /// the DP ring is exactly the free set, so both the participant
+    /// count and the intra-vs-inter fabric choice must answer for that
+    /// set. On an unoccupied mesh this reduces bit-identically to the
+    /// old whole-cluster formula (`free == replicas`, and a multi-node
+    /// free set is never intra-node).
     pub fn grad_sync_time(&self) -> f64 {
-        let n = self.mesh.replicas as f64;
+        let free: Vec<RankId> = (0..self.mesh.replicas)
+            .filter(|&r| self.mesh.is_rank_free(r))
+            .collect();
+        let n = free.len() as f64;
         if n <= 1.0 {
             return 0.0;
         }
         let param_bytes = self.preset.params_b * 1e9 * 2.0;
-        let bw = if self.cluster.nodes > 1 {
-            self.cluster.inter_bw
-        } else {
+        let bw = if self.mesh.is_intra_node(&free) {
             self.cluster.intra_bw
+        } else {
+            self.cluster.inter_bw
         };
         2.0 * param_bytes * (n - 1.0) / n / bw
     }
@@ -753,5 +765,99 @@ mod tests {
             .sum();
         assert!(ring > 0.0 && a2a > 0.0);
         assert!((ring - a2a).abs() > 1e-9, "patterns must differ");
+    }
+
+    #[test]
+    fn grad_sync_answers_for_the_free_set() {
+        // Unfragmented mesh: bit-identical to the whole-cluster formula
+        // (free == replicas, multi-node set → inter fabric).
+        let s = sim(16);
+        let n = s.mesh.replicas as f64;
+        let expected =
+            2.0 * s.preset.params_b * 1e9 * 2.0 * (n - 1.0) / n / s.cluster.inter_bw;
+        assert_eq!(s.grad_sync_time().to_bits(), expected.to_bits());
+
+        // Co-tenants occupy everything except two ranks on node 0: the
+        // surviving participants sync over the fast intra fabric with a
+        // smaller (n−1)/n factor — the whole-cluster formula would keep
+        // charging the 16-way inter-node all-reduce.
+        let mut frag = sim(16);
+        let held: Vec<RankId> = (2..frag.mesh.replicas).collect();
+        frag.mesh.occupy(&held);
+        let intra_expected =
+            2.0 * frag.preset.params_b * 1e9 * 2.0 * (2.0 - 1.0) / 2.0
+                / frag.cluster.intra_bw;
+        assert_eq!(frag.grad_sync_time().to_bits(), intra_expected.to_bits());
+        assert!(frag.grad_sync_time() < s.grad_sync_time() / 10.0);
+
+        // A cross-node free pair still pays the slow fabric, but only for
+        // two participants; one (or zero) free ranks sync nothing.
+        frag.mesh.release(&held);
+        let per_node = frag.mesh.replicas_per_node;
+        let cross: Vec<RankId> = (0..frag.mesh.replicas)
+            .filter(|&r| r != 0 && r != per_node)
+            .collect();
+        frag.mesh.occupy(&cross);
+        let pair_expected =
+            2.0 * frag.preset.params_b * 1e9 * 2.0 * (2.0 - 1.0) / 2.0
+                / frag.cluster.inter_bw;
+        assert_eq!(frag.grad_sync_time().to_bits(), pair_expected.to_bits());
+        frag.mesh.occupy(&[per_node]);
+        assert_eq!(frag.grad_sync_time(), 0.0, "one rank has no peers");
+        frag.mesh.occupy(&[0]);
+        assert_eq!(frag.grad_sync_time(), 0.0, "empty free set syncs nothing");
+    }
+
+    #[test]
+    fn fabric_capacity_tracks_free_replicas_under_occupancy() {
+        // Property: under random co-tenant occupancy traces, the
+        // scheduler's fabric snapshot and the simulator agree on the rank
+        // budget, and grad sync always answers for exactly that free set.
+        use crate::scheduler::fabric::FabricModel;
+        use crate::util::rng::Rng;
+        for seed in 0..8u64 {
+            let mut s = sim(16);
+            let mut rng = Rng::new(0xFAB ^ seed);
+            let mut held: Vec<RankId> = Vec::new();
+            for step in 0..24 {
+                if rng.bool(0.6) && held.len() + 1 < s.mesh.replicas {
+                    let free: Vec<RankId> = (0..s.mesh.replicas)
+                        .filter(|&r| s.mesh.is_rank_free(r))
+                        .collect();
+                    let pick =
+                        free[rng.range_u64(0, free.len() as u64) as usize];
+                    s.mesh.occupy(&[pick]);
+                    held.push(pick);
+                } else if let Some(back) = held.pop() {
+                    s.mesh.release(&[back]);
+                }
+                let fabric = FabricModel::mesh_backed(&s.mesh, None);
+                assert_eq!(
+                    fabric.capacity(),
+                    s.mesh.free_replicas(),
+                    "seed {seed} step {step}: fabric capacity must equal \
+                     the mesh's free replicas"
+                );
+                let free: Vec<RankId> = (0..s.mesh.replicas)
+                    .filter(|&r| s.mesh.is_rank_free(r))
+                    .collect();
+                let gs = s.grad_sync_time();
+                if free.len() <= 1 {
+                    assert_eq!(gs, 0.0);
+                } else {
+                    let n = free.len() as f64;
+                    let bw = if s.mesh.is_intra_node(&free) {
+                        s.cluster.intra_bw
+                    } else {
+                        s.cluster.inter_bw
+                    };
+                    let expect = 2.0 * s.preset.params_b * 1e9 * 2.0
+                        * (n - 1.0)
+                        / n
+                        / bw;
+                    assert_eq!(gs.to_bits(), expect.to_bits());
+                }
+            }
+        }
     }
 }

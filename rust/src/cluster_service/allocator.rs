@@ -1,0 +1,447 @@
+//! Elastic cluster allocation: one arbiter for the shared mesh.
+//!
+//! The [`ClusterAllocator`] owns the cluster's master occupancy map (a
+//! [`DeviceMesh`] whose occupied set is exactly the union of every
+//! job's grant) and converts job admission / growth / shrink /
+//! departure into the per-job [`MeshEvent`] feeds each
+//! [`crate::session::DhpSession`] already consumes. Each job's session
+//! is built over the *full* cluster topology; the allocator renders the
+//! job's view by occupying the complement of its grant, so disjoint
+//! grants across jobs can never conflict — `DeviceMesh::occupy` panics
+//! on double-claims, and the allocator is the single caller allowed to
+//! decide who holds what.
+//!
+//! Decisions reach sessions through the [`MeshEventSource`] trait (the
+//! async event-subscription source the session façade's `apply()` was
+//! built for): the allocator implements it over its internal per-job
+//! queues, and [`channel_source`] provides a channel-backed
+//! implementation so external callers can push events asynchronously.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+
+use crate::config::ClusterConfig;
+use crate::parallel::mesh::DeviceMesh;
+use crate::parallel::RankId;
+use crate::session::MeshEvent;
+
+/// Allocation policy for picking which free ranks a job receives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocPolicy {
+    /// Lowest-index free ranks, regardless of topology.
+    FirstFit,
+    /// Locality-aware best-fit: the tightest single-node fit first (an
+    /// exact or near-exact node fills up, whole nodes stay free, and the
+    /// grant rides the intra-node fabric whenever any one node can hold
+    /// it); when no single node suffices, consume the largest free
+    /// blocks. All ties break toward the lowest node index.
+    BestFit,
+}
+
+impl AllocPolicy {
+    /// Display name ("first-fit" / "best-fit").
+    pub fn name(&self) -> &'static str {
+        match self {
+            AllocPolicy::FirstFit => "first-fit",
+            AllocPolicy::BestFit => "best-fit",
+        }
+    }
+}
+
+/// An asynchronous feed of occupancy events for one job's session —
+/// the PR-5 follow-on subscription source. Implementations must be
+/// deterministic given the same call sequence: `poll` returns every
+/// event destined for `job_id` that has been produced since the last
+/// poll, in production order.
+pub trait MeshEventSource {
+    /// Drain the pending events for `job_id`.
+    fn poll(&mut self, job_id: u64) -> Vec<MeshEvent>;
+}
+
+/// The shared-cluster arbiter. See the module docs for the ownership
+/// model.
+#[derive(Debug, Clone)]
+pub struct ClusterAllocator {
+    mesh: DeviceMesh,
+    policy: AllocPolicy,
+    owners: Vec<Option<u64>>,
+    queues: BTreeMap<u64, Vec<MeshEvent>>,
+}
+
+impl ClusterAllocator {
+    /// Allocator over `cluster`'s replica topology with the given
+    /// placement policy. All ranks start free.
+    pub fn new(cluster: &ClusterConfig, policy: AllocPolicy) -> Self {
+        let mesh = DeviceMesh::new(cluster);
+        let replicas = mesh.replicas;
+        ClusterAllocator {
+            mesh,
+            policy,
+            owners: vec![None; replicas],
+            queues: BTreeMap::new(),
+        }
+    }
+
+    /// The master occupancy map (occupied = granted to some job).
+    pub fn mesh(&self) -> &DeviceMesh {
+        &self.mesh
+    }
+
+    /// The active placement policy.
+    pub fn policy(&self) -> AllocPolicy {
+        self.policy
+    }
+
+    /// Ranks currently granted to `job_id`, ascending.
+    pub fn owned(&self, job_id: u64) -> Vec<RankId> {
+        self.owners
+            .iter()
+            .enumerate()
+            .filter(|(_, o)| **o == Some(job_id))
+            .map(|(r, _)| r)
+            .collect()
+    }
+
+    /// Free replica slots cluster-wide.
+    pub fn free_replicas(&self) -> usize {
+        self.mesh.free_replicas()
+    }
+
+    /// Fraction of the cluster currently granted to jobs.
+    pub fn utilization(&self) -> f64 {
+        self.mesh.occupied_replicas() as f64 / self.mesh.replicas.max(1) as f64
+    }
+
+    /// External fragmentation: the fraction of *free* ranks stranded on
+    /// partially-occupied nodes (a whole-node-hungry job cannot use
+    /// them without crossing the slow fabric). 0.0 when every free rank
+    /// sits on a fully-free node — and when nothing is free.
+    pub fn fragmentation(&self) -> f64 {
+        let rpn = self.mesh.replicas_per_node;
+        let free_per_node = self.mesh.free_per_node();
+        let free: usize = free_per_node.iter().sum();
+        if free == 0 {
+            return 0.0;
+        }
+        let stranded: usize = free_per_node
+            .iter()
+            .enumerate()
+            .map(|(node, &f)| {
+                let node_size =
+                    rpn.min(self.mesh.replicas - (node * rpn).min(self.mesh.replicas));
+                if f == node_size {
+                    0
+                } else {
+                    f
+                }
+            })
+            .sum();
+        stranded as f64 / free as f64
+    }
+
+    /// Try to admit `job_id` at `want` replicas. On success the grant is
+    /// recorded, the job's event feed receives the `Occupy(complement)`
+    /// event that renders its session's view of the shared mesh, and the
+    /// granted ranks are returned. `None` when the cluster cannot hold
+    /// the job right now (caller queues it).
+    pub fn admit(&mut self, job_id: u64, want: usize) -> Option<Vec<RankId>> {
+        assert!(want >= 1, "admit: job {job_id} wants 0 replicas");
+        assert!(
+            self.owned(job_id).is_empty(),
+            "admit: job {job_id} is already admitted"
+        );
+        let ranks = self.select(want)?;
+        self.grant(job_id, &ranks);
+        let complement: Vec<RankId> = (0..self.mesh.replicas)
+            .filter(|r| !ranks.contains(r))
+            .collect();
+        if !complement.is_empty() {
+            self.queues
+                .entry(job_id)
+                .or_default()
+                .push(MeshEvent::Occupy(complement));
+        }
+        Some(ranks)
+    }
+
+    /// Grow `job_id` by up to `extra` replicas; returns the ranks
+    /// actually granted (possibly empty — partial grows are refused so
+    /// the decision stays all-or-nothing and deterministic). The job's
+    /// feed receives `Release(granted)`: from its session's point of
+    /// view those co-tenant ranks just freed up.
+    pub fn grow(&mut self, job_id: u64, extra: usize) -> Vec<RankId> {
+        assert!(
+            !self.owned(job_id).is_empty(),
+            "grow: job {job_id} is not admitted"
+        );
+        let Some(ranks) = self.select(extra) else {
+            return Vec::new();
+        };
+        self.grant(job_id, &ranks);
+        self.queues
+            .entry(job_id)
+            .or_default()
+            .push(MeshEvent::Release(ranks.clone()));
+        ranks
+    }
+
+    /// Shrink `job_id` by up to `count` replicas (always keeping one),
+    /// returning the ranks taken back. Highest-index owned ranks go
+    /// first — deterministic, and it unwinds first-fit growth. The job's
+    /// feed receives `Occupy(taken)`.
+    pub fn shrink(&mut self, job_id: u64, count: usize) -> Vec<RankId> {
+        let owned = self.owned(job_id);
+        assert!(!owned.is_empty(), "shrink: job {job_id} is not admitted");
+        let give_up = count.min(owned.len().saturating_sub(1));
+        if give_up == 0 {
+            return Vec::new();
+        }
+        let taken: Vec<RankId> =
+            owned[owned.len() - give_up..].to_vec();
+        self.mesh.release(&taken);
+        for &r in &taken {
+            self.owners[r] = None;
+        }
+        self.queues
+            .entry(job_id)
+            .or_default()
+            .push(MeshEvent::Occupy(taken.clone()));
+        taken
+    }
+
+    /// Remove `job_id` entirely: its grant returns to the free pool and
+    /// its (now meaningless) event feed is dropped. Returns the freed
+    /// ranks.
+    pub fn depart(&mut self, job_id: u64) -> Vec<RankId> {
+        let owned = self.owned(job_id);
+        assert!(!owned.is_empty(), "depart: job {job_id} is not admitted");
+        self.mesh.release(&owned);
+        for &r in &owned {
+            self.owners[r] = None;
+        }
+        self.queues.remove(&job_id);
+        owned
+    }
+
+    fn grant(&mut self, job_id: u64, ranks: &[RankId]) {
+        self.mesh.occupy(ranks);
+        for &r in ranks {
+            self.owners[r] = Some(job_id);
+        }
+    }
+
+    /// Pick `want` free ranks under the policy, or `None` if the
+    /// cluster cannot hold them.
+    fn select(&self, want: usize) -> Option<Vec<RankId>> {
+        if want == 0 || self.mesh.free_replicas() < want {
+            return None;
+        }
+        match self.policy {
+            AllocPolicy::FirstFit => Some(
+                (0..self.mesh.replicas)
+                    .filter(|&r| self.mesh.is_rank_free(r))
+                    .take(want)
+                    .collect(),
+            ),
+            AllocPolicy::BestFit => Some(self.select_best_fit(want)),
+        }
+    }
+
+    /// Greedy best-fit: repeatedly pick the node with the SMALLEST free
+    /// count that still covers the remaining need (tightest fit); when
+    /// no single node covers it, the node with the LARGEST free count
+    /// (fewest fabric crossings). Ties break toward the lowest node
+    /// index; within a node, lowest-index free ranks. Total free ≥ want
+    /// is guaranteed by the caller, so this always terminates with a
+    /// full grant.
+    fn select_best_fit(&self, want: usize) -> Vec<RankId> {
+        let rpn = self.mesh.replicas_per_node;
+        let mut free_per_node = self.mesh.free_per_node();
+        let mut picked = Vec::with_capacity(want);
+        let mut remaining = want;
+        while remaining > 0 {
+            let tightest = free_per_node
+                .iter()
+                .enumerate()
+                .filter(|(_, &f)| f >= remaining)
+                .min_by_key(|(node, &f)| (f, *node))
+                .map(|(node, _)| node);
+            let node = tightest.unwrap_or_else(|| {
+                free_per_node
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|(node, &f)| (f, usize::MAX - *node))
+                    .map(|(node, _)| node)
+                    .expect("best-fit: no nodes")
+            });
+            let take = free_per_node[node].min(remaining);
+            let start = node * rpn;
+            let end = ((node + 1) * rpn).min(self.mesh.replicas);
+            let mut got = 0;
+            for r in start..end {
+                if got == take {
+                    break;
+                }
+                if self.mesh.is_rank_free(r) && !picked.contains(&r) {
+                    picked.push(r);
+                    got += 1;
+                }
+            }
+            debug_assert_eq!(got, take, "best-fit node census out of sync");
+            free_per_node[node] -= take;
+            remaining -= take;
+        }
+        picked.sort_unstable();
+        picked
+    }
+}
+
+impl MeshEventSource for ClusterAllocator {
+    fn poll(&mut self, job_id: u64) -> Vec<MeshEvent> {
+        self.queues.remove(&job_id).unwrap_or_default()
+    }
+}
+
+/// The sending half of a [`channel_source`] feed: external callers
+/// (another thread, an RPC handler) push `(job_id, event)` pairs
+/// through it asynchronously.
+#[derive(Debug, Clone)]
+pub struct ChannelEventFeed {
+    tx: mpsc::Sender<(u64, MeshEvent)>,
+}
+
+impl ChannelEventFeed {
+    /// Queue `event` for `job_id`'s next poll. Fails silently if the
+    /// receiving source was dropped (the service shut down).
+    pub fn push(&self, job_id: u64, event: MeshEvent) {
+        let _ = self.tx.send((job_id, event));
+    }
+}
+
+/// The polling half of a [`channel_source`] feed. Events for jobs other
+/// than the polled one are buffered (in arrival order) until that job
+/// polls.
+#[derive(Debug)]
+pub struct ChannelEventSource {
+    rx: mpsc::Receiver<(u64, MeshEvent)>,
+    buffered: BTreeMap<u64, Vec<MeshEvent>>,
+}
+
+/// A channel-backed [`MeshEventSource`]: the feed half is cloneable and
+/// `Send`, so asynchronous external callers can push occupancy events
+/// into a running service.
+pub fn channel_source() -> (ChannelEventFeed, ChannelEventSource) {
+    let (tx, rx) = mpsc::channel();
+    (
+        ChannelEventFeed { tx },
+        ChannelEventSource {
+            rx,
+            buffered: BTreeMap::new(),
+        },
+    )
+}
+
+impl MeshEventSource for ChannelEventSource {
+    fn poll(&mut self, job_id: u64) -> Vec<MeshEvent> {
+        while let Ok((id, ev)) = self.rx.try_recv() {
+            self.buffered.entry(id).or_default().push(ev);
+        }
+        self.buffered.remove(&job_id).unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster(nodes: usize) -> ClusterConfig {
+        // 8 NPUs/node at TP=2 × PP=2 ⇒ 2 replicas per node.
+        let mut c = ClusterConfig::default().with_npus(nodes * 8);
+        c.tp = 2;
+        c.pp = 2;
+        c
+    }
+
+    #[test]
+    fn first_fit_takes_lowest_ranks() {
+        let mut a = ClusterAllocator::new(&cluster(4), AllocPolicy::FirstFit);
+        assert_eq!(a.admit(0, 1), Some(vec![0]));
+        assert_eq!(a.admit(1, 2), Some(vec![1, 2]));
+        assert_eq!(a.owned(1), vec![1, 2]);
+        assert!(!a.mesh().is_intra_node(&[1, 2]));
+    }
+
+    #[test]
+    fn best_fit_prefers_whole_nodes() {
+        let mut a = ClusterAllocator::new(&cluster(4), AllocPolicy::BestFit);
+        assert_eq!(a.admit(0, 1), Some(vec![0]));
+        // A 2-replica job gets the tightest whole node, not the
+        // fragment on node 0 plus a crossing.
+        let got = a.admit(1, 2).unwrap();
+        assert_eq!(got, vec![2, 3]);
+        assert!(a.mesh().is_intra_node(&got));
+    }
+
+    #[test]
+    fn best_fit_spills_over_largest_blocks() {
+        let mut a = ClusterAllocator::new(&cluster(2), AllocPolicy::BestFit);
+        assert_eq!(a.admit(0, 1), Some(vec![0]));
+        // want=3 > any single node: take the whole free node 1 first,
+        // then the fragment.
+        assert_eq!(a.admit(1, 3), Some(vec![1, 2, 3]));
+        assert_eq!(a.free_replicas(), 0);
+    }
+
+    #[test]
+    fn admission_feeds_complement_and_lifecycle_events() {
+        let mut a = ClusterAllocator::new(&cluster(2), AllocPolicy::FirstFit);
+        a.admit(7, 2).unwrap();
+        assert_eq!(a.poll(7), vec![MeshEvent::Occupy(vec![2, 3])]);
+        assert!(a.poll(7).is_empty(), "poll drains");
+        let grown = a.grow(7, 1);
+        assert_eq!(grown, vec![2]);
+        assert_eq!(a.poll(7), vec![MeshEvent::Release(vec![2])]);
+        let taken = a.shrink(7, 2);
+        assert_eq!(taken, vec![2, 3]);
+        assert_eq!(a.poll(7), vec![MeshEvent::Occupy(vec![2, 3])]);
+        // Shrink never takes the last replica.
+        assert!(a.shrink(7, 5).is_empty());
+        assert_eq!(a.depart(7), vec![0]);
+        assert_eq!(a.free_replicas(), 4);
+    }
+
+    #[test]
+    fn refuses_when_full_and_recovers_on_departure() {
+        let mut a = ClusterAllocator::new(&cluster(1), AllocPolicy::BestFit);
+        a.admit(0, 2).unwrap();
+        assert_eq!(a.admit(1, 1), None);
+        assert!((a.utilization() - 1.0).abs() < 1e-12);
+        a.depart(0);
+        assert_eq!(a.admit(1, 1), Some(vec![0]));
+    }
+
+    #[test]
+    fn fragmentation_counts_stranded_free_ranks() {
+        let mut a = ClusterAllocator::new(&cluster(2), AllocPolicy::FirstFit);
+        assert_eq!(a.fragmentation(), 0.0);
+        a.admit(0, 1).unwrap(); // node 0 now half-occupied
+        // Free ranks: 1 (stranded on node 0), 2, 3 (whole node 1).
+        assert!((a.fragmentation() - 1.0 / 3.0).abs() < 1e-12);
+        a.admit(1, 3).unwrap();
+        assert_eq!(a.fragmentation(), 0.0, "nothing free, nothing stranded");
+    }
+
+    #[test]
+    fn channel_source_buffers_per_job() {
+        let (feed, mut src) = channel_source();
+        feed.push(1, MeshEvent::Occupy(vec![0]));
+        feed.push(2, MeshEvent::Occupy(vec![1]));
+        feed.push(1, MeshEvent::Release(vec![0]));
+        assert_eq!(
+            src.poll(1),
+            vec![MeshEvent::Occupy(vec![0]), MeshEvent::Release(vec![0])]
+        );
+        assert_eq!(src.poll(2), vec![MeshEvent::Occupy(vec![1])]);
+        assert!(src.poll(1).is_empty());
+    }
+}

@@ -1,0 +1,39 @@
+//! Trace-driven multi-tenant cluster service.
+//!
+//! Production MLLM training is not one job on one mesh — it is many
+//! jobs arriving, growing, shrinking, and finishing against one shared
+//! cluster (the MegaScale-Omni operating regime). This layer closes
+//! that gap over the single-job [`crate::session::DhpSession`] façade:
+//!
+//! - [`trace`] — job-arrival traces: a seeded synthetic generator
+//!   (Poisson arrivals, heavy-tailed sizes/durations) and a CSV loader.
+//! - [`allocator`] — the single arbiter of the shared mesh: admission,
+//!   elastic grow/shrink, departure, queueing when full, under
+//!   first-fit or locality-aware best-fit placement; decisions become
+//!   per-job [`crate::session::MeshEvent`] feeds via the
+//!   [`MeshEventSource`] subscription trait (also implemented by a
+//!   channel-backed feed for asynchronous external callers).
+//! - [`service`] — [`ClusterService`]: N concurrent sessions stepping
+//!   round-robin on one deterministic virtual clock with stable
+//!   `(time, job_id)` ordering and bit-reproducible digests.
+//! - [`report`] — per-job SLO metrics (queue wait, goodput,
+//!   completion) and cluster metrics (utilization, fragmentation).
+//!
+//! Entry points: `dhp reproduce cluster_day` and
+//! `cargo bench --bench cluster_day` replay the same seeded trace
+//! under every allocator-policy × scheduler combination.
+
+pub mod allocator;
+pub mod report;
+pub mod service;
+pub mod trace;
+
+pub use allocator::{
+    channel_source, AllocPolicy, ChannelEventFeed, ChannelEventSource,
+    ClusterAllocator, MeshEventSource,
+};
+pub use report::{ClusterReport, ClusterSample, JobOutcome};
+pub use service::{
+    run_service, ClusterService, ServiceConfig, ServiceScheduler,
+};
+pub use trace::{JobSpec, JobTrace, ResizeEvent, TraceConfig};

@@ -1,0 +1,378 @@
+//! Per-job SLO metrics and cluster-level telemetry for a
+//! [`crate::cluster_service::ClusterService`] run.
+//!
+//! The report is pure data plus deterministic rendering: two
+//! bit-identical service runs produce byte-identical
+//! [`ClusterReport::render`] output (the trace-determinism tests pin
+//! exactly that), and [`ClusterReport::to_json`] feeds the
+//! `BENCH_cluster_day.json` artifact.
+
+use crate::report::Table;
+use crate::util::json::{self, Json};
+
+/// What one job experienced, end to end.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobOutcome {
+    /// Trace job id.
+    pub job_id: u64,
+    /// Replicas the job asked for at admission.
+    pub requested: usize,
+    /// Virtual tick the job arrived at.
+    pub arrival_step: u64,
+    /// Tick the job was admitted, `None` if it never left the queue.
+    pub admitted_step: Option<u64>,
+    /// Tick the job finished its step budget, `None` if the run ended
+    /// first.
+    pub completed_step: Option<u64>,
+    /// Ticks spent waiting in the admission queue (the SLO headline).
+    pub queue_wait_steps: u64,
+    /// Steps that trained successfully.
+    pub useful_steps: u64,
+    /// Steps refused by the policy (e.g. a static grid under capacity
+    /// loss).
+    pub failed_steps: u64,
+    /// Simulated seconds the job's steps consumed.
+    pub sim_time_s: f64,
+    /// Useful steps per simulated second — goodput (0 when nothing ran).
+    pub goodput_steps_per_s: f64,
+    /// Fold of the job's step-report digests (bit-reproducibility
+    /// anchor).
+    pub digest: u64,
+}
+
+/// Cluster-wide telemetry sampled once per virtual tick.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSample {
+    /// The tick this sample describes.
+    pub tick: u64,
+    /// Fraction of replicas granted to jobs.
+    pub utilization: f64,
+    /// Fraction of free replicas stranded on partially-occupied nodes.
+    pub fragmentation: f64,
+    /// Jobs running at the end of the tick.
+    pub running: usize,
+    /// Jobs still queued at the end of the tick.
+    pub queued: usize,
+}
+
+/// The full outcome of one service run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterReport {
+    /// Allocation policy name ("first-fit" / "best-fit").
+    pub alloc_policy: String,
+    /// Session scheduler name ("DHP" / "static-CP").
+    pub scheduler: String,
+    /// Cluster size in replicas.
+    pub replicas: usize,
+    /// Virtual ticks the run spanned.
+    pub ticks: u64,
+    /// Per-job outcomes, in job-id order.
+    pub jobs: Vec<JobOutcome>,
+    /// Per-tick cluster telemetry.
+    pub samples: Vec<ClusterSample>,
+    /// Fold of every step digest in global `(tick, job_id)` order.
+    pub digest: u64,
+}
+
+impl ClusterReport {
+    /// Mean cluster utilization over the run's ticks.
+    pub fn mean_utilization(&self) -> f64 {
+        mean(self.samples.iter().map(|s| s.utilization))
+    }
+
+    /// Mean fragmentation over the run's ticks.
+    pub fn mean_fragmentation(&self) -> f64 {
+        mean(self.samples.iter().map(|s| s.fragmentation))
+    }
+
+    /// Mean admission-queue wait over all jobs that were admitted.
+    pub fn mean_queue_wait_steps(&self) -> f64 {
+        mean(
+            self.jobs
+                .iter()
+                .filter(|j| j.admitted_step.is_some())
+                .map(|j| j.queue_wait_steps as f64),
+        )
+    }
+
+    /// Jobs that finished their full step budget.
+    pub fn completed_jobs(&self) -> usize {
+        self.jobs
+            .iter()
+            .filter(|j| j.completed_step.is_some())
+            .count()
+    }
+
+    /// Aggregate goodput: useful steps per simulated second, summed
+    /// over jobs (each job's wall-clock is its own session's — jobs run
+    /// concurrently, so the sum is the cluster's service rate).
+    pub fn total_goodput_steps_per_s(&self) -> f64 {
+        self.jobs.iter().map(|j| j.goodput_steps_per_s).sum()
+    }
+
+    /// Per-job SLO table.
+    pub fn job_table(&self) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "Per-job SLO — {} / {} ({} replicas, {} ticks)",
+                self.alloc_policy, self.scheduler, self.replicas, self.ticks
+            ),
+            &[
+                "job", "req", "arrive", "admit", "done", "wait", "useful",
+                "failed", "sim time (s)", "goodput (steps/s)",
+            ],
+        );
+        for j in &self.jobs {
+            let opt = |v: Option<u64>| {
+                v.map(|x| x.to_string()).unwrap_or_else(|| "-".into())
+            };
+            t.row(vec![
+                j.job_id.to_string(),
+                j.requested.to_string(),
+                j.arrival_step.to_string(),
+                opt(j.admitted_step),
+                opt(j.completed_step),
+                j.queue_wait_steps.to_string(),
+                j.useful_steps.to_string(),
+                j.failed_steps.to_string(),
+                format!("{:.3}", j.sim_time_s),
+                format!("{:.4}", j.goodput_steps_per_s),
+            ]);
+        }
+        t
+    }
+
+    /// Cluster utilization/fragmentation summary table (one row per
+    /// tick would swamp long runs, so this reports the run mean plus
+    /// the peak-queue tick).
+    pub fn cluster_table(&self) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "Cluster — {} / {}",
+                self.alloc_policy, self.scheduler
+            ),
+            &["metric", "value"],
+        );
+        t.row(vec![
+            "mean utilization".into(),
+            format!("{:.4}", self.mean_utilization()),
+        ]);
+        t.row(vec![
+            "mean fragmentation".into(),
+            format!("{:.4}", self.mean_fragmentation()),
+        ]);
+        t.row(vec![
+            "mean queue wait (steps)".into(),
+            format!("{:.3}", self.mean_queue_wait_steps()),
+        ]);
+        t.row(vec![
+            "completed jobs".into(),
+            format!("{}/{}", self.completed_jobs(), self.jobs.len()),
+        ]);
+        t.row(vec![
+            "total goodput (steps/s)".into(),
+            format!("{:.4}", self.total_goodput_steps_per_s()),
+        ]);
+        let peak = self
+            .samples
+            .iter()
+            .max_by_key(|s| (s.queued, u64::MAX - s.tick));
+        if let Some(p) = peak {
+            t.row(vec![
+                "peak queue (jobs @ tick)".into(),
+                format!("{} @ {}", p.queued, p.tick),
+            ]);
+        }
+        t.row(vec![
+            "digest".into(),
+            format!("{:016x}", self.digest),
+        ]);
+        t
+    }
+
+    /// Deterministic full rendering (both tables). Byte-identical across
+    /// identical runs — the report half of the trace-determinism tests.
+    pub fn render(&self) -> String {
+        format!("{}\n{}", self.job_table().render(), self.cluster_table().render())
+    }
+
+    /// JSON form for the cluster-day bench artifact.
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("alloc_policy", json::s(&self.alloc_policy)),
+            ("scheduler", json::s(&self.scheduler)),
+            ("replicas", json::num(self.replicas as f64)),
+            ("ticks", json::num(self.ticks as f64)),
+            ("mean_utilization", json::num(self.mean_utilization())),
+            ("mean_fragmentation", json::num(self.mean_fragmentation())),
+            (
+                "mean_queue_wait_steps",
+                json::num(self.mean_queue_wait_steps()),
+            ),
+            ("completed_jobs", json::num(self.completed_jobs() as f64)),
+            (
+                "total_goodput_steps_per_s",
+                json::num(self.total_goodput_steps_per_s()),
+            ),
+            ("digest", json::s(&format!("{:016x}", self.digest))),
+            (
+                "jobs",
+                json::arr(
+                    self.jobs
+                        .iter()
+                        .map(|j| {
+                            json::obj(vec![
+                                ("job_id", json::num(j.job_id as f64)),
+                                ("requested", json::num(j.requested as f64)),
+                                (
+                                    "queue_wait_steps",
+                                    json::num(j.queue_wait_steps as f64),
+                                ),
+                                (
+                                    "useful_steps",
+                                    json::num(j.useful_steps as f64),
+                                ),
+                                (
+                                    "failed_steps",
+                                    json::num(j.failed_steps as f64),
+                                ),
+                                (
+                                    "goodput_steps_per_s",
+                                    json::num(j.goodput_steps_per_s),
+                                ),
+                                (
+                                    "completed",
+                                    Json::Bool(j.completed_step.is_some()),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+fn mean(xs: impl Iterator<Item = f64>) -> f64 {
+    let mut sum = 0.0;
+    let mut n = 0usize;
+    for x in xs {
+        sum += x;
+        n += 1;
+    }
+    if n == 0 {
+        0.0
+    } else {
+        sum / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> ClusterReport {
+        ClusterReport {
+            alloc_policy: "best-fit".into(),
+            scheduler: "DHP".into(),
+            replicas: 4,
+            ticks: 3,
+            jobs: vec![
+                JobOutcome {
+                    job_id: 0,
+                    requested: 2,
+                    arrival_step: 0,
+                    admitted_step: Some(0),
+                    completed_step: Some(2),
+                    queue_wait_steps: 0,
+                    useful_steps: 3,
+                    failed_steps: 0,
+                    sim_time_s: 6.0,
+                    goodput_steps_per_s: 0.5,
+                    digest: 0xABC,
+                },
+                JobOutcome {
+                    job_id: 1,
+                    requested: 4,
+                    arrival_step: 1,
+                    admitted_step: None,
+                    completed_step: None,
+                    queue_wait_steps: 2,
+                    useful_steps: 0,
+                    failed_steps: 0,
+                    sim_time_s: 0.0,
+                    goodput_steps_per_s: 0.0,
+                    digest: 0,
+                },
+            ],
+            samples: vec![
+                ClusterSample {
+                    tick: 0,
+                    utilization: 0.5,
+                    fragmentation: 0.0,
+                    running: 1,
+                    queued: 0,
+                },
+                ClusterSample {
+                    tick: 1,
+                    utilization: 0.5,
+                    fragmentation: 0.5,
+                    running: 1,
+                    queued: 1,
+                },
+            ],
+            digest: 0xD1D1,
+        }
+    }
+
+    #[test]
+    fn means_and_counts() {
+        let r = report();
+        assert!((r.mean_utilization() - 0.5).abs() < 1e-12);
+        assert!((r.mean_fragmentation() - 0.25).abs() < 1e-12);
+        // Only the admitted job counts toward mean queue wait.
+        assert!((r.mean_queue_wait_steps() - 0.0).abs() < 1e-12);
+        assert_eq!(r.completed_jobs(), 1);
+        assert!((r.total_goodput_steps_per_s() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn render_is_deterministic_and_mentions_jobs() {
+        let r = report();
+        assert_eq!(r.render(), r.render());
+        let text = r.render();
+        assert!(text.contains("best-fit"));
+        assert!(text.contains("goodput"));
+        assert!(text.contains("digest"));
+    }
+
+    #[test]
+    fn json_shape_has_slo_and_utilization_cells() {
+        let j = report().to_json();
+        assert!(j.get("mean_utilization").is_ok());
+        assert!(j.get("mean_fragmentation").is_ok());
+        assert!(j.get("mean_queue_wait_steps").is_ok());
+        let jobs = j.get("jobs").unwrap().as_arr().unwrap();
+        assert_eq!(jobs.len(), 2);
+        assert!(jobs[0].get("goodput_steps_per_s").is_ok());
+        let text = j.to_string_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.get("scheduler").unwrap().as_str().unwrap(), "DHP");
+    }
+
+    #[test]
+    fn empty_report_renders_without_panicking() {
+        let r = ClusterReport {
+            alloc_policy: "first-fit".into(),
+            scheduler: "DHP".into(),
+            replicas: 0,
+            ticks: 0,
+            jobs: vec![],
+            samples: vec![],
+            digest: 0,
+        };
+        assert_eq!(r.mean_utilization(), 0.0);
+        assert_eq!(r.mean_queue_wait_steps(), 0.0);
+        let _ = r.render();
+    }
+}

@@ -1,0 +1,557 @@
+//! The multi-tenant cluster service: N concurrent training jobs on one
+//! shared mesh, on one deterministic virtual clock.
+//!
+//! [`ClusterService`] replays a [`JobTrace`] — arrivals, elastic
+//! resizes, departures — through per-job [`DhpSession`]s that all view
+//! the same physical cluster. The [`ClusterAllocator`] is the single
+//! arbiter of who holds which ranks; its decisions reach each session
+//! as [`crate::session::MeshEvent`]s through the [`MeshEventSource`] subscription
+//! trait, applied between that job's steps (guarded by the session's
+//! non-consuming [`DhpSession::is_idle`] check).
+//!
+//! Clock discipline (the PR-8 event-kernel rule, lifted to job
+//! granularity): each virtual tick processes arrivals, then resizes,
+//! then queued admissions, then steps every running job — every stage
+//! in stable `(time, job_id)` order. Two runs of the same trace are
+//! bit-identical ([`ClusterReport::digest`] is a fold of every step
+//! report's digest in that global order), and a trace permuted among
+//! equal-time arrivals resolves identically.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::baselines::{static_degree_candidates, MegatronStaticCp};
+use crate::config::presets::ModelPreset;
+use crate::config::{ClusterConfig, TrainStage};
+use crate::data::datasets::DatasetSampler;
+use crate::experiments::ExpContext;
+use crate::session::DhpSession;
+
+use super::allocator::{AllocPolicy, ClusterAllocator, MeshEventSource};
+use super::report::{ClusterReport, ClusterSample, JobOutcome};
+use super::trace::{JobSpec, JobTrace};
+
+/// Which scheduling policy every job's session runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServiceScheduler {
+    /// DHP: each session re-solves degrees per wave and absorbs elastic
+    /// resizes mid-run.
+    Dhp,
+    /// Megatron-style static CP, sized once at admission (largest
+    /// power-of-two degree dividing the grant). Static jobs cannot
+    /// resize — the service skips their resize requests — which is
+    /// precisely the rigidity DHP removes.
+    StaticCp,
+}
+
+impl ServiceScheduler {
+    /// Display name ("DHP" / "static-CP").
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServiceScheduler::Dhp => "DHP",
+            ServiceScheduler::StaticCp => "static-CP",
+        }
+    }
+}
+
+/// Service configuration: the shared cluster, the model every job
+/// trains, and the allocation/scheduling policies under comparison.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Model preset every job trains (one model zoo per cluster keeps
+    /// the comparison about *scheduling*, not model mix).
+    pub preset: ModelPreset,
+    /// Training stage for every job.
+    pub stage: TrainStage,
+    /// The shared physical cluster (TP/PP grid included).
+    pub cluster: ClusterConfig,
+    /// Rank-placement policy for admissions and grows.
+    pub alloc_policy: AllocPolicy,
+    /// Per-job session scheduler.
+    pub scheduler: ServiceScheduler,
+    /// Virtual-clock safety cap: the service stops after this many
+    /// ticks even if jobs remain (they are reported as incomplete).
+    pub max_ticks: u64,
+}
+
+impl ServiceConfig {
+    /// A small default service: 2-node cluster (4 replicas at TP=2 ×
+    /// PP=2), InternVL3-2B, best-fit + DHP.
+    pub fn small() -> Self {
+        let mut cluster = ClusterConfig::default().with_npus(16);
+        cluster.tp = 2;
+        cluster.pp = 2;
+        ServiceConfig {
+            preset: crate::config::presets::by_name("InternVL3-2B")
+                .expect("preset"),
+            stage: TrainStage::Full,
+            cluster,
+            alloc_policy: AllocPolicy::BestFit,
+            scheduler: ServiceScheduler::Dhp,
+            max_ticks: 512,
+        }
+    }
+}
+
+/// One admitted job mid-flight.
+struct RunningJob {
+    spec: JobSpec,
+    session: DhpSession,
+    sampler: DatasetSampler,
+    admitted_step: u64,
+    useful_steps: u64,
+    failed_steps: u64,
+    sim_time_s: f64,
+    digest: u64,
+    resize_idx: usize,
+}
+
+/// The service itself. Construct with [`ClusterService::new`], then
+/// either [`ClusterService::run`] a whole trace or drive
+/// [`ClusterService::tick`] manually.
+pub struct ClusterService {
+    cfg: ServiceConfig,
+    allocator: ClusterAllocator,
+    /// External async event feed (channel-backed); merged after the
+    /// allocator's own decisions at each job's apply point.
+    external: Option<Box<dyn MeshEventSource>>,
+    arrivals: Vec<JobSpec>,
+    next_arrival: usize,
+    queue: Vec<JobSpec>,
+    running: BTreeMap<u64, RunningJob>,
+    outcomes: Vec<JobOutcome>,
+    samples: Vec<ClusterSample>,
+    tick: u64,
+    digest: u64,
+}
+
+impl ClusterService {
+    /// Service over `trace` (canonicalized on ingest, so equal-time
+    /// arrival order in the input never matters).
+    pub fn new(cfg: ServiceConfig, mut trace: JobTrace) -> Self {
+        trace.canonicalize();
+        let allocator = ClusterAllocator::new(&cfg.cluster, cfg.alloc_policy);
+        ClusterService {
+            cfg,
+            allocator,
+            external: None,
+            arrivals: trace.jobs,
+            next_arrival: 0,
+            queue: Vec::new(),
+            running: BTreeMap::new(),
+            outcomes: Vec::new(),
+            samples: Vec::new(),
+            tick: 0,
+            digest: 0,
+        }
+    }
+
+    /// Attach an external [`MeshEventSource`] (e.g. the channel feed
+    /// from [`super::allocator::channel_source`]): its events are
+    /// delivered to each job's session after the allocator's own, at
+    /// the same idle-guarded apply point.
+    pub fn with_external_source(
+        mut self,
+        source: Box<dyn MeshEventSource>,
+    ) -> Self {
+        self.external = Some(source);
+        self
+    }
+
+    /// Replay the whole trace to completion (or the tick cap) and
+    /// produce the report.
+    pub fn run(mut self) -> Result<ClusterReport> {
+        while !self.done() {
+            self.tick_once()
+                .with_context(|| format!("cluster service tick {}", self.tick))?;
+        }
+        Ok(self.finish())
+    }
+
+    /// All work drained, or the safety cap reached.
+    pub fn done(&self) -> bool {
+        self.tick >= self.cfg.max_ticks
+            || (self.next_arrival >= self.arrivals.len()
+                && self.queue.is_empty()
+                && self.running.is_empty())
+    }
+
+    /// Advance the virtual clock by one tick: arrivals → resizes →
+    /// admissions → one step per running job (job-id order) → metrics.
+    pub fn tick_once(&mut self) -> Result<()> {
+        let t = self.tick;
+
+        // 1. Arrivals join the admission queue in canonical order.
+        while self.next_arrival < self.arrivals.len()
+            && self.arrivals[self.next_arrival].arrival_step <= t
+        {
+            self.queue.push(self.arrivals[self.next_arrival].clone());
+            self.next_arrival += 1;
+        }
+
+        // 2. Elastic resizes for running DHP jobs (static sessions are
+        // sized for life — their requests are skipped by design).
+        if self.cfg.scheduler == ServiceScheduler::Dhp {
+            let ids: Vec<u64> = self.running.keys().copied().collect();
+            for id in ids {
+                let job = self.running.get_mut(&id).expect("running job");
+                while job.resize_idx < job.spec.resizes.len()
+                    && job.spec.resizes[job.resize_idx].at_step
+                        <= job.useful_steps
+                {
+                    let delta = job.spec.resizes[job.resize_idx].delta;
+                    job.resize_idx += 1;
+                    if delta > 0 {
+                        self.allocator.grow(id, delta as usize);
+                    } else if delta < 0 {
+                        self.allocator.shrink(id, (-delta) as usize);
+                    }
+                }
+            }
+        }
+
+        // 3. Admissions: first-come-first-served with backfill — scan
+        // the queue in (arrival, job_id) order, admit whatever fits.
+        let mut still_queued = Vec::new();
+        for spec in std::mem::take(&mut self.queue) {
+            match self.allocator.admit(spec.job_id, spec.replicas) {
+                Some(granted) => {
+                    let job = self.build_job(spec, &granted, t)?;
+                    self.running.insert(job.spec.job_id, job);
+                }
+                None => still_queued.push(spec),
+            }
+        }
+        self.queue = still_queued;
+
+        // 4. One step per running job, in job-id order.
+        let ids: Vec<u64> = self.running.keys().copied().collect();
+        for id in ids {
+            self.step_job(id)?;
+        }
+
+        // 5. Cluster telemetry for this tick.
+        self.samples.push(ClusterSample {
+            tick: t,
+            utilization: self.allocator.utilization(),
+            fragmentation: self.allocator.fragmentation(),
+            running: self.running.len(),
+            queued: self.queue.len(),
+        });
+        self.tick += 1;
+        Ok(())
+    }
+
+    /// Finalize: unfinished and never-admitted jobs get incomplete
+    /// outcomes, and the report is assembled in job-id order.
+    pub fn finish(mut self) -> ClusterReport {
+        let ids: Vec<u64> = self.running.keys().copied().collect();
+        for id in ids {
+            let job = self.running.remove(&id).expect("running job");
+            self.outcomes.push(Self::outcome_of(&job, None));
+            self.allocator.depart(id);
+        }
+        for spec in std::mem::take(&mut self.queue) {
+            self.outcomes.push(JobOutcome {
+                job_id: spec.job_id,
+                requested: spec.replicas,
+                arrival_step: spec.arrival_step,
+                admitted_step: None,
+                completed_step: None,
+                queue_wait_steps: self.tick.saturating_sub(spec.arrival_step),
+                useful_steps: 0,
+                failed_steps: 0,
+                sim_time_s: 0.0,
+                goodput_steps_per_s: 0.0,
+                digest: 0,
+            });
+        }
+        self.outcomes.sort_by_key(|o| o.job_id);
+        ClusterReport {
+            alloc_policy: self.cfg.alloc_policy.name().to_string(),
+            scheduler: self.cfg.scheduler.name().to_string(),
+            replicas: self.cfg.cluster.replicas(),
+            ticks: self.tick,
+            jobs: std::mem::take(&mut self.outcomes),
+            samples: std::mem::take(&mut self.samples),
+            digest: self.digest,
+        }
+    }
+
+    /// Per-job experiment context: the service's cluster and model,
+    /// the job's workload, batch size, and sampler seed.
+    fn job_context(&self, spec: &JobSpec) -> ExpContext {
+        let mut ctx = ExpContext::new(
+            self.cfg.preset.clone(),
+            spec.dataset,
+            self.cfg.cluster.total_npus(),
+            self.cfg.stage,
+        );
+        ctx.cluster = self.cfg.cluster.clone();
+        ctx.gbs = spec.gbs;
+        ctx.seed = spec.seed;
+        ctx
+    }
+
+    /// Build the session for a freshly admitted job. The session views
+    /// the FULL cluster; the allocator has already queued the
+    /// `Occupy(complement)` event that renders its co-tenant view, and
+    /// [`ClusterService::step_job`] applies it before the first step.
+    fn build_job(
+        &mut self,
+        spec: JobSpec,
+        granted: &[usize],
+        now: u64,
+    ) -> Result<RunningJob> {
+        let ctx = self.job_context(&spec);
+        let session = match self.cfg.scheduler {
+            ServiceScheduler::Dhp => ctx.session(),
+            ServiceScheduler::StaticCp => {
+                // Sized for the admission grant: the largest power-of-two
+                // degree dividing it (Megatron cannot re-shard later).
+                let k = granted.len();
+                let degree =
+                    *static_degree_candidates(k).last().expect("degree");
+                let policy = MegatronStaticCp::new(
+                    degree,
+                    k,
+                    ctx.cost_model(),
+                    ctx.cluster.inter_bw,
+                )
+                .with_mesh(ctx.mesh());
+                ctx.session_for(Box::new(policy))
+            }
+        };
+        let sampler = ctx.sampler();
+        Ok(RunningJob {
+            spec,
+            session,
+            sampler,
+            admitted_step: now,
+            useful_steps: 0,
+            failed_steps: 0,
+            sim_time_s: 0.0,
+            digest: 0,
+            resize_idx: 0,
+        })
+    }
+
+    /// Deliver pending occupancy events, run one step, account it, and
+    /// retire the job if its budget is met.
+    fn step_job(&mut self, id: u64) -> Result<()> {
+        let mut events = self.allocator.poll(id);
+        if let Some(ext) = self.external.as_mut() {
+            events.extend(ext.poll(id));
+        }
+        let job = self.running.get_mut(&id).expect("running job");
+        if !events.is_empty() {
+            anyhow::ensure!(
+                job.session.is_idle(),
+                "job {id}: occupancy events with {} step(s) in flight",
+                job.session.pending_steps()
+            );
+            job.session
+                .apply(&events)
+                .with_context(|| format!("job {id}: applying {events:?}"))?;
+        }
+        let batch = job.sampler.sample_batch(job.spec.gbs);
+        let report = job.session.step(&batch);
+        job.sim_time_s += report.iteration.iter_time_s;
+        if report.failed.is_none() {
+            job.useful_steps += 1;
+        } else {
+            job.failed_steps += 1;
+        }
+        let d = report.digest();
+        job.digest = job.digest.rotate_left(1) ^ d;
+        self.digest = self.digest.rotate_left(1) ^ d;
+        if job.useful_steps >= job.spec.steps {
+            let job = self.running.remove(&id).expect("running job");
+            self.outcomes
+                .push(Self::outcome_of(&job, Some(self.tick)));
+            self.allocator.depart(id);
+        }
+        Ok(())
+    }
+
+    fn outcome_of(job: &RunningJob, completed: Option<u64>) -> JobOutcome {
+        JobOutcome {
+            job_id: job.spec.job_id,
+            requested: job.spec.replicas,
+            arrival_step: job.spec.arrival_step,
+            admitted_step: Some(job.admitted_step),
+            completed_step: completed,
+            queue_wait_steps: job
+                .admitted_step
+                .saturating_sub(job.spec.arrival_step),
+            useful_steps: job.useful_steps,
+            failed_steps: job.failed_steps,
+            sim_time_s: job.sim_time_s,
+            goodput_steps_per_s: if job.sim_time_s > 0.0 {
+                job.useful_steps as f64 / job.sim_time_s
+            } else {
+                0.0
+            },
+            digest: job.digest,
+        }
+    }
+}
+
+/// One-shot convenience: replay `trace` under `cfg` and return the
+/// report.
+pub fn run_service(cfg: ServiceConfig, trace: JobTrace) -> Result<ClusterReport> {
+    ClusterService::new(cfg, trace).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster_service::allocator::channel_source;
+    use crate::cluster_service::trace::{ResizeEvent, TraceConfig};
+    use crate::data::datasets::DatasetKind;
+    use crate::session::MeshEvent;
+
+    fn spec(job_id: u64, arrival: u64, replicas: usize, steps: u64) -> JobSpec {
+        JobSpec {
+            job_id,
+            arrival_step: arrival,
+            replicas,
+            steps,
+            dataset: DatasetKind::OpenVid,
+            gbs: 8,
+            seed: 0xD4B ^ job_id,
+            resizes: Vec::new(),
+        }
+    }
+
+    fn small_trace() -> JobTrace {
+        JobTrace {
+            jobs: vec![spec(0, 0, 1, 2), spec(1, 0, 2, 2), spec(2, 1, 1, 2)],
+        }
+    }
+
+    #[test]
+    fn three_sessions_share_one_mesh_and_complete() {
+        // The satellite-1 regression: N sessions interleaved on one
+        // shared mesh, each stepping through its own co-tenant view.
+        // Any occupancy conflict would panic inside DeviceMesh::occupy.
+        let report =
+            run_service(ServiceConfig::small(), small_trace()).unwrap();
+        assert_eq!(report.jobs.len(), 3);
+        for j in &report.jobs {
+            assert!(j.completed_step.is_some(), "job {} incomplete", j.job_id);
+            assert_eq!(j.useful_steps, 2);
+            assert_eq!(j.failed_steps, 0);
+            assert!(j.goodput_steps_per_s > 0.0);
+        }
+        assert!(report.mean_utilization() > 0.0);
+    }
+
+    #[test]
+    fn same_trace_same_digest_and_render() {
+        let a = run_service(ServiceConfig::small(), small_trace()).unwrap();
+        let b = run_service(ServiceConfig::small(), small_trace()).unwrap();
+        assert_eq!(a.digest, b.digest);
+        assert_eq!(a.render(), b.render());
+    }
+
+    #[test]
+    fn synthetic_trace_replays_deterministically() {
+        let trace = JobTrace::synthetic(&TraceConfig {
+            jobs: 5,
+            max_replicas: 3,
+            mean_steps: 3,
+            ..TraceConfig::default()
+        });
+        let a = run_service(ServiceConfig::small(), trace.clone()).unwrap();
+        let b = run_service(ServiceConfig::small(), trace).unwrap();
+        assert_eq!(a.digest, b.digest);
+        assert_eq!(a.render(), b.render());
+    }
+
+    #[test]
+    fn permuted_equal_time_arrivals_resolve_identically() {
+        let trace = small_trace();
+        let mut permuted = trace.clone();
+        permuted.jobs.reverse();
+        let a = run_service(ServiceConfig::small(), trace).unwrap();
+        let b = run_service(ServiceConfig::small(), permuted).unwrap();
+        assert_eq!(a.digest, b.digest);
+        assert_eq!(a.render(), b.render());
+    }
+
+    #[test]
+    fn oversized_job_queues_until_departure() {
+        // 4-replica cluster: job 0 takes 3 ranks for 2 steps; job 1
+        // (3 ranks) must queue until job 0 departs.
+        let trace = JobTrace {
+            jobs: vec![spec(0, 0, 3, 2), spec(1, 0, 3, 3)],
+        };
+        let report = run_service(ServiceConfig::small(), trace).unwrap();
+        let j1 = &report.jobs[1];
+        assert!(j1.queue_wait_steps >= 2, "wait {}", j1.queue_wait_steps);
+        assert!(j1.completed_step.is_some());
+    }
+
+    #[test]
+    fn static_sessions_run_and_skip_resizes() {
+        let mut cfg = ServiceConfig::small();
+        cfg.scheduler = ServiceScheduler::StaticCp;
+        let mut trace = small_trace();
+        trace.jobs[1].resizes = vec![ResizeEvent { at_step: 1, delta: -1 }];
+        let report = run_service(cfg, trace).unwrap();
+        for j in &report.jobs {
+            assert!(j.completed_step.is_some(), "job {} incomplete", j.job_id);
+            assert_eq!(j.failed_steps, 0);
+        }
+    }
+
+    #[test]
+    fn dhp_absorbs_shrink_and_grow_mid_run() {
+        let mut trace = JobTrace {
+            jobs: vec![spec(0, 0, 2, 4)],
+        };
+        trace.jobs[0].resizes = vec![
+            ResizeEvent { at_step: 1, delta: -1 },
+            ResizeEvent { at_step: 2, delta: 1 },
+        ];
+        let report = run_service(ServiceConfig::small(), trace).unwrap();
+        let j = &report.jobs[0];
+        assert_eq!(j.useful_steps, 4);
+        assert_eq!(j.failed_steps, 0);
+    }
+
+    #[test]
+    fn external_channel_events_reach_sessions() {
+        // An async external caller lends the job rank 3 and immediately
+        // takes it back: from the session's view (everything outside its
+        // grant is occupied at admission) that is Release then Occupy.
+        // Both arrive in the same apply() as the admission complement;
+        // the run must stay conflict-free and complete.
+        let (feed, src) = channel_source();
+        feed.push(0, MeshEvent::Release(vec![3]));
+        feed.push(0, MeshEvent::Occupy(vec![3]));
+        let trace = JobTrace {
+            jobs: vec![spec(0, 0, 2, 2)],
+        };
+        let report = ClusterService::new(ServiceConfig::small(), trace)
+            .with_external_source(Box::new(src))
+            .run()
+            .unwrap();
+        assert_eq!(report.jobs[0].useful_steps, 2);
+    }
+
+    #[test]
+    fn max_ticks_caps_a_stuck_service() {
+        let mut cfg = ServiceConfig::small();
+        cfg.max_ticks = 3;
+        let trace = JobTrace {
+            jobs: vec![spec(0, 0, 1, 100)],
+        };
+        let report = run_service(cfg, trace).unwrap();
+        assert_eq!(report.ticks, 3);
+        assert!(report.jobs[0].completed_step.is_none());
+        assert_eq!(report.jobs[0].useful_steps, 3);
+    }
+}

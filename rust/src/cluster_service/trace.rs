@@ -1,0 +1,357 @@
+//! Job-arrival traces for the multi-tenant cluster service.
+//!
+//! A [`JobTrace`] is the service's entire input: which training jobs
+//! arrive at which virtual step, how many replicas each requests, how
+//! long it runs, and any mid-life resize requests. Traces come from two
+//! sources — a seeded synthetic generator (Poisson arrivals with
+//! heavy-tailed sizes and durations, the Azure-Functions-style shape
+//! the dslab FaaS experiments replay) so no external dataset download
+//! is ever required, and a small CSV format for hand-written or
+//! externally produced traces.
+//!
+//! Determinism contract: [`JobTrace::synthetic`] is a pure function of
+//! its [`TraceConfig`] (same config ⇒ byte-identical
+//! [`JobTrace::to_csv`]), and the canonical job order is
+//! `(arrival_step, job_id)` — the same tie-break the service's virtual
+//! clock uses, so a permuted trace replays identically.
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::datasets::DatasetKind;
+use crate::util::rng::Rng;
+
+/// A mid-life elastic resize request: at `at_step` steps *after
+/// admission*, the job asks to grow (`delta > 0`) or shrink
+/// (`delta < 0`) by `|delta|` replicas.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ResizeEvent {
+    /// Steps after admission at which the request fires.
+    pub at_step: u64,
+    /// Signed replica delta (grow when positive, shrink when negative).
+    pub delta: i64,
+}
+
+/// One training job in the trace.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JobSpec {
+    /// Stable identity; also the virtual-clock tie-break key.
+    pub job_id: u64,
+    /// Virtual step at which the job arrives (joins the admission queue).
+    pub arrival_step: u64,
+    /// Replicas requested at admission.
+    pub replicas: usize,
+    /// Useful training steps the job must complete before departing.
+    pub steps: u64,
+    /// Workload the job's sequences are drawn from.
+    pub dataset: DatasetKind,
+    /// Global batch size per step.
+    pub gbs: usize,
+    /// Sampler seed (per-job, so co-tenant batches are independent).
+    pub seed: u64,
+    /// Elastic resize requests, sorted by `at_step`.
+    pub resizes: Vec<ResizeEvent>,
+}
+
+/// An ordered collection of job specs — the service's input.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct JobTrace {
+    /// Jobs in canonical `(arrival_step, job_id)` order.
+    pub jobs: Vec<JobSpec>,
+}
+
+/// Knobs for the synthetic generator. Defaults model a busy shared
+/// cluster: jobs arrive a little faster than they finish, so the
+/// admission queue is exercised.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceConfig {
+    /// Generator seed; the sole source of randomness.
+    pub seed: u64,
+    /// Number of jobs to generate.
+    pub jobs: usize,
+    /// Poisson arrival rate in jobs per virtual step (inter-arrival
+    /// times are exponential with mean `1/arrival_rate`).
+    pub arrival_rate: f64,
+    /// Median requested replicas (sizes are lognormal around this).
+    pub mean_replicas: usize,
+    /// Hard cap on a job's requested replicas (clamp of the heavy tail;
+    /// set this at or below the cluster size so every job is admissible).
+    pub max_replicas: usize,
+    /// Median step budget (durations are lognormal around this).
+    pub mean_steps: u64,
+    /// Probability a job carries one elastic resize request.
+    pub resize_prob: f64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            seed: 0xC1_D4B,
+            jobs: 8,
+            arrival_rate: 0.25,
+            mean_replicas: 2,
+            max_replicas: 4,
+            mean_steps: 12,
+            resize_prob: 0.25,
+        }
+    }
+}
+
+impl JobTrace {
+    /// Seeded synthetic trace: exponential inter-arrivals (Poisson
+    /// process), lognormal (heavy-tailed) sizes and step budgets, and
+    /// occasional resize requests. Pure in `cfg` — the same config
+    /// yields a byte-identical [`JobTrace::to_csv`].
+    pub fn synthetic(cfg: &TraceConfig) -> JobTrace {
+        let mut rng = Rng::new(cfg.seed ^ 0x7261_6365); // "race"
+        let rate = cfg.arrival_rate.max(1e-9);
+        let mut clock = 0.0f64;
+        let mut jobs = Vec::with_capacity(cfg.jobs);
+        let datasets = [
+            DatasetKind::OpenVid,
+            DatasetKind::InternVid,
+            DatasetKind::Msrvtt,
+        ];
+        for job_id in 0..cfg.jobs as u64 {
+            // Exponential inter-arrival via inverse CDF; uniform() is in
+            // [0, 1), so 1-u is in (0, 1] and the log is finite.
+            clock += -(1.0 - rng.uniform()).ln() / rate;
+            let arrival_step = clock.floor() as u64;
+
+            let mu_r = (cfg.mean_replicas.max(1) as f64).ln();
+            let replicas = (rng.lognormal(mu_r, 0.6).round() as usize)
+                .clamp(1, cfg.max_replicas.max(1));
+
+            let mu_s = (cfg.mean_steps.max(1) as f64).ln();
+            let steps = (rng.lognormal(mu_s, 0.8).round() as u64).max(1);
+
+            let dataset = *rng.choose(&datasets);
+            // Batch scales with the grant so per-replica load stays
+            // comparable across sizes.
+            let gbs = 8 * replicas;
+            let seed = rng.next_u64();
+
+            let mut resizes = Vec::new();
+            if rng.bool(cfg.resize_prob) && steps >= 4 {
+                let at_step = rng.range_u64(1, steps.saturating_sub(1).max(2));
+                // Grow by one when below the cap, else shed one.
+                let delta = if replicas < cfg.max_replicas && rng.bool(0.5) {
+                    1
+                } else if replicas > 1 {
+                    -1
+                } else {
+                    1
+                };
+                resizes.push(ResizeEvent { at_step, delta });
+            }
+
+            jobs.push(JobSpec {
+                job_id,
+                arrival_step,
+                replicas,
+                steps,
+                dataset,
+                gbs,
+                seed,
+                resizes,
+            });
+        }
+        let mut trace = JobTrace { jobs };
+        trace.canonicalize();
+        trace
+    }
+
+    /// Sort into the canonical `(arrival_step, job_id)` order — the same
+    /// tie-break the service's virtual clock uses, so two traces that
+    /// differ only in the order of equal-time arrivals are identical
+    /// after canonicalization.
+    pub fn canonicalize(&mut self) {
+        self.jobs
+            .sort_by_key(|j| (j.arrival_step, j.job_id));
+        for j in &mut self.jobs {
+            j.resizes.sort_by_key(|r| r.at_step);
+        }
+    }
+
+    /// Serialize to the CSV trace format (stable field order; `#`
+    /// comment header). Round-trips through [`JobTrace::from_csv`].
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "# dhp cluster trace v1\n# job,<id>,<arrival_step>,<replicas>,<steps>,<dataset>,<gbs>,<seed>\n# resize,<job_id>,<at_step>,<delta>\n",
+        );
+        for j in &self.jobs {
+            out.push_str(&format!(
+                "job,{},{},{},{},{},{},{}\n",
+                j.job_id,
+                j.arrival_step,
+                j.replicas,
+                j.steps,
+                j.dataset.name(),
+                j.gbs,
+                j.seed
+            ));
+        }
+        for j in &self.jobs {
+            for r in &j.resizes {
+                out.push_str(&format!(
+                    "resize,{},{},{}\n",
+                    j.job_id, r.at_step, r.delta
+                ));
+            }
+        }
+        out
+    }
+
+    /// Parse the CSV trace format: `job,...` and `resize,...` records,
+    /// blank lines and `#` comments ignored. The result is
+    /// canonicalized, so record order in the file does not matter.
+    pub fn from_csv(text: &str) -> Result<JobTrace> {
+        let mut jobs: Vec<JobSpec> = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+            let ctx = || format!("trace line {}: {raw:?}", lineno + 1);
+            match fields[0] {
+                "job" => {
+                    if fields.len() != 8 {
+                        bail!("{}: expected 8 fields, got {}", ctx(), fields.len());
+                    }
+                    jobs.push(JobSpec {
+                        job_id: fields[1].parse().with_context(ctx)?,
+                        arrival_step: fields[2].parse().with_context(ctx)?,
+                        replicas: fields[3].parse().with_context(ctx)?,
+                        steps: fields[4].parse().with_context(ctx)?,
+                        dataset: DatasetKind::by_name(fields[5])
+                            .with_context(ctx)?,
+                        gbs: fields[6].parse().with_context(ctx)?,
+                        seed: fields[7].parse().with_context(ctx)?,
+                        resizes: Vec::new(),
+                    });
+                }
+                "resize" => {
+                    if fields.len() != 4 {
+                        bail!("{}: expected 4 fields, got {}", ctx(), fields.len());
+                    }
+                    let job_id: u64 = fields[1].parse().with_context(ctx)?;
+                    let ev = ResizeEvent {
+                        at_step: fields[2].parse().with_context(ctx)?,
+                        delta: fields[3].parse().with_context(ctx)?,
+                    };
+                    let job = jobs
+                        .iter_mut()
+                        .find(|j| j.job_id == job_id)
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("{}: resize before its job record", ctx())
+                        })?;
+                    job.resizes.push(ev);
+                }
+                other => bail!("{}: unknown record kind {other:?}", ctx()),
+            }
+        }
+        let mut trace = JobTrace { jobs };
+        trace.validate()?;
+        trace.canonicalize();
+        Ok(trace)
+    }
+
+    /// Structural checks: unique job ids, nonzero sizes and budgets.
+    pub fn validate(&self) -> Result<()> {
+        let mut seen = std::collections::HashSet::new();
+        for j in &self.jobs {
+            if !seen.insert(j.job_id) {
+                bail!("duplicate job_id {} in trace", j.job_id);
+            }
+            if j.replicas == 0 {
+                bail!("job {} requests 0 replicas", j.job_id);
+            }
+            if j.steps == 0 {
+                bail!("job {} has a 0-step budget", j.job_id);
+            }
+            if j.gbs == 0 {
+                bail!("job {} has gbs 0", j.job_id);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_is_byte_identical() {
+        let cfg = TraceConfig::default();
+        let a = JobTrace::synthetic(&cfg);
+        let b = JobTrace::synthetic(&cfg);
+        assert_eq!(a, b);
+        assert_eq!(a.to_csv(), b.to_csv());
+    }
+
+    #[test]
+    fn different_seed_differs() {
+        let a = JobTrace::synthetic(&TraceConfig::default());
+        let b = JobTrace::synthetic(&TraceConfig {
+            seed: 0xBEEF,
+            ..TraceConfig::default()
+        });
+        assert_ne!(a.to_csv(), b.to_csv());
+    }
+
+    #[test]
+    fn synthetic_respects_caps() {
+        let cfg = TraceConfig {
+            jobs: 64,
+            max_replicas: 3,
+            ..TraceConfig::default()
+        };
+        let t = JobTrace::synthetic(&cfg);
+        assert_eq!(t.jobs.len(), 64);
+        assert!(t.jobs.iter().all(|j| (1..=3).contains(&j.replicas)));
+        assert!(t.jobs.iter().all(|j| j.steps >= 1));
+        t.validate().unwrap();
+        // Arrivals are non-decreasing in canonical order.
+        assert!(t
+            .jobs
+            .windows(2)
+            .all(|w| w[0].arrival_step <= w[1].arrival_step));
+    }
+
+    #[test]
+    fn csv_round_trips() {
+        let t = JobTrace::synthetic(&TraceConfig {
+            jobs: 12,
+            resize_prob: 0.8,
+            ..TraceConfig::default()
+        });
+        let parsed = JobTrace::from_csv(&t.to_csv()).unwrap();
+        assert_eq!(t, parsed);
+        assert_eq!(t.to_csv(), parsed.to_csv());
+    }
+
+    #[test]
+    fn permuted_equal_time_arrivals_canonicalize_identically() {
+        let mut t = JobTrace::synthetic(&TraceConfig::default());
+        // Force a tie: give the first three jobs the same arrival step.
+        for j in t.jobs.iter_mut().take(3) {
+            j.arrival_step = 5;
+        }
+        t.canonicalize();
+        let mut permuted = t.clone();
+        permuted.jobs.reverse();
+        permuted.canonicalize();
+        assert_eq!(t, permuted);
+        assert_eq!(t.to_csv(), permuted.to_csv());
+    }
+
+    #[test]
+    fn from_csv_rejects_garbage() {
+        assert!(JobTrace::from_csv("job,1,2\n").is_err());
+        assert!(JobTrace::from_csv("frob,1,2,3,4,5,6,7\n").is_err());
+        assert!(JobTrace::from_csv("resize,9,1,1\n").is_err());
+        let dup = "job,1,0,2,4,openvid,16,7\njob,1,0,2,4,openvid,16,7\n";
+        assert!(JobTrace::from_csv(dup).is_err());
+    }
+}

@@ -1,0 +1,268 @@
+//! "Cluster day": the multi-tenant service benchmark.
+//!
+//! Replays one seeded job-arrival trace through every allocator-policy
+//! × session-scheduler combination on a shared 8-replica cluster, and
+//! additionally runs the pinned *departure scenario* — a hand-written
+//! trace where one job's departure opens capacity for a queued job,
+//! and WHERE that capacity opens differs by allocator: first-fit hands
+//! the queued job a cross-node pair while best-fit hands it a whole
+//! node, so the same job's goodput is measurably higher under
+//! best-fit. `dhp reproduce cluster_day` prints per-job SLO and
+//! cluster utilization/fragmentation tables for every cell;
+//! `benches/cluster_day.rs` gates on the same rows and emits
+//! `BENCH_cluster_day.json`.
+
+use anyhow::Result;
+
+use crate::cluster_service::{
+    run_service, AllocPolicy, ClusterReport, JobSpec, JobTrace,
+    ServiceConfig, ServiceScheduler, TraceConfig,
+};
+use crate::config::presets::by_name;
+use crate::config::{ClusterConfig, TrainStage};
+use crate::data::datasets::DatasetKind;
+use crate::report::Table;
+use crate::util::cli::Args;
+
+/// One (allocator, scheduler) cell of the comparison.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    /// Rank-placement policy the cell ran under.
+    pub alloc: AllocPolicy,
+    /// Per-job session scheduler the cell ran under.
+    pub scheduler: ServiceScheduler,
+    /// The full service report for the cell.
+    pub report: ClusterReport,
+}
+
+/// The benchmark cluster: 4 nodes × 8 NPUs at TP=2 × PP=2 — 8 model
+/// replicas, 2 per node, so allocation locality decides which fabric a
+/// job's rings and gradient sync ride.
+pub fn service_cluster() -> ClusterConfig {
+    let mut cluster = ClusterConfig::default().with_npus(32);
+    cluster.tp = 2;
+    cluster.pp = 2;
+    cluster
+}
+
+/// Service configuration for one cell.
+pub fn service_config(
+    alloc: AllocPolicy,
+    scheduler: ServiceScheduler,
+) -> ServiceConfig {
+    ServiceConfig {
+        preset: by_name("InternVL3-2B").expect("preset"),
+        stage: TrainStage::Full,
+        cluster: service_cluster(),
+        alloc_policy: alloc,
+        scheduler,
+        max_ticks: 512,
+    }
+}
+
+/// The pinned departure scenario (8 replicas, 2 per node). Jobs 0–3
+/// fill the cluster to 7/8 ranks; job 4 (2 replicas) must queue. Job 0
+/// departs after 3 steps. Under first-fit the freed rank 0 pairs with
+/// the stranded rank 7 — a cross-node grant; under best-fit job 4 gets
+/// ranks 0–1 — a whole node. Same trace, same scheduler: the grant's
+/// fabric (and with it job 4's goodput) is the allocator's doing.
+pub fn departure_trace() -> JobTrace {
+    let job = |job_id, replicas, steps| JobSpec {
+        job_id,
+        arrival_step: 0,
+        replicas,
+        steps,
+        dataset: DatasetKind::OpenVid,
+        gbs: 8,
+        seed: 0xDA1 ^ job_id,
+        resizes: Vec::new(),
+    };
+    JobTrace {
+        jobs: vec![
+            job(0, 1, 3),
+            job(1, 2, 8),
+            job(2, 2, 8),
+            job(3, 2, 8),
+            job(4, 2, 4),
+        ],
+    }
+}
+
+/// The synthetic cluster-day trace for `seed` (smaller under
+/// `--quick`).
+pub fn day_trace(seed: u64, quick: bool) -> JobTrace {
+    JobTrace::synthetic(&TraceConfig {
+        seed,
+        jobs: if quick { 6 } else { 16 },
+        arrival_rate: 0.2,
+        mean_replicas: 2,
+        max_replicas: 4,
+        mean_steps: if quick { 4 } else { 10 },
+        resize_prob: 0.3,
+    })
+}
+
+/// All four cells over the same trace.
+pub fn compute(trace: &JobTrace) -> Result<Vec<CellResult>> {
+    let mut cells = Vec::new();
+    for alloc in [AllocPolicy::FirstFit, AllocPolicy::BestFit] {
+        for scheduler in [ServiceScheduler::Dhp, ServiceScheduler::StaticCp] {
+            let report = run_service(
+                service_config(alloc, scheduler),
+                trace.clone(),
+            )?;
+            cells.push(CellResult {
+                alloc,
+                scheduler,
+                report,
+            });
+        }
+    }
+    Ok(cells)
+}
+
+/// Cross-cell comparison table.
+pub fn summary_table(title: &str, cells: &[CellResult]) -> Table {
+    let mut t = Table::new(
+        title,
+        &[
+            "allocator",
+            "scheduler",
+            "util",
+            "frag",
+            "mean wait",
+            "completed",
+            "goodput (steps/s)",
+            "digest",
+        ],
+    );
+    for c in cells {
+        t.row(vec![
+            c.alloc.name().to_string(),
+            c.scheduler.name().to_string(),
+            format!("{:.4}", c.report.mean_utilization()),
+            format!("{:.4}", c.report.mean_fragmentation()),
+            format!("{:.3}", c.report.mean_queue_wait_steps()),
+            format!("{}/{}", c.report.completed_jobs(), c.report.jobs.len()),
+            format!("{:.4}", c.report.total_goodput_steps_per_s()),
+            format!("{:016x}", c.report.digest),
+        ]);
+    }
+    t
+}
+
+/// Goodput of the queued job (id 4) in the departure scenario under
+/// `alloc` + DHP.
+pub fn queued_job_goodput(cells: &[CellResult], alloc: AllocPolicy) -> f64 {
+    cells
+        .iter()
+        .find(|c| c.alloc == alloc && c.scheduler == ServiceScheduler::Dhp)
+        .and_then(|c| c.report.jobs.iter().find(|j| j.job_id == 4))
+        .map(|j| j.goodput_steps_per_s)
+        .unwrap_or(0.0)
+}
+
+/// `dhp reproduce cluster_day`: the departure scenario plus a synthetic
+/// cluster day, all four cells each.
+pub fn run(args: &Args) -> Result<()> {
+    let quick = args.flag("quick");
+    let seed = args.u64_or("seed", 0xC1_D4B)?;
+
+    let dep = compute(&departure_trace())?;
+    for c in &dep {
+        c.report.job_table().print();
+        c.report.cluster_table().print();
+    }
+    summary_table("Departure scenario — allocator × scheduler", &dep).print();
+    let ff = queued_job_goodput(&dep, AllocPolicy::FirstFit);
+    let bf = queued_job_goodput(&dep, AllocPolicy::BestFit);
+    println!(
+        "queued job 4 goodput: first-fit {:.4} vs best-fit {:.4} steps/s ({:+.1}%)",
+        ff,
+        bf,
+        (bf / ff.max(1e-12) - 1.0) * 100.0
+    );
+
+    let day = compute(&day_trace(seed, quick))?;
+    summary_table(
+        &format!(
+            "Cluster day (seed {seed:#x}, {} jobs) — allocator × scheduler",
+            day[0].report.jobs.len()
+        ),
+        &day,
+    )
+    .print();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn departure_raises_queued_goodput_under_best_fit() {
+        // THE acceptance scenario: job 4 queues in every cell; after job
+        // 0 departs, best-fit re-admits it onto a whole node while
+        // first-fit scatters it across nodes. Intra-node gradient sync
+        // and rings are strictly faster, so best-fit goodput must be
+        // measurably (>5%) higher on this pinned trace.
+        let cells = compute(&departure_trace()).unwrap();
+        for c in &cells {
+            let j4 = c.report.jobs.iter().find(|j| j.job_id == 4).unwrap();
+            assert!(
+                j4.queue_wait_steps > 0,
+                "{}/{}: job 4 never queued",
+                c.alloc.name(),
+                c.scheduler.name()
+            );
+            assert!(j4.completed_step.is_some());
+        }
+        let ff = queued_job_goodput(&cells, AllocPolicy::FirstFit);
+        let bf = queued_job_goodput(&cells, AllocPolicy::BestFit);
+        assert!(ff > 0.0 && bf > 0.0);
+        assert!(
+            bf > ff * 1.05,
+            "best-fit {bf} must beat first-fit {ff} by >5% for the queued job"
+        );
+    }
+
+    #[test]
+    fn departure_scenario_runs_three_plus_concurrent_sessions() {
+        let cells = compute(&departure_trace()).unwrap();
+        for c in &cells {
+            let peak = c.report.samples.iter().map(|s| s.running).max();
+            assert!(
+                peak >= Some(4),
+                "{}/{}: peak concurrency {peak:?} < 4",
+                c.alloc.name(),
+                c.scheduler.name()
+            );
+        }
+    }
+
+    #[test]
+    fn cells_replay_bit_identically() {
+        let trace = day_trace(7, true);
+        let a = compute(&trace).unwrap();
+        let b = compute(&trace).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.report.digest, y.report.digest);
+            assert_eq!(x.report.render(), y.report.render());
+        }
+    }
+
+    #[test]
+    fn synthetic_day_makes_progress_in_every_cell() {
+        let cells = compute(&day_trace(7, true)).unwrap();
+        for c in &cells {
+            assert!(
+                c.report.completed_jobs() > 0,
+                "{}/{}: no job completed",
+                c.alloc.name(),
+                c.scheduler.name()
+            );
+            assert!(c.report.mean_utilization() > 0.0);
+        }
+    }
+}

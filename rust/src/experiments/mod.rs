@@ -7,6 +7,7 @@
 //! roughly what factor, where crossovers fall).
 
 pub mod case_study;
+pub mod cluster_day;
 pub mod distributions;
 pub mod end_to_end;
 pub mod estimator;
@@ -49,15 +50,16 @@ pub fn reproduce(args: &Args) -> Result<()> {
             "tab3" => estimator::run(args),
             "tab4" => case_study::run(args),
             "resilience" => resilience::run(args),
+            "cluster_day" => cluster_day::run(args),
             other => bail!(
-                "unknown experiment {other:?}: expected fig1|fig2|fig4|fig5|fig6|tab1|tab2|tab3|tab4|overhead|resilience|all"
+                "unknown experiment {other:?}: expected fig1|fig2|fig4|fig5|fig6|tab1|tab2|tab3|tab4|overhead|resilience|cluster_day|all"
             ),
         }
     };
     if which == "all" {
         for name in [
             "fig1", "fig2", "tab3", "tab4", "tab1", "tab2", "fig5", "fig4",
-            "fig6", "resilience",
+            "fig6", "resilience", "cluster_day",
         ] {
             println!("\n#### reproduce {name} ####");
             run(name, args)?;

@@ -38,6 +38,7 @@
 
 pub mod baselines;
 pub mod cluster;
+pub mod cluster_service;
 pub mod config;
 pub mod cost;
 pub mod data;

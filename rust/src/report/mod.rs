@@ -73,7 +73,7 @@ USAGE:
 
 COMMANDS:
     reproduce <exp>   Regenerate a paper artifact: fig1 fig2 fig4 fig5 fig6
-                      tab1 tab2 tab3 tab4 resilience, or `all`
+                      tab1 tab2 tab3 tab4 resilience cluster_day, or `all`
     models            Print the Table 5 model presets
     schedule          Run the scheduler once on a sampled batch and print
                       the plan (options: --dataset --npus --gbs --seed)

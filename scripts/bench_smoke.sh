@@ -72,6 +72,16 @@ cargo bench --bench solver_micro -- --quick
 #      path's whole-step replay.
 cargo bench --bench resilience -- --quick
 
+# Cluster-day gate (ISSUE-10): replays a seeded multi-tenant job trace
+# through every allocator-policy × session-scheduler cell on ONE shared
+# mesh. The bench exits non-zero on its own if either invariant breaks:
+#   1. every cell replays digest- and byte-identically (the shared
+#      virtual clock's (time, job_id) discipline);
+#   2. on the pinned departure trace, the re-admitted queued job's
+#      goodput under best-fit beats first-fit by >5% (whole-node vs
+#      cross-node grant).
+cargo bench --bench cluster_day -- --quick
+
 echo
 echo "=== BENCH_solver_micro.json ==="
 cat BENCH_solver_micro.json
@@ -79,6 +89,10 @@ cat BENCH_solver_micro.json
 echo
 echo "=== BENCH_resilience.json ==="
 cat BENCH_resilience.json
+
+echo
+echo "=== BENCH_cluster_day.json ==="
+cat BENCH_cluster_day.json
 
 # ISSUE-8 record-shape gate: the resilience record must carry the
 # event-kernel cells (within_step=true rows with a lost_work_s field)
@@ -107,6 +121,56 @@ if any("lost_work_s" not in c for c in cells):
     failed = True
 if not failed:
     print(f"[bench-resilience] OK: {len(ws)}/{len(cells)} event-kernel cells, all gates green")
+sys.exit(1 if failed else 0)
+PYEOF
+
+# ISSUE-10 record-shape gate: the cluster-day record must carry both
+# allocator policies with utilization and SLO cells (queue wait,
+# completions, goodput) for every policy × scheduler cell, plus both
+# gate verdicts — a record without them means the bench silently
+# dropped a cell or stopped measuring the SLOs.
+echo
+python3 - BENCH_cluster_day.json <<'PYEOF'
+import json
+import sys
+
+with open(sys.argv[1]) as f:
+    doc = json.load(f)
+
+failed = False
+for flag in ("determinism_ok", "departure_scenario_ok"):
+    if doc.get(flag) is not True:
+        print(f"[bench-cluster-day] FAIL: gate flag {flag!r} missing or false")
+        failed = True
+SLO_FIELDS = (
+    "mean_utilization",
+    "mean_fragmentation",
+    "mean_queue_wait_steps",
+    "completed_jobs",
+    "total_goodput_steps_per_s",
+)
+for table in ("departure_cells", "day_cells"):
+    cells = doc.get(table, [])
+    policies = {c.get("alloc_policy") for c in cells}
+    if not {"first-fit", "best-fit"} <= policies:
+        print(f"[bench-cluster-day] FAIL: {table} must cover both allocator "
+              f"policies, got {sorted(p for p in policies if p)}")
+        failed = True
+    for c in cells:
+        missing = [k for k in SLO_FIELDS if k not in c]
+        if missing:
+            print(f"[bench-cluster-day] FAIL: {table} cell "
+                  f"{c.get('alloc_policy')}/{c.get('scheduler')} missing {missing}")
+            failed = True
+ff = doc.get("queued_job_goodput_first_fit", 0)
+bf = doc.get("queued_job_goodput_best_fit", 0)
+if not (isinstance(ff, (int, float)) and isinstance(bf, (int, float)) and bf > ff):
+    print(f"[bench-cluster-day] FAIL: queued-job goodput best-fit {bf!r} "
+          f"must exceed first-fit {ff!r}")
+    failed = True
+if not failed:
+    n = len(doc.get("departure_cells", [])) + len(doc.get("day_cells", []))
+    print(f"[bench-cluster-day] OK: {n} cells, both policies, SLO fields present, gates green")
 sys.exit(1 if failed else 0)
 PYEOF
 
